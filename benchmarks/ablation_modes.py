@@ -1,0 +1,73 @@
+"""Planner ablation (paper Fig. 9 argument): per-layer HM-NoC mode selection
+vs forcing a single fixed mode for all weights — the quantitative case for
+per-layer flexibility, evaluated with the planner's own roofline estimator
+(no compilation; analytic, like the paper's Fig. 14 model).
+
+A fixed-broadcast NoC is Eyeriss v1; the planner is Eyeriss v2.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import SHAPES, get_config
+from repro.core import planner
+from repro.core.hmmesh import Mode
+from repro.core.reuse import model_gemms
+
+MESH = planner.MeshDesc(pod=1, data=16, model=16)
+ARCHS = ("gemma2-2b", "qwen2.5-3b", "mixtral-8x7b", "mamba2-130m",
+         "llama4-maverick-400b-a17b")
+FORCED = (Mode.BROADCAST, Mode.GROUPED_MC, Mode.UNICAST)
+
+
+def _model_time(cfg, shape, wm=None) -> float:
+    training = shape.kind == "train"
+    decode = shape.kind == "decode"
+    tokens = shape.global_batch * (1 if decode else shape.seq_len)
+    total = 0.0
+    for g in model_gemms(cfg, max(tokens, 1), decode=decode):
+        if wm is None:
+            total += planner.plan_layer(g, MESH, training).est_time
+        else:
+            best = None
+            for im in (Mode.BROADCAST, Mode.INTERLEAVED_MC):
+                res = planner._candidate_time(g, wm, im, MESH, training)
+                if res is not None and (best is None or res[0] < best):
+                    best = res[0]
+            # infeasible forced mode -> fall back to broadcast/broadcast
+            if best is None:
+                best = planner._candidate_time(
+                    g, Mode.BROADCAST, Mode.BROADCAST, MESH, training)[0]
+            total += best
+    return total
+
+
+def run() -> Dict:
+    out: Dict = {}
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape_name in ("train_4k", "decode_32k"):
+            shape = SHAPES[shape_name]
+            planned = _model_time(cfg, shape)
+            rows = {"planner": 1.0}
+            for wm in FORCED:
+                rows[wm.value] = _model_time(cfg, shape, wm) / planned
+            out[f"{arch}:{shape_name}"] = rows
+    return out
+
+
+def main() -> Dict:
+    res = run()
+    print("=== Planner ablation: est. step time, normalized to the planner "
+          "(>1 = slower) ===")
+    print(f"{'cell':40s} {'planner':>8s} {'bcast':>8s} {'grouped':>8s} "
+          f"{'unicast':>8s}")
+    for cell, rows in res.items():
+        print(f"{cell:40s} {rows['planner']:8.2f} "
+              f"{rows['broadcast']:8.2f} {rows['grouped_multicast']:8.2f} "
+              f"{rows['unicast']:8.2f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

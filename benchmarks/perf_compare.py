@@ -1,0 +1,60 @@
+"""§Perf before/after: paper-faithful planner baseline (results/dryrun) vs
+the beyond-paper optimized build (results/dryrun_opt)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict
+
+BASE = os.environ.get("DRYRUN_BASE", "results/dryrun")
+OPT = os.environ.get("DRYRUN_OPT", "results/dryrun_opt")
+
+
+def _load(d):
+    out = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def main() -> Dict:
+    base, opt = _load(BASE), _load(OPT)
+    if not opt:
+        print(f"no optimized records in {OPT} — run "
+              "scripts/run_dryrun_all.sh results/dryrun_opt")
+        return {}
+    rows = []
+    print("=== §Perf: baseline -> optimized (16x16; roofline fraction & "
+          "dominant term) ===")
+    print(f"{'cell':42s} {'roofl% b->a':>16s} {'t_dom b->a (s)':>20s} "
+          f"{'HBM GB b->a':>14s}")
+    for key in sorted(base):
+        if key[2] != "16x16" or key not in opt:
+            continue
+        b, a = base[key], opt[key]
+        if b["status"] != "ok" or a["status"] != "ok":
+            continue
+        tb = max(b["t_compute_s"], b["t_memory_s"], b["t_collective_s"])
+        ta = max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"])
+        rows.append({"cell": f"{key[0]}:{key[1]}",
+                     "roofline_before": b["roofline_fraction"],
+                     "roofline_after": a["roofline_fraction"],
+                     "t_before": tb, "t_after": ta,
+                     "speedup": tb / max(ta, 1e-12)})
+        print(f"{key[0] + ':' + key[1]:42s} "
+              f"{b['roofline_fraction'] * 100:6.2f}->"
+              f"{a['roofline_fraction'] * 100:5.2f} "
+              f"{tb:9.2e}->{ta:9.2e} "
+              f"{b['hbm_per_chip_gb']:6.1f}->{a['hbm_per_chip_gb']:5.1f}")
+    if rows:
+        import statistics
+        sp = [r["speedup"] for r in rows]
+        print(f"\nmedian bound-term speedup {statistics.median(sp):.2f}x, "
+              f"max {max(sp):.2f}x over {len(rows)} cells")
+    return {"cells": rows}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""§Roofline table: aggregate the dry-run JSONs (results/dryrun) into the
+per-(arch × shape × mesh) three-term roofline report (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def table(recs: List[Dict], mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] != "ok":
+            rows.append({"cell": f"{r['arch']}:{r['shape']}",
+                         "status": r["status"],
+                         "note": r.get("reason", r.get("error", ""))[:60]})
+            continue
+        rows.append({
+            "cell": f"{r['arch']}:{r['shape']}",
+            "status": "ok",
+            "t_compute": r["t_compute_s"],
+            "t_memory": r["t_memory_s"],
+            "t_collective": r["t_collective_s"],
+            "bound": r["bound"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "roofline_frac": r["roofline_fraction"],
+            "hbm_gb": r["hbm_per_chip_gb"],
+        })
+    return rows
+
+
+def main() -> Dict:
+    recs = load()
+    if not recs:
+        print(f"no dry-run records in {DRYRUN_DIR} — run "
+              "scripts/run_dryrun_all.sh first")
+        return {}
+    out = {}
+    for mesh in ("16x16", "2x16x16"):
+        rows = table(recs, mesh)
+        out[mesh] = rows
+        print(f"=== §Roofline ({mesh}, {sum(r['status'] == 'ok' for r in rows)}"
+              f"/{len(rows)} ok) ===")
+        print(f"{'cell':42s} {'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} "
+              f"{'bound':>10s} {'useful':>7s} {'roofl%':>7s}")
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"{r['cell']:42s} {r['status']}: {r['note']}")
+                continue
+            print(f"{r['cell']:42s} {r['t_compute']:9.2e} {r['t_memory']:9.2e} "
+                  f"{r['t_collective']:9.2e} {r['bound']:>10s} "
+                  f"{r['useful_ratio']:7.3f} {r['roofline_frac'] * 100:6.2f}%")
+    return out
+
+
+if __name__ == "__main__":
+    main()

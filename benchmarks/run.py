@@ -1,0 +1,43 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import (ablation_modes, perf_compare, roofline, scaling,
+                        spad_fit, sparse_decode, throughput, variants)
+
+
+def main():
+    os.makedirs("results/bench", exist_ok=True)
+    out = {}
+    print("\n" + "=" * 78)
+    out["scaling_fig14"] = scaling.main()
+    print("\n" + "=" * 78)
+    out["variants_fig19_21"] = variants.main()
+    print("\n" + "=" * 78)
+    out["throughput_tableVI"] = throughput.main()
+    print("\n" + "=" * 78)
+    out["spad_fit_tableIII"] = spad_fit.main()
+    print("\n" + "=" * 78)
+    out["ablation_modes"] = ablation_modes.main()
+    print("\n" + "=" * 78)
+    out["roofline"] = roofline.main()
+    print("\n" + "=" * 78)
+    out["perf_compare"] = perf_compare.main()
+    print("\n" + "=" * 78)
+    out["sparse_decode"] = sparse_decode.main()
+    with open("results/bench/summary.json", "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print("\nwrote results/bench/summary.json")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Fig. 14 reproduction: strong scaling of Eyeriss v2 (HM-NoC) vs v1
+(broadcast NoC) at 256 / 1024 / 16384 PEs, batch 1, via the Eyexam model.
+
+Paper claims: v2 scales linearly 256→1024 and reaches >85% of linear at
+16384 PEs on AlexNet/GoogLeNet/MobileNet; v1 barely improves (FC layers in
+AlexNet and DW layers in MobileNet are NoC-bandwidth-bound).
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict
+
+from benchmarks.workloads import NETWORKS
+from repro.core import eyexam
+
+SCALES = (256, 1024, 16384)
+
+
+def _acc(n_pes: int, noc: str) -> eyexam.AcceleratorModel:
+    side = int(math.sqrt(n_pes))
+    return eyexam.AcceleratorModel(
+        n_pes=n_pes, array_h=side, array_w=side, noc=noc,
+        cluster_size=16)           # v2 scales with 4×4-PE clusters (§III-D)
+
+
+def run(batch: int = 1) -> Dict:
+    out: Dict = {"scales": list(SCALES), "networks": {}}
+    for net, fn in NETWORKS.items():
+        layers = fn(batch)
+        rows = {}
+        for noc in ("hmnoc", "broadcast"):
+            perf = [eyexam.network_performance(layers, _acc(n, noc))
+                    for n in SCALES]
+            rows[noc] = [p / perf[0] for p in perf]   # normalized to 256 PEs
+        linear = [n / SCALES[0] for n in SCALES]
+        rows["v2_frac_of_linear_at_16384"] = rows["hmnoc"][-1] / linear[-1]
+        rows["v1_frac_of_linear_at_16384"] = rows["broadcast"][-1] / linear[-1]
+        out["networks"][net] = rows
+    return out
+
+
+def main() -> Dict:
+    res = run()
+    print("=== Fig.14: strong scaling, normalized performance "
+          "(256 -> 1024 -> 16384 PEs) ===")
+    for net, rows in res["networks"].items():
+        v2 = " ".join(f"{x:7.1f}" for x in rows["hmnoc"])
+        v1 = " ".join(f"{x:7.1f}" for x in rows["broadcast"])
+        print(f"{net:10s} v2(HM-NoC) {v2}   "
+              f"[{rows['v2_frac_of_linear_at_16384'] * 100:5.1f}% of linear]")
+        print(f"{'':10s} v1(bcast)  {v1}   "
+              f"[{rows['v1_frac_of_linear_at_16384'] * 100:5.1f}% of linear]")
+    return res
+
+
+if __name__ == "__main__":
+    main()

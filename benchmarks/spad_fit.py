@@ -1,0 +1,68 @@
+"""Table III reproduction: sparse-AlexNet weights packed into the per-PE SPad,
+plus the TPU analogue (BCSC tile fit in VMEM via core.dataflow).
+
+Paper: nominal weights per PE exceed the 192-entry SPad in most layers, but
+the compressed (non-zero) count fits — mapping by nnz instead of nominal also
+reduces workload imbalance (§IV-A).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.workloads import alexnet
+from repro.core import dataflow
+
+SPAD_CAPACITY = 192      # weights per PE (96×24b data SPad @ 12b/weight)
+
+# paper Table III: (M0, C0, S) per layer
+TABLE_III = {
+    "CONV1": (12, 1, 11), "CONV2": (32, 2, 5), "CONV3": (32, 5, 3),
+    "CONV4": (24, 4, 3), "CONV5": (32, 4, 3), "FC6": (32, 2, 6),
+    "FC7": (32, 15, 1), "FC8": (32, 15, 1),
+}
+PAPER_COMPRESSED = {"CONV1": 64, "CONV2": 86, "CONV3": 126, "CONV4": 100,
+                    "CONV5": 174, "FC6": 92, "FC7": 84, "FC8": 170}
+
+
+def run() -> Dict:
+    layers = {l.name: l for l in alexnet(sparse=True)}
+    out: Dict = {}
+    for name, (m0, c0, s) in TABLE_III.items():
+        nominal = m0 * c0 * s
+        sp = layers[name].sparsity_w
+        compressed = int(round(nominal * (1 - sp)))
+        out[name] = {
+            "M0": m0, "C0": c0, "S": s,
+            "nominal": nominal,
+            "compressed_model": compressed,
+            "compressed_paper": PAPER_COMPRESSED[name],
+            "nominal_fits": nominal <= SPAD_CAPACITY,
+            "compressed_fits": compressed <= SPAD_CAPACITY,
+        }
+    # TPU analogue: a d_model x d_ff matmul tile must fit VMEM
+    t = dataflow.rs_matmul_tiling(4096, 4096, 14336)
+    out["_vmem_analogue"] = dataflow.spad_fit_report(
+        4096 * 14336, sparsity=0.6, tiling=t)
+    return out
+
+
+def main() -> Dict:
+    res = run()
+    print("=== Table III: sparse-AlexNet weights per PE vs SPad (192) ===")
+    print(f"{'layer':7s} {'nominal':>8s} {'comp(model)':>12s} "
+          f"{'comp(paper)':>12s} {'fits?':>6s}")
+    for name, r in res.items():
+        if name.startswith("_"):
+            continue
+        print(f"{name:7s} {r['nominal']:8d} {r['compressed_model']:12d} "
+              f"{r['compressed_paper']:12d} "
+              f"{'yes' if r['compressed_fits'] else 'NO':>6s}")
+    v = res["_vmem_analogue"]
+    print(f"VMEM analogue (4096x14336 @ 60% sparse): tile "
+          f"{v['resident_tile_bytes'] / 1024:.0f} KiB resident, "
+          f"fits={v['fits_vmem']}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Table VI reproduction: inference/sec at batch 1, 200 MHz, 192 PEs ×2 MACs.
+
+Energy columns are out of scope (no power model on CPU — DESIGN.md §6);
+throughput and the dense→sparse / AlexNet→MobileNet ratios are the
+reproducible claims:
+    paper: AlexNet 102.1 → sparse 278.7 inf/s; MobileNet 1282.1 → 1470.6;
+           MobileNet/AlexNet dense ratio 12.6× ~ the 14.7× MAC reduction.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.variants import N_PES, _acc, _cycles
+from benchmarks.workloads import alexnet, mobilenet, total_macs
+
+CLOCK_HZ = 200e6
+
+PAPER = {
+    "alexnet": 102.1, "sparse alexnet": 278.7,
+    "mobilenet": 1282.1, "sparse mobilenet": 1470.6,
+}
+
+
+def run(batch: int = 1) -> Dict:
+    acc = _acc("hmnoc", True)      # Eyeriss v2
+    nets = {
+        "alexnet": (alexnet(batch, False), False),
+        "sparse alexnet": (alexnet(batch, True), True),
+        "mobilenet": (mobilenet(batch, False), False),
+        "sparse mobilenet": (mobilenet(batch, True), True),
+    }
+    out: Dict = {}
+    for name, (layers, sparse) in nets.items():
+        cycles = _cycles(layers, acc, sparse_skip=True)
+        inf_s = CLOCK_HZ / max(cycles, 1.0) * batch
+        out[name] = {
+            "nominal_macs": total_macs(layers),
+            "cycles": cycles,
+            "inference_per_s": inf_s,
+            "paper_inference_per_s": PAPER[name],
+        }
+    out["_ratios"] = {
+        "mobilenet_over_alexnet":
+            out["mobilenet"]["inference_per_s"] /
+            out["alexnet"]["inference_per_s"],
+        "paper_mobilenet_over_alexnet": PAPER["mobilenet"] / PAPER["alexnet"],
+        "sparse_gain_alexnet":
+            out["sparse alexnet"]["inference_per_s"] /
+            out["alexnet"]["inference_per_s"],
+        "sparse_gain_mobilenet":
+            out["sparse mobilenet"]["inference_per_s"] /
+            out["mobilenet"]["inference_per_s"],
+    }
+    return out
+
+
+def main() -> Dict:
+    res = run()
+    print("=== Table VI: Eyeriss v2 throughput (batch 1, 200 MHz) ===")
+    print(f"{'DNN':18s} {'MACs':>10s} {'inf/s (model)':>14s} "
+          f"{'inf/s (paper)':>14s}")
+    for name, r in res.items():
+        if name.startswith("_"):
+            continue
+        print(f"{name:18s} {r['nominal_macs'] / 1e6:9.1f}M "
+              f"{r['inference_per_s']:14.1f} "
+              f"{r['paper_inference_per_s']:14.1f}")
+    r = res["_ratios"]
+    print(f"MobileNet/AlexNet: model {r['mobilenet_over_alexnet']:.1f}x, "
+          f"paper {r['paper_mobilenet_over_alexnet']:.1f}x")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Fig. 19/21 reproduction: Eyeriss v1 vs v1.5 vs v2 speedups.
+
+    v1   — broadcast NoC, dense PEs           (192 PEs, 1 MAC/PE)
+    v1.5 — hierarchical-mesh NoC, dense PEs   (192 PEs, 1 MAC/PE)
+    v2   — HM-NoC + sparse PEs + SIMD         (192 PEs, 2 MACs/PE, zero-skip)
+
+Paper headline ratios (batch 1): sparse AlexNet on v2 = 42.5× over v1;
+sparse MobileNet on v2 = 12.6× over v1; HM-NoC alone gives ~5.6× on MobileNet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List
+
+from benchmarks.workloads import NETWORKS, alexnet, mobilenet
+from repro.core import eyexam
+from repro.core.reuse import LayerShape
+
+N_PES = 192
+
+
+def _acc(noc: str, simd: bool) -> eyexam.AcceleratorModel:
+    return eyexam.AcceleratorModel(
+        n_pes=N_PES, array_h=12, array_w=16, noc=noc, cluster_size=12,
+        macs_per_pe=2 if simd else 1)
+
+
+def _cycles(layers: List[LayerShape], acc, sparse_skip: bool) -> float:
+    total = 0.0
+    for l in layers:
+        bound = eyexam.seven_steps(l, acc)[-1]["bound"]
+        macs = l.effective_macs if sparse_skip else l.macs
+        # DW layers can't use SIMD (1 in/out channel — paper §V-A2)
+        if sparse_skip and acc.macs_per_pe > 1 and l.G > 1 and l.M == 1:
+            bound = bound / acc.macs_per_pe
+        total += macs / max(bound, 1e-9)
+    return total
+
+
+def run(batch: int = 1) -> Dict:
+    out: Dict = {}
+    for net_name, fn in (("alexnet", alexnet), ("mobilenet", mobilenet)):
+        dense = fn(batch, sparse=False)
+        sparse = fn(batch, sparse=True)
+        c_v1 = _cycles(dense, _acc("broadcast", False), False)
+        c_v15 = _cycles(dense, _acc("hmnoc", False), False)
+        c_v2 = _cycles(dense, _acc("hmnoc", True), True)
+        c_v2s = _cycles(sparse, _acc("hmnoc", True), True)
+        out[net_name] = {
+            "v1": 1.0,
+            "v1.5": c_v1 / c_v15,
+            "v2": c_v1 / c_v2,
+            "v2_sparse": c_v1 / c_v2s,
+            "cycles": {"v1": c_v1, "v1.5": c_v15, "v2": c_v2,
+                       "v2_sparse": c_v2s},
+        }
+    return out
+
+
+PAPER = {"alexnet": {"v2_sparse": 42.5}, "mobilenet": {"v2_sparse": 12.6}}
+
+
+def main() -> Dict:
+    res = run()
+    print("=== Fig.19/21: speedup over Eyeriss v1 (batch 1) ===")
+    print(f"{'net':10s} {'v1':>6s} {'v1.5':>7s} {'v2':>7s} "
+          f"{'v2+sparse':>10s} {'paper v2+sparse':>16s}")
+    for net, r in res.items():
+        print(f"{net:10s} {r['v1']:6.1f} {r['v1.5']:7.1f} {r['v2']:7.1f} "
+              f"{r['v2_sparse']:10.1f} {PAPER[net]['v2_sparse']:16.1f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

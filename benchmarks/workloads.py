@@ -1,0 +1,99 @@
+"""DNN workloads the paper benchmarks with (layer shapes as Table-I dims).
+
+AlexNet and MobileNet (width 0.5, input 128) follow the paper's benchmarking
+setup (§V); GoogLeNet appears in the scalability study (Fig. 14). Sparsity
+levels for the "sparse" variants follow the energy-aware-pruning results the
+paper cites ([14]): CONV 40–75%, FC ~90% weight sparsity; ReLU-induced iact
+sparsity grows with depth (Fig. 2 discussion).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.core.reuse import LayerShape, conv, gemm
+
+
+def _sp(layer: LayerShape, w: float, a: float) -> LayerShape:
+    return dataclasses.replace(layer, sparsity_w=w, sparsity_a=a)
+
+
+def alexnet(batch: int = 1, sparse: bool = False) -> List[LayerShape]:
+    ls = [
+        conv("CONV1", batch, 3, 96, 227, 227, 11, 11, u=4),
+        conv("CONV2", batch, 48, 256, 31, 31, 5, 5, groups=2),
+        conv("CONV3", batch, 256, 384, 15, 15, 3, 3),
+        conv("CONV4", batch, 192, 384, 15, 15, 3, 3, groups=2),
+        conv("CONV5", batch, 192, 256, 15, 15, 3, 3, groups=2),
+        gemm("FC6", batch, 9216, 4096),
+        gemm("FC7", batch, 4096, 4096),
+        gemm("FC8", batch, 4096, 1000),
+    ]
+    if sparse:
+        w = [0.16, 0.62, 0.65, 0.63, 0.63, 0.91, 0.91, 0.75]
+        a = [0.0, 0.45, 0.60, 0.65, 0.65, 0.70, 0.75, 0.75]
+        ls = [_sp(l, wi, ai) for l, wi, ai in zip(ls, w, a)]
+    return ls
+
+
+def mobilenet(batch: int = 1, sparse: bool = False,
+              width: float = 0.5, res: int = 128) -> List[LayerShape]:
+    """MobileNet v1 (paper benchmarks width 0.5 @ 128)."""
+    def ch(c):
+        return max(int(c * width), 8)
+
+    ls = [conv("CONV1", batch, 3, ch(32), res, res, 3, 3, u=2)]
+    spatial = res // 2
+    cfgs = [  # (in, out, stride) for the 13 dw/pw pairs of v1
+        (32, 64, 1), (64, 128, 2), (128, 128, 1), (128, 256, 2),
+        (256, 256, 1), (256, 512, 2), (512, 512, 1), (512, 512, 1),
+        (512, 512, 1), (512, 512, 1), (512, 512, 1), (512, 1024, 2),
+        (1024, 1024, 1),
+    ]
+    for i, (cin, cout, s) in enumerate(cfgs, start=2):
+        ls.append(conv(f"CONV{i}_DW", batch, 1, 1, spatial + 2, spatial + 2,
+                       3, 3, u=s, groups=ch(cin)))
+        spatial //= s
+        ls.append(conv(f"CONV{i}_PW", batch, ch(cin), ch(cout),
+                       spatial, spatial, 1, 1))
+    ls.append(gemm("FC", batch, ch(1024), 1000))
+    if sparse:
+        out = []
+        for l in ls:
+            if "DW" in l.name:                 # depth-wise barely prunable
+                out.append(_sp(l, 0.10, 0.40))
+            elif l.name.startswith("FC"):
+                out.append(_sp(l, 0.75, 0.60))
+            elif l.name == "CONV1":
+                out.append(_sp(l, 0.0, 0.0))
+            else:
+                out.append(_sp(l, 0.35, 0.50))
+        ls = out
+    return ls
+
+
+def googlenet(batch: int = 1) -> List[LayerShape]:
+    """Representative GoogLeNet layers (incl. the incp3a-red5x5 from Fig. 2)."""
+    return [
+        conv("CONV1", batch, 3, 64, 227, 227, 7, 7, u=2),
+        conv("CONV2-red", batch, 64, 64, 56, 56, 1, 1),
+        conv("CONV2", batch, 64, 192, 56, 56, 3, 3),
+        conv("incp3a-red5x5", batch, 192, 16, 28, 28, 1, 1),
+        conv("incp3a-5x5", batch, 16, 32, 28, 28, 5, 5),
+        conv("incp3a-1x1", batch, 192, 64, 28, 28, 1, 1),
+        conv("incp3a-3x3", batch, 96, 128, 28, 28, 3, 3),
+        conv("incp4a-3x3", batch, 96, 208, 14, 14, 3, 3),
+        conv("incp5b-1x1", batch, 832, 384, 7, 7, 1, 1),
+        gemm("FC", batch, 1024, 1000),
+    ]
+
+
+NETWORKS = {
+    "alexnet": alexnet,
+    "mobilenet": mobilenet,
+    "googlenet": googlenet,
+}
+
+
+def total_macs(layers) -> int:
+    return sum(l.macs for l in layers)

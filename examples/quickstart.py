@@ -1,0 +1,52 @@
+"""Quickstart: the public API in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a reduced gemma2-family model, plans its sharding with the HM-mesh
+planner (the paper's per-layer NoC configuration), trains a few steps, and
+greedily decodes a few tokens.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.core import planner
+from repro.data import pipeline as data_lib
+from repro.launch.cell import mesh_desc
+from repro.launch.mesh import make_local_mesh
+from repro.models import transformer as tfm
+from repro.serve.engine import DecodeEngine, Request
+from repro.train import loop as train_loop, optimizer as opt_lib
+
+
+def main():
+    # 1. pick an architecture (any of the 10 assigned ids; -reduced = CPU-size)
+    cfg = get_config("gemma2-2b-reduced")
+    print(f"arch={cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+          f"params={cfg.param_count():,}")
+
+    # 2. the planner decides the per-layer NoC/sharding modes (paper Fig. 9)
+    mesh = make_local_mesh()
+    plan = planner.plan_model(cfg, SHAPES["train_4k"], mesh_desc(mesh))
+    print("planner:", plan.describe().splitlines()[0])
+
+    # 3. train a few steps on synthetic data
+    params, opt_state = train_loop.init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(train_loop.make_train_step(
+        cfg, opt_lib.OptimizerConfig(peak_lr=1e-3, warmup_steps=2,
+                                     total_steps=20)))
+    for i in range(8):
+        batch = {k: jnp.asarray(v) for k, v in data_lib.batch_for_arch(
+            cfg, seq_len=64, global_batch=4, step=i).items()}
+        params, opt_state, metrics = step(params, opt_state, batch)
+        if i % 2 == 0:
+            print(f"step {i}: loss={float(metrics['loss']):.3f}")
+
+    # 4. serve greedily from the trained weights
+    eng = DecodeEngine(cfg, params, slots=2, cache_len=48, eos_id=-1)
+    done = eng.run([Request(0, [5, 6, 7], max_new=8)])
+    print("decoded:", done[0].out)
+
+
+if __name__ == "__main__":
+    main()

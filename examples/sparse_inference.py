@@ -1,0 +1,60 @@
+"""Sparse processing demo (paper §IV): prune a model's MLP weights, encode
+them block-CSC, and run the sparse Pallas kernel — zero blocks are skipped
+entirely, the TPU-native analogue of the PE's cycle skipping.
+
+    PYTHONPATH=src python examples/sparse_inference.py --sparsity 0.75
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import sparsity as sp
+from repro.kernels import bcsc_matmul, ops, ref
+from repro.models import transformer as tfm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sparsity", type=float, default=0.75)
+    ap.add_argument("--block", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config("qwen2.5-3b-reduced")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+
+    # take one MLP up-projection and block-prune it (structured so the BCSC
+    # skip translates to real MXU-tile savings)
+    w = params["blocks"]["slot0"]["mlp"]["wg"][0]     # (d, ff)
+    bk = bn = args.block
+    w_pruned = sp.block_magnitude_prune(w, args.sparsity, bk, bn)
+    m = sp.bcsc_encode(np.asarray(w_pruned), bk, bn)
+    csc = sp.csc_encode((np.asarray(w_pruned) != 0).astype(np.int64))
+
+    nb_total = (w.shape[0] // bk) * (w.shape[1] // bn)
+    print(f"weight {w.shape}: {args.sparsity:.0%} block-pruned")
+    print(f"  BCSC: {m.nnzb}/{nb_total} blocks kept "
+          f"(skip ratio {1 - m.density:.0%})")
+    quantized = (np.asarray(w_pruned) * 100).astype(np.int64)  # int8-ish view
+    print(f"  scalar-CSC compression ratio: "
+          f"{sp.csc_encode(quantized).compression_ratio():.2f}x")
+
+    # run the sparse kernel vs the dense oracle
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (32, w.shape[0])), jnp.float32)
+    y_sparse = ops.bcsc_matmul(x, m)
+    y_dense = ref.matmul_ref(x, w_pruned)
+    err = float(jnp.max(jnp.abs(y_sparse - y_dense)))
+    print(f"  sparse-kernel max|err| vs dense oracle: {err:.2e}")
+
+    # grid-step accounting: the §IV claim — work scales with nnzb
+    dense_steps = nb_total
+    print(f"  kernel grid steps: {m.nnzb} sparse vs {dense_steps} dense "
+          f"({dense_steps / max(m.nnzb, 1):.1f}x fewer)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Dev harness: run reduced-config loss/prefill/decode for every arch on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import decoding, transformer as tfm
+
+
+def make_batch(rng, cfg, B, S):
+    ks = jax.random.split(rng, 4)
+    S_text = S - cfg.num_patches if cfg.frontend == "vision" else S
+    if cfg.num_codebooks > 1:
+        toks = jax.random.randint(ks[0], (B, cfg.num_codebooks, S_text), 0,
+                                  cfg.vocab_size)
+    else:
+        toks = jax.random.randint(ks[0], (B, S_text), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jax.random.normal(
+            ks[1], (B, cfg.num_patches, cfg.d_model), jnp.bfloat16) * 0.02
+    if cfg.cross_attn_cond:
+        batch["cond"] = jax.random.normal(
+            ks[2], (B, cfg.cross_attn_cond, cfg.d_model), jnp.bfloat16) * 0.02
+    return batch
+
+
+def main():
+    names = sys.argv[1:] or ARCH_NAMES
+    B, S = 2, 64
+    for name in names:
+        cfg = get_config(name).reduced()
+        rng = jax.random.PRNGKey(0)
+        params = tfm.init_params(rng, cfg)
+        n_params = sum(x.size for x in jax.tree.leaves(params))
+        batch = make_batch(rng, cfg, B, S)
+        total, metrics = jax.jit(
+            lambda p, b: tfm.loss_fn(p, b, cfg))(params, batch)
+        assert jnp.isfinite(total), (name, total)
+        # prefill + one decode step
+        cache_len = S + 8
+        logits, cache = jax.jit(
+            lambda p, t, pe=None, cd=None: decoding.prefill(
+                p, t, cfg, cache_len, patch_embeds=pe, cond=cd))(
+            params, batch["tokens"], batch.get("patch_embeds"),
+            batch.get("cond"))
+        assert jnp.all(jnp.isfinite(logits.astype(jnp.float32)))
+        if cfg.num_codebooks > 1:
+            tok = batch["tokens"][:, :, -1:]
+        else:
+            tok = batch["tokens"][:, -1:]
+        pos = jnp.int32(S if cfg.frontend != "vision" else S)
+        logits2, cache2 = jax.jit(
+            lambda p, c, t, q, cd=None: decoding.serve_step(
+                p, c, t, q, cfg, cond=cd))(
+            params, cache, tok, pos, batch.get("cond"))
+        assert jnp.all(jnp.isfinite(logits2.astype(jnp.float32)))
+        print(f"OK {name:28s} params={n_params:>10,} loss={float(total):.3f}")
+
+
+if __name__ == "__main__":
+    main()

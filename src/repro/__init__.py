@@ -1,0 +1,4 @@
+# Eyeriss v2 reproduction: adaptive-sharding JAX training/inference framework.
+# The paper's primary contribution lives in repro.core (HM-mesh planner,
+# Eyexam roofline, CSC/BCSC sparsity); substrates in sibling subpackages.
+__version__ = "0.1.0"

@@ -1,0 +1,49 @@
+"""Architecture config registry (``--arch <id>``)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig, train_flops_per_token
+from repro.configs.shapes import (SHAPES, ShapeConfig, LONG_CONTEXT_SKIP,
+                                  cell_is_runnable, reduced_shape)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "gemma2-2b": "gemma2_2b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "gemma3-12b": "gemma3_12b",
+    "mamba2-130m": "mamba2_130m",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "internvl2-26b": "internvl2_26b",
+    "musicgen-large": "musicgen_large",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+}
+
+ARCH_NAMES: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-reduced"):
+        return get_config(name[: -len("-reduced")]).reduced()
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    cfg: ArchConfig = mod.CONFIG
+    cfg.validate()
+    return cfg
+
+
+def all_cells():
+    """Yield every (arch, shape) cell incl. runnability flag — 40 total."""
+    for a in ARCH_NAMES:
+        for s in SHAPES.values():
+            yield a, s, cell_is_runnable(a, s.name)
+
+
+__all__ = [
+    "ArchConfig", "ShapeConfig", "SHAPES", "ARCH_NAMES", "LONG_CONTEXT_SKIP",
+    "get_config", "all_cells", "cell_is_runnable", "reduced_shape",
+    "train_flops_per_token",
+]

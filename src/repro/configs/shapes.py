@@ -1,0 +1,45 @@
+"""Assigned input-shape sets (the 4 LM-transformer shapes; 40 cells total).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV cache of
+``seq_len``); ``train_4k`` lowers ``train_step``; ``prefill_32k`` lowers
+``prefill_step``. ``long_500k`` is only runnable for sub-quadratic archs
+(see DESIGN.md §4 — long_500k applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k":    ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k":  ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k":   ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+# Archs whose attention is NOT sub-quadratic in decode state: long_500k skipped
+# (pure full-attention; noted in DESIGN.md §4).
+LONG_CONTEXT_SKIP = frozenset(
+    {"mistral-nemo-12b", "qwen2.5-3b", "internvl2-26b", "musicgen-large"}
+)
+
+
+def cell_is_runnable(arch_name: str, shape_name: str) -> bool:
+    if shape_name == "long_500k" and arch_name in LONG_CONTEXT_SKIP:
+        return False
+    return True
+
+
+def reduced_shape(shape: ShapeConfig) -> ShapeConfig:
+    """Shrunk shape for CPU smoke tests (same kind)."""
+    return ShapeConfig(shape.name + "-reduced", shape.kind,
+                       seq_len=64, global_batch=2)

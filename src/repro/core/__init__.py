@@ -1,0 +1,9 @@
+# The paper's primary contribution, in JAX:
+#   hmmesh/planner — HM-NoC modes → per-layer sharding selection
+#   reuse          — Table-I data-reuse analysis
+#   eyexam         — 7-step bounds + 3-term TPU roofline
+#   sparsity       — CSC / block-CSC formats + pruning
+#   dataflow       — row-stationary VMEM tiling
+from repro.core import dataflow, eyexam, hmmesh, planner, reuse, sparsity
+
+__all__ = ["dataflow", "eyexam", "hmmesh", "planner", "reuse", "sparsity"]

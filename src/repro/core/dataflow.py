@@ -1,0 +1,76 @@
+"""Row-stationary tiling on the TPU memory hierarchy (paper §II ↔ DESIGN.md §2).
+
+The paper keeps a (C0·M0 × S) weight matrix stationary in each PE's SPad and
+streams iact windows past it. The TPU analogue: keep a (bk × bn) weight tile
+stationary in VMEM, stream (bm × bk) activation tiles from HBM. This module
+computes tile shapes that (a) fit the VMEM budget (the SPad-fit constraint of
+Table III) and (b) align to MXU/VREG geometry (multiples of 8 sublanes × 128
+lanes; matmul dims multiples of 128 where possible).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+VMEM_BYTES = 16 * 1024 * 1024      # ~16 MiB usable per TensorCore (v5e class)
+LANE = 128
+SUBLANE = 8
+
+
+def _round_down(x: int, m: int) -> int:
+    return max((x // m) * m, m) if x >= m else x
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulTiling:
+    bm: int      # activation rows per tile
+    bk: int      # reduction tile
+    bn: int      # output cols per tile (weight-stationary dim)
+    dtype_bytes: int = 2
+
+    @property
+    def vmem_bytes(self) -> int:
+        # x tile + w tile + fp32 accumulator tile (the psum-SPad analogue)
+        return (self.bm * self.bk + self.bk * self.bn) * self.dtype_bytes + \
+            self.bm * self.bn * 4
+
+    def fits(self, budget: int = VMEM_BYTES) -> bool:
+        # double-buffered streams (×2 on the streamed operands)
+        return (2 * self.bm * self.bk * self.dtype_bytes +
+                2 * self.bk * self.bn * self.dtype_bytes +
+                self.bm * self.bn * 4) <= budget
+
+
+def rs_matmul_tiling(M: int, K: int, N: int, dtype_bytes: int = 2,
+                     budget: int = VMEM_BYTES) -> MatmulTiling:
+    """Pick (bm, bk, bn) for an (M×K)·(K×N) matmul, weight-stationary.
+
+    Strategy mirrors the RS dataflow: maximize the stationary weight tile
+    (reuse ∝ bm per resident weight), then grow bm until the budget binds.
+    """
+    bn = _round_down(min(N, 512), LANE)
+    bk = _round_down(min(K, 1024), LANE)
+    bm = _round_down(min(M, 512), SUBLANE)
+    t = MatmulTiling(bm, bk, bn, dtype_bytes)
+    while not t.fits(budget) and t.bk > LANE:
+        t = MatmulTiling(t.bm, t.bk // 2, t.bn, dtype_bytes)
+    while not t.fits(budget) and t.bn > LANE:
+        t = MatmulTiling(t.bm, t.bk, t.bn // 2, dtype_bytes)
+    while not t.fits(budget) and t.bm > SUBLANE:
+        t = MatmulTiling(t.bm // 2, t.bk, t.bn, dtype_bytes)
+    assert t.fits(budget), (M, K, N, t)
+    return t
+
+
+def spad_fit_report(weight_count: int, sparsity: float,
+                    tiling: MatmulTiling) -> dict:
+    """Table-III analogue: do the (compressed) resident weights fit the budget?"""
+    nominal = weight_count * tiling.dtype_bytes
+    compressed = int(nominal * (1 - sparsity) * 1.5)  # 12b/8b CSC overhead ratio
+    resident = tiling.bk * tiling.bn * tiling.dtype_bytes
+    return {
+        "nominal_bytes": nominal,
+        "compressed_bytes": compressed,
+        "resident_tile_bytes": resident,
+        "fits_vmem": resident <= VMEM_BYTES,
+    }

@@ -1,0 +1,406 @@
+"""Structural cost parser for post-SPMD compiled HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts each while-loop *body
+once*, but every ``lax.scan`` in the model (period stack, loss chunks, SSD
+chunks, RG-LRU sequence scan, microbatch accumulation) is a while loop — so
+its FLOP/byte numbers understate scanned work by the trip count. This parser
+walks the computation call graph, multiplies every computation's cost by its
+execution count (entry=1; while body/cond ×trip; fusion/call inherit caller),
+and emits the three roofline inputs:
+
+  * ``flops``      — dot/convolution FLOPs (elementwise excluded: MXU roofline)
+  * ``hbm_bytes``  — fusion-boundary traffic model: operand+result bytes of
+    materializing ops (dot/conv/reduce/fusion/copy/collective;
+    dynamic-slice/DUS counted at slice granularity), parameters/constants/
+    GTE/tuple/bitcast free. Elementwise inside fusions is VMEM-internal.
+  * ``coll_bytes`` — per collective-op operand bytes (the ICI term).
+
+Trip counts are read from each while condition's integer constant (scan
+lowness: induction var starts at 0, compares LT bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "u2": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"\s*%?([\w.\-]+)")
+_OPCODE_RE = re.compile(r"^([a-z][\w\-]*)\(")
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w.\-,% ]+)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _parse_shape(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x] if dims else []
+        out.append((dtype, d))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _parse_shape(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    parsed = _parse_shape(shape_str)
+    return parsed[0][1] if parsed else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_str: str
+    opcode: str
+    rest: str                      # operand list + attributes (raw tail)
+
+    def _operand_region(self) -> str:
+        depth = 0
+        end = len(self.rest)
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        return self.rest[:end]
+
+    def operand_names(self) -> List[str]:
+        return re.findall(r"%([\w.\-]+)", self._operand_region())
+
+    def operand_shapes(self, sym: Dict[str, str]) -> List[str]:
+        """Operand shapes resolved through the computation's symbol table."""
+        return [sym[n] for n in self.operand_names() if n in sym]
+
+    def attr_ints(self, attr: str) -> List[int]:
+        m = re.search(attr + r"=\{([0-9,]*)\}", self.rest)
+        if not m:
+            return []
+        return [int(x) for x in m.group(1).split(",") if x]
+
+    def called(self) -> List[str]:
+        out = []
+        for m in _CALLED_RE.finditer(self.rest):
+            for name in m.group(1).split(","):
+                out.append(name.strip().lstrip("%"))
+        return out
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    """Parse one instruction line. Handles tuple result shapes containing
+    ``/*index=N*/`` comments (which break any single-regex approach)."""
+    ls = line.strip()
+    if ls.startswith("ROOT "):
+        ls = ls[5:]
+    if not ls.startswith("%"):
+        return None
+    eq = ls.find(" = ")
+    if eq < 0:
+        return None
+    name = ls[1:eq]
+    rest = ls[eq + 3:]
+    if rest.startswith("("):                      # tuple shape: balanced parens
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        shape, tail = rest[:end + 1], rest[end + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape, tail = rest[:sp], rest[sp + 1:].lstrip()
+    m = _OPCODE_RE.match(tail)
+    if not m:
+        return None
+    opcode = m.group(1)
+    return Instr(name, shape, opcode, tail[len(opcode) + 1:])
+
+
+def _header_name(line: str) -> Optional[str]:
+    """Computation header: ``[ENTRY] %name (params) -> retshape {``."""
+    ls = line.strip()
+    if not ls.endswith("{") or "->" not in ls or " = " in ls:
+        return None
+    if ls.startswith("ENTRY"):
+        ls = ls[len("ENTRY"):]
+    m = _NAME_RE.match(ls)
+    return m.group(1) if m else None
+
+
+def parse_computations(hlo_text: str) -> Tuple[Dict[str, List[Instr]],
+                                               Optional[str]]:
+    comps: Dict[str, List[Instr]] = {}
+    current: Optional[str] = None
+    entry: Optional[str] = None
+    for line in hlo_text.splitlines():
+        name = _header_name(line)
+        if name is not None:
+            current = name
+            comps[current] = []
+            if line.lstrip().startswith("ENTRY"):
+                entry = name
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            comps[current].append(ins)
+    return comps, entry
+
+
+def _trip_count(cond: str, comps: Dict[str, List[Instr]],
+                depth: int = 0) -> int:
+    """Largest integer constant in the while condition (scan bound: induction
+    var starts at 0, compares LT bound). Descends into fused comparisons."""
+    best = 1
+    if depth > 3:
+        return best
+    for ins in comps.get(cond, []):
+        if ins.opcode == "constant" and ins.shape_str.split("[")[0] in (
+                "s8", "s16", "s32", "s64", "u8", "u16", "u32", "u64"):
+            m = re.match(r"(\d+)", ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        for m in _CONST_RE.finditer(ins.rest):
+            best = max(best, int(m.group(1)))
+        for callee in ins.called():
+            best = max(best, _trip_count(callee, comps, depth + 1))
+    return best
+
+
+def _dot_flops(ins: Instr, sym: Dict[str, str]) -> float:
+    result = _shape_dims(ins.shape_str)
+    n_out = 1
+    for d in result:
+        n_out *= d
+    ops = ins.operand_shapes(sym)
+    if not ops:
+        return 0.0
+    lhs = _shape_dims(ops[0])
+    contract = ins.attr_ints("lhs_contracting_dims")
+    k = 1
+    for i in contract:
+        if i < len(lhs):
+            k *= lhs[i]
+    return 2.0 * n_out * max(k, 1)
+
+
+def _conv_flops(ins: Instr, sym: Dict[str, str]) -> float:
+    result = _shape_dims(ins.shape_str)
+    n_out = 1
+    for d in result:
+        n_out *= d
+    ops = ins.operand_shapes(sym)
+    if len(ops) < 2:
+        return 0.0
+    kernel = _shape_dims(ops[1])
+    k = 1
+    for d in kernel[:-1]:     # all dims but output-feature (layout-approximate)
+        k *= d
+    fg = re.search(r"feature_group_count=(\d+)", ins.rest)
+    groups = int(fg.group(1)) if fg else 1
+    return 2.0 * n_out * max(k // max(groups, 1), 1)
+
+
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "iota", "after-all", "partition-id", "replica-id", "reshape",
+             "broadcast"}
+
+
+def _fusion_bytes(ins: Instr, sym: Dict[str, str],
+                  comps: Dict[str, List[Instr]]) -> int:
+    """Boundary bytes of one fusion call.
+
+    Special case: a fusion whose root is a dynamic-update-slice is an
+    IN-PLACE update (KV-cache append, grad accumulation slot) — it touches
+    O(update-slice) bytes, not the whole buffer. Counting operands+result
+    would charge the full cache per decode step (measured: 84% of the decode
+    memory term was this artifact).
+    """
+    for callee in ins.called():
+        instrs = comps.get(callee, [])
+        if not instrs:
+            continue
+        root = instrs[-1]
+        if root.opcode == "dynamic-update-slice":
+            csym = {i.name: i.shape_str for i in instrs}
+            ops_ = root.operand_shapes(csym)
+            upd = _shape_bytes(ops_[1]) if len(ops_) > 1 else 0
+            # small side inputs (indices, scalars) are negligible
+            return 2 * upd
+    return _shape_bytes(ins.shape_str) + sum(
+        _shape_bytes(s) for s in ins.operand_shapes(sym))
+
+# Elementwise ops the CPU backend leaves at top level but a TPU compile would
+# fuse into neighbours — their traffic is VMEM-internal on the target, so the
+# HBM model treats them as free (documented in EXPERIMENTS.md methodology).
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "and", "or", "xor", "not", "negate", "abs", "sign", "compare", "select",
+    "convert", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "sqrt", "rsqrt", "cbrt", "sine", "cosine", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "clamp", "is-finite",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "atan2", "expm1", "logistic", "erf", "clz", "popcnt",
+}
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    trip_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def analyze(hlo_text: str) -> HLOCost:
+    comps, entry = parse_computations(hlo_text)
+    if entry is None or entry not in comps:     # fall back: biggest computation
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    cost = HLOCost()
+    if entry is None:
+        return cost
+    _walk(entry, 1.0, comps, cost, flops_only=False, seen=set())
+    return cost
+
+
+def _base_op(opcode: str) -> str:
+    op = opcode
+    for c in COLLECTIVES:
+        if op == c or op == c + "-start" or op == c + "-done":
+            return c
+    return op
+
+
+def _walk(comp: str, count: float, comps: Dict[str, List[Instr]],
+          cost: HLOCost, flops_only: bool, seen: set):
+    """Accumulate costs of one computation × count.
+
+    flops_only=True inside fusion bodies: their byte traffic is VMEM-internal
+    (the fusion instruction at the caller already paid the boundary bytes),
+    but dots fused into them still burn MXU flops.
+    """
+    instrs = comps.get(comp, [])
+    sym = {ins.name: ins.shape_str for ins in instrs}
+    for ins in instrs:
+        op = ins.opcode
+        base = _base_op(op)
+
+        if op == "while":
+            called = ins.called()
+            m_body = re.search(r"body=%?([\w.\-]+)", ins.rest)
+            m_cond = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+            body = m_body.group(1) if m_body else (called[0] if called else None)
+            cond = m_cond.group(1) if m_cond else None
+            m_trip = _TRIP_RE.search(ins.rest)       # XLA's own trip analysis
+            if m_trip:
+                trip = int(m_trip.group(1))
+            else:
+                trip = _trip_count(cond, comps) if cond else 1
+            cost.trip_counts[body or "?"] = trip
+            if body:
+                _walk(body, count * trip, comps, cost, flops_only, seen)
+            if cond:
+                _walk(cond, count * trip, comps, cost, True, seen)
+            continue
+
+        if op in ("fusion",):
+            for callee in ins.called():
+                _walk(callee, count, comps, cost, True, seen)
+            if not flops_only:
+                b = _fusion_bytes(ins, sym, comps)
+                cost.hbm_bytes += count * b
+            continue
+
+        if op in ("call", "conditional", "async-start"):
+            for callee in ins.called():
+                _walk(callee, count, comps, cost, flops_only, seen)
+            continue
+
+        if op == "dot":
+            cost.flops += count * _dot_flops(ins, sym)
+            if not flops_only:
+                b = _shape_bytes(ins.shape_str) + sum(
+                    _shape_bytes(s) for s in ins.operand_shapes(sym))
+                cost.hbm_bytes += count * b
+            continue
+
+        if op == "convolution":
+            cost.flops += count * _conv_flops(ins, sym)
+            if not flops_only:
+                b = _shape_bytes(ins.shape_str) + sum(
+                    _shape_bytes(s) for s in ins.operand_shapes(sym))
+                cost.hbm_bytes += count * b
+            continue
+
+        if base in COLLECTIVES:
+            ob = sum(_shape_bytes(s) for s in ins.operand_shapes(sym))
+            if ob == 0:
+                ob = _shape_bytes(ins.shape_str)
+            cost.coll_bytes[base] += count * ob
+            cost.coll_counts[base] += count
+            if not flops_only:
+                cost.hbm_bytes += count * (ob + _shape_bytes(ins.shape_str))
+            # reduction computations attached to all-reduce: negligible
+            continue
+
+        if flops_only or op in _FREE_OPS or op in _ELEMENTWISE:
+            continue
+
+        if op == "dynamic-slice":
+            cost.hbm_bytes += count * 2 * _shape_bytes(ins.shape_str)
+            continue
+        if op in ("dynamic-update-slice",):
+            ops_ = ins.operand_shapes(sym)
+            upd = _shape_bytes(ops_[1]) if len(ops_) > 1 else \
+                _shape_bytes(ins.shape_str)
+            cost.hbm_bytes += count * 2 * upd
+            continue
+        if op == "copy":
+            cost.hbm_bytes += count * 2 * _shape_bytes(ins.shape_str)
+            continue
+        # materializing ops: reduce/transpose/concat/gather/... and anything
+        # unrecognized — count fusion-boundary operand+result bytes
+        b = _shape_bytes(ins.shape_str) + sum(
+            _shape_bytes(s) for s in ins.operand_shapes(sym))
+        cost.hbm_bytes += count * b

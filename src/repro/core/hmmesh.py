@@ -1,0 +1,64 @@
+"""HM-NoC modes mapped onto a (pod, data, model) TPU mesh (DESIGN.md §2).
+
+The paper's four operating modes (Fig. 8) become tensor *layouts*:
+
+    BROADCAST      — replicated on every chip (one copy multicast; max reuse)
+    UNICAST        — fully sharded across all axes (unique data per chip; max bw)
+    GROUPED_MC     — sharded over `model`, replicated over `data` (same data to a
+                     group = a data-parallel replica row)
+    INTERLEAVED_MC — sharded over `data`(+`pod`), replicated over `model`
+                     (unique data interleaved across groups; e.g. ZeRO-3 shards)
+
+Each *data type* (weights / iacts / psums) gets its own independently-chosen
+mode, exactly as the paper runs three separate NoCs.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Optional, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+
+class Mode(enum.Enum):
+    BROADCAST = "broadcast"
+    UNICAST = "unicast"
+    GROUPED_MC = "grouped_multicast"
+    INTERLEAVED_MC = "interleaved_multicast"
+
+
+# Mesh axis names (launch/mesh.py). `pod` is the inter-cluster mesh level.
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+
+def mode_axes(mode: Mode, multi_pod: bool) -> Tuple:
+    """Which mesh axes a tensor dim is sharded over under each mode."""
+    dp = (POD_AXIS, DATA_AXIS) if multi_pod else (DATA_AXIS,)
+    if mode == Mode.BROADCAST:
+        return ()
+    if mode == Mode.UNICAST:
+        return dp + (MODEL_AXIS,)
+    if mode == Mode.GROUPED_MC:
+        return (MODEL_AXIS,)
+    if mode == Mode.INTERLEAVED_MC:
+        return dp
+    raise ValueError(mode)
+
+
+def spec_for(mode: Mode, ndim: int, shard_dim: int, multi_pod: bool) -> P:
+    """PartitionSpec placing the mode's axes on ``shard_dim`` of an ndim tensor."""
+    axes = mode_axes(mode, multi_pod)
+    entries: list = [None] * ndim
+    if axes:
+        entries[shard_dim] = axes if len(axes) > 1 else axes[0]
+    return P(*entries)
+
+
+def divisible(dim_size: int, mode: Mode, mesh_shape: dict, multi_pod: bool) -> bool:
+    """Can ``dim_size`` be evenly sharded under ``mode`` on this mesh?"""
+    n = 1
+    for a in mode_axes(mode, multi_pod):
+        n *= mesh_shape[a]
+    return dim_size % n == 0 if n > 1 else True

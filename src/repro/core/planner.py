@@ -1,0 +1,224 @@
+"""HM-mesh planner: per-layer sharding-mode selection (the paper's per-layer
+NoC reconfiguration, DESIGN.md §2).
+
+For every layer GEMM the planner scores candidate (weight-mode, iact-mode)
+pairs with an Eyexam-step-6 roofline estimate and picks the fastest feasible
+one — reproducing the paper's behavior table (Fig. 9):
+
+    CONV-like   (high reuse both)   → weights GROUPED_MC  / iacts INTERLEAVED_MC
+    DW-CONV     (no iact reuse)     → weights BROADCAST   / iacts UNICAST
+    FC @ B=1    (no weight reuse)   → weights UNICAST     / iacts BROADCAST
+    MoE experts (G dimension)       → weights GROUPED_MC over experts (= EP)
+
+The model-level entry point (`plan_model`) aggregates layer votes into a
+ModelPlan: parameter-sharding rule, activation specs and cache specs that
+`sharding.autoshard` applies to the pjit step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import eyexam
+from repro.core.hmmesh import Mode
+from repro.core.reuse import LayerShape, model_gemms, reuse
+
+BYTES = 2            # bf16
+TRAIN_BACKWARD = 3.0  # bwd ≈ 2× fwd FLOPs
+
+
+@dataclasses.dataclass
+class MeshDesc:
+    pod: int
+    data: int
+    model: int
+
+    @property
+    def chips(self) -> int:
+        return self.pod * self.data * self.model
+
+    @property
+    def dp(self) -> int:
+        return self.pod * self.data
+
+    def axes(self) -> Dict[str, int]:
+        return {"pod": self.pod, "data": self.data, "model": self.model}
+
+
+@dataclasses.dataclass
+class LayerPlan:
+    layer: str
+    weight_mode: Mode
+    iact_mode: Mode
+    est_time: float
+    terms: Dict[str, float]
+    note: str = ""
+
+
+# --------------------------------------------------------------- candidates
+def _candidate_time(shape: LayerShape, wm: Mode, im: Mode, mesh: MeshDesc,
+                    training: bool) -> Optional[Tuple[float, Dict[str, float]]]:
+    """Roofline time for one (weight-mode, iact-mode) candidate, or None if
+    infeasible (indivisible dims / incoherent pairing)."""
+    N, C, M, G = shape.N, shape.C, shape.M, shape.G
+    dp, mp = mesh.dp, mesh.model
+    macs = shape.effective_macs
+    flops = 2.0 * macs * (TRAIN_BACKWARD if training else 1.0)
+
+    # tokens are interleaved (sharded) over the data axes whenever possible
+    tok_shards = dp if (im in (Mode.INTERLEAVED_MC, Mode.UNICAST) and
+                        N % dp == 0) else 1
+    if im in (Mode.INTERLEAVED_MC, Mode.UNICAST) and N % dp:
+        return None
+
+    coll = 0.0
+    if wm == Mode.BROADCAST:
+        w_shards = 1
+        if training:  # gradient all-reduce over dp (2(n-1)/n ≈ 2× bytes)
+            coll += 2.0 * shape.weight_count * BYTES * (dp - 1) / max(dp, 1)
+    elif wm == Mode.GROUPED_MC:
+        # TP: weights sharded over model on G (if meaningful) else M
+        if G > 1:
+            if G % mp:
+                return None
+        elif M % mp:
+            return None
+        w_shards = mp
+        if G > 1:  # EP: tokens all-to-all there and back
+            coll += 2.0 * (N / max(tok_shards, 1)) * C * BYTES
+        else:      # Megatron pair: all-reduce activations once per 2 GEMMs
+            coll += (N / max(tok_shards, 1)) * M * BYTES / 2
+        if training:
+            coll += 2.0 * shape.weight_count * BYTES / mp * (dp - 1) / max(dp, 1)
+    elif wm == Mode.UNICAST:
+        # FSDP/ZeRO-3: weights sharded over every chip; all-gather per use
+        w_shards = dp * mp
+        gathers = 2 if training else 1  # fwd + bwd re-gather
+        coll += gathers * shape.weight_count * BYTES * (1 - 1.0 / w_shards)
+        if training:  # reduce-scatter grads
+            coll += shape.weight_count * BYTES * (1 - 1.0 / w_shards)
+    elif wm == Mode.INTERLEAVED_MC:
+        # weights sharded over data axes only (ZeRO within pod rows)
+        w_shards = dp
+        gathers = 2 if training else 1
+        coll += gathers * shape.weight_count * BYTES * (1 - 1.0 / dp)
+        if training:
+            coll += shape.weight_count * BYTES * (1 - 1.0 / dp)
+    else:
+        return None
+
+    if im == Mode.BROADCAST and tok_shards > 1:
+        return None
+
+    chips = mesh.chips
+    flops_per_chip = flops / chips
+    # HBM traffic: weights (local shard) + iacts + psums, all per chip
+    w_bytes = shape.weight_count * (1 - shape.sparsity_w) * BYTES / w_shards
+    a_bytes = (shape.iact_count * (1 - shape.sparsity_a) +
+               shape.psum_count) * BYTES / max(tok_shards, 1)
+    # single-pass approximation: each operand crosses HBM once
+    hbm = w_bytes + a_bytes
+
+    t_c = flops_per_chip / eyexam.PEAK_FLOPS
+    t_m = hbm / eyexam.HBM_BW
+    t_n = (coll / chips) / eyexam.ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+    return max(t_c, t_m, t_n), terms
+
+
+_W_MODES = (Mode.BROADCAST, Mode.GROUPED_MC, Mode.UNICAST, Mode.INTERLEAVED_MC)
+_I_MODES = (Mode.BROADCAST, Mode.INTERLEAVED_MC)
+
+
+def plan_layer(shape: LayerShape, mesh: MeshDesc, training: bool) -> LayerPlan:
+    best = None
+    for wm in _W_MODES:
+        for im in _I_MODES:
+            res = _candidate_time(shape, wm, im, mesh, training)
+            if res is None:
+                continue
+            t, terms = res
+            if best is None or t < best[0]:
+                best = (t, terms, wm, im)
+    assert best is not None, f"no feasible plan for {shape.name}"
+    t, terms, wm, im = best
+    r = reuse(shape)
+    note = (f"reuse w={r['weight']:.0f} i={r['iact']:.0f} p={r['psum']:.0f}")
+    return LayerPlan(shape.name, wm, im, t, terms, note)
+
+
+# ------------------------------------------------------------- model planning
+@dataclasses.dataclass
+class ModelPlan:
+    """Aggregated decision consumed by sharding.autoshard."""
+    param_rule: str            # 'fsdp_tp' | 'tp_only' | 'ep_fsdp' | 'fsdp_dp' | 'replicated'
+    shard_experts: bool        # EP over model axis
+    shard_heads: bool          # attention heads over model axis
+    shard_kv_heads: bool
+    shard_ffn: bool            # d_ff over model axis
+    shard_vocab: bool
+    cache_seq_sharded: bool    # decode KV cache: shard seq over model
+    layers: List[LayerPlan]
+    mesh: MeshDesc
+    # 'dp': tokens over the dp axes, TP over model (grouped-multicast).
+    # 'all': tokens over EVERY axis, weights broadcast — the paper's DW-CONV
+    # mode (Fig. 9b) for families with no TP-able dimension (pure SSM): the
+    # model axis would otherwise idle, capping utilization at 1/model.
+    act_axes: str = "dp"
+
+    def describe(self) -> str:
+        lines = [f"param_rule={self.param_rule} experts={self.shard_experts} "
+                 f"heads={self.shard_heads} kv={self.shard_kv_heads} "
+                 f"ffn={self.shard_ffn} vocab={self.shard_vocab} "
+                 f"cache_seq={self.cache_seq_sharded}"]
+        for lp in self.layers:
+            lines.append(f"  {lp.layer:18s} W={lp.weight_mode.value:22s} "
+                         f"A={lp.iact_mode.value:22s} t={lp.est_time:.2e} "
+                         f"[{lp.note}]")
+        return "\n".join(lines)
+
+
+def plan_model(cfg, shape_cfg, mesh: MeshDesc) -> ModelPlan:
+    """Plan a whole (arch × input-shape) cell."""
+    training = shape_cfg.kind == "train"
+    decode = shape_cfg.kind == "decode"
+    tokens = shape_cfg.global_batch * (1 if decode else shape_cfg.seq_len)
+    gemms = model_gemms(cfg, max(tokens, 1), decode=decode)
+    layer_plans = [plan_layer(g, mesh, training) for g in gemms]
+
+    votes = [lp.weight_mode for lp in layer_plans]
+    n_unicast = sum(v in (Mode.UNICAST, Mode.INTERLEAVED_MC) for v in votes)
+
+    mp = mesh.model
+    shard_heads = cfg.num_heads > 0 and cfg.num_heads % mp == 0
+    shard_kv = cfg.num_kv_heads > 0 and cfg.num_kv_heads % mp == 0
+    shard_ffn = (cfg.d_ff or cfg.d_inner) % mp == 0 if (cfg.d_ff or cfg.ssm_state) else False
+    shard_vocab = cfg.vocab_padded % mp == 0
+    shard_experts = cfg.moe and cfg.num_experts % mp == 0
+
+    if training:
+        # params live FSDP over data(+pod), TP over model — grouped+interleaved
+        rule = "ep_fsdp" if shard_experts else "fsdp_tp"
+    elif decode:
+        # low weight reuse → unicast-style: TP/EP shards, replicate over data
+        rule = "ep_fsdp" if shard_experts else "tp_only"
+    else:
+        rule = "ep_fsdp" if shard_experts else "fsdp_tp"
+
+    # Pure-SSM family: no attention heads, no MoE, no MLP — TP has nothing to
+    # grip. Paper Fig. 9b (DW-CONV): broadcast weights, unicast iacts — tokens
+    # over the WHOLE mesh, params FSDP over dp only.
+    act_axes = "dp"
+    if all(k == "ssm" for k in cfg.attn_pattern):
+        act_axes = "all"
+        rule = "fsdp_dp"
+        shard_heads = shard_kv = shard_ffn = shard_experts = False
+        shard_vocab = False
+
+    cache_seq_sharded = decode and not shard_kv
+    return ModelPlan(param_rule=rule, shard_experts=shard_experts,
+                     shard_heads=shard_heads, shard_kv_heads=shard_kv,
+                     shard_ffn=shard_ffn, shard_vocab=shard_vocab,
+                     cache_seq_sharded=cache_seq_sharded,
+                     layers=layer_plans, mesh=mesh, act_axes=act_axes)

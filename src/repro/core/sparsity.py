@@ -1,0 +1,195 @@
+"""Compressed-sparse-column formats + pruning (paper §IV, Fig. 16, Table III).
+
+Two granularities:
+
+* ``csc_encode/decode`` — the paper's exact scalar CSC: per column, 4-bit-style
+  *count* (leading zeros since previous non-zero) + data vector, plus an
+  *address* vector of per-column segment starts (repeated for empty columns).
+  Used for format round-trip tests and compression-ratio studies.
+
+* ``bcsc_encode`` — block-CSC, the TPU adaptation: the matrix is tiled into
+  MXU-aligned (bk × bn) blocks; all-zero blocks are *skipped entirely* (the
+  cycle-skipping analogue — DESIGN.md §2), non-zero blocks are stored dense.
+  The Pallas kernel (kernels/bcsc_matmul.py) consumes this format via
+  scalar-prefetched index vectors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------------ scalar CSC
+@dataclasses.dataclass
+class CSCMatrix:
+    """Paper-exact CSC of a (rows × cols) matrix, column-major segments."""
+    data: np.ndarray      # non-zero values
+    count: np.ndarray     # leading zeros before each value (within its column)
+    address: np.ndarray   # per-column start offsets, len cols+1
+    shape: Tuple[int, int]
+    count_bits: int = 4
+
+    @property
+    def nnz(self) -> int:
+        return int(self.data.size)
+
+    def storage_bits(self, data_bits: int = 8, addr_bits: int = 16) -> int:
+        return (self.nnz * (data_bits + self.count_bits) +
+                self.address.size * addr_bits)
+
+    def compression_ratio(self, data_bits: int = 8) -> float:
+        dense_bits = self.shape[0] * self.shape[1] * data_bits
+        return dense_bits / max(self.storage_bits(data_bits), 1)
+
+
+def csc_encode(mat: np.ndarray, count_bits: int = 4) -> CSCMatrix:
+    """Encode column-by-column. Counts exceeding the bit budget are handled the
+    way RLC does: an explicit zero entry is emitted (padding value 0)."""
+    rows, cols = mat.shape
+    max_count = (1 << count_bits) - 1
+    data, count, address = [], [], [0]
+    for c in range(cols):
+        col = mat[:, c]
+        run = 0
+        for r in range(rows):
+            v = col[r]
+            if v == 0:
+                run += 1
+                if run > max_count:          # overflow → emit explicit zero
+                    data.append(0)
+                    count.append(max_count)
+                    run = 0
+            else:
+                data.append(v)
+                count.append(run)
+                run = 0
+        address.append(len(data))
+    return CSCMatrix(np.asarray(data), np.asarray(count, np.int32),
+                     np.asarray(address, np.int64), (rows, cols), count_bits)
+
+
+def csc_decode(m: CSCMatrix) -> np.ndarray:
+    rows, cols = m.shape
+    out = np.zeros((rows, cols), dtype=np.asarray(m.data).dtype)
+    for c in range(cols):
+        r = 0
+        for i in range(m.address[c], m.address[c + 1]):
+            r += int(m.count[i])
+            out[r, c] = m.data[i]
+            r += 1
+    return out
+
+
+# ------------------------------------------------------------------- block CSC
+@dataclasses.dataclass
+class BCSCMatrix:
+    """Block-CSC: (K×N) matrix tiled into (bk×bn) blocks, zero blocks skipped.
+
+    blocks   (nnzb, bk, bn)  dense payload of non-zero blocks
+    row_ids  (nnzb,)         block-row index of each payload block
+    col_ptr  (nbn+1,)        block-column segment starts (CSC address vector)
+    """
+    blocks: jnp.ndarray
+    row_ids: jnp.ndarray
+    col_ptr: jnp.ndarray
+    shape: Tuple[int, int]
+    block: Tuple[int, int]
+
+    @property
+    def nnzb(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def density(self) -> float:
+        nb = (self.shape[0] // self.block[0]) * (self.shape[1] // self.block[1])
+        return self.nnzb / max(nb, 1)
+
+
+def bcsc_encode(mat, bk: int, bn: int) -> BCSCMatrix:
+    """Host-side encode (compile-time, like the paper's known weight sparsity)."""
+    m = np.asarray(mat)
+    K, N = m.shape
+    assert K % bk == 0 and N % bn == 0, (K, N, bk, bn)
+    nbk, nbn = K // bk, N // bn
+    tiles = m.reshape(nbk, bk, nbn, bn).transpose(2, 0, 1, 3)   # (nbn,nbk,bk,bn)
+    nz = np.abs(tiles).sum(axis=(2, 3)) > 0                      # (nbn,nbk)
+    blocks, row_ids, col_ptr = [], [], [0]
+    for c in range(nbn):
+        for r in range(nbk):
+            if nz[c, r]:
+                blocks.append(tiles[c, r])
+                row_ids.append(r)
+        col_ptr.append(len(blocks))
+    if not blocks:  # degenerate all-zero matrix: keep one zero block
+        blocks = [np.zeros((bk, bn), m.dtype)]
+        row_ids = [0]
+        col_ptr = [0] + [1] * nbn
+    return BCSCMatrix(jnp.asarray(np.stack(blocks)),
+                      jnp.asarray(np.asarray(row_ids, np.int32)),
+                      jnp.asarray(np.asarray(col_ptr, np.int32)),
+                      (K, N), (bk, bn))
+
+
+def bcsc_decode(m: BCSCMatrix) -> np.ndarray:
+    K, N = m.shape
+    bk, bn = m.block
+    out = np.zeros((K, N), dtype=np.asarray(m.blocks).dtype)
+    col_ptr = np.asarray(m.col_ptr)
+    row_ids = np.asarray(m.row_ids)
+    blocks = np.asarray(m.blocks)
+    for c in range(N // bn):
+        for i in range(col_ptr[c], col_ptr[c + 1]):
+            r = row_ids[i]
+            out[r * bk:(r + 1) * bk, c * bn:(c + 1) * bn] = blocks[i]
+    return out
+
+
+# -------------------------------------------------------------------- pruning
+def magnitude_prune(w, sparsity: float):
+    """Zero the smallest |w| entries (paper refs [13]); returns pruned array."""
+    flat = jnp.abs(w).ravel()
+    k = int(flat.size * sparsity)
+    if k == 0:
+        return w
+    thresh = jnp.sort(flat)[k - 1]
+    return jnp.where(jnp.abs(w) > thresh, w, 0)
+
+
+def block_magnitude_prune(w, sparsity: float, bk: int, bn: int):
+    """Prune whole (bk×bn) blocks by L2 norm — structured so BCSC skipping
+    translates to real MXU-tile savings (the TPU-native 'skip')."""
+    K, N = w.shape
+    assert K % bk == 0 and N % bn == 0
+    tiles = w.reshape(K // bk, bk, N // bn, bn)
+    norms = jnp.sqrt(jnp.sum(jnp.square(tiles.astype(jnp.float32)),
+                             axis=(1, 3)))
+    k = int(norms.size * sparsity)
+    if k == 0:
+        return w
+    thresh = jnp.sort(norms.ravel())[k - 1]
+    mask = (norms > thresh)[:, None, :, None]
+    return (tiles * mask).reshape(K, N)
+
+
+def prune_params(params, sparsity: float, min_size: int = 4096):
+    """Magnitude-prune every ≥2D weight in a params pytree (sparse-model maker)."""
+    def prune_leaf(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if x.ndim >= 2 and x.size >= min_size and "norm" not in name.lower() \
+                and name != "embed":
+            return magnitude_prune(x, sparsity)
+        return x
+    return jax.tree_util.tree_map_with_path(prune_leaf, params)
+
+
+def sparsity_stats(params) -> Dict[str, float]:
+    total = nz = 0
+    for x in jax.tree.leaves(params):
+        total += x.size
+        nz += int(jnp.count_nonzero(x))
+    return {"total": float(total), "nonzero": float(nz),
+            "sparsity": 1.0 - nz / max(total, 1)}

@@ -1,0 +1,3 @@
+from repro.data import pipeline
+
+__all__ = ["pipeline"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (validated interpret=True on CPU) + jnp oracles.
+
+The paper's compute hot-spots: the Sparse PE (block-CSC matmul, §IV), the
+row-stationary dataflow (dense matmul, §II), and the compact-DNN attention
+band (sliding-window flash attention).
+"""
+from repro.kernels.ops import (bcsc_matmul, flash_attention, prepare_bcsc,
+                               rs_matmul, sliding_window_attention)
+
+__all__ = ["bcsc_matmul", "flash_attention", "prepare_bcsc", "rs_matmul",
+           "sliding_window_attention"]

@@ -1,0 +1,110 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each wrapper: picks tile shapes (core.dataflow — the SPad/VMEM-fit constraint),
+pads inputs to tile multiples, dispatches the kernel, slices the result. On
+this CPU container kernels run with interpret=True (the Python interpreter of
+the kernel body); on TPU the same calls compile to Mosaic. ``INTERPRET`` is
+resolved once from the backend so call sites never care.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dataflow
+from repro.core.sparsity import BCSCMatrix
+from repro.kernels import bcsc_matmul as _bcsc
+from repro.kernels import local_attention as _swa
+from repro.kernels import rs_matmul as _rs
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, m: int, axis: int):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ------------------------------------------------------------------ rs_matmul
+def rs_matmul(x, w, *, out_dtype=jnp.float32, tiling=None,
+              interpret: Optional[bool] = None):
+    """Dense (M,K)·(K,N) via the row-stationary kernel. Any M,K,N (padded)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    M, K = x.shape
+    _, N = w.shape
+    t = tiling or dataflow.rs_matmul_tiling(M, K, N, x.dtype.itemsize)
+    assert t.fits(), t                       # the Table-III SPad-fit gate
+    xp = _pad_to(_pad_to(x, t.bm, 0), t.bk, 1)
+    wp = _pad_to(_pad_to(w, t.bk, 0), t.bn, 1)
+    out = _rs.rs_matmul_raw(xp, wp, bm=t.bm, bk=t.bk, bn=t.bn,
+                            out_dtype=out_dtype, interpret=interpret)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------- bcsc_matmul
+def prepare_bcsc(m: BCSCMatrix):
+    """Host-side (compile-time) index-vector prep: non-empty columns + col ids.
+
+    Returns (blocks, row_ids, col_ids, n_out) ready for bcsc_matmul.
+    """
+    m = _bcsc.ensure_nonempty_cols(m)
+    col_ids = _bcsc.expand_col_ptr(np.asarray(m.col_ptr))
+    return (m.blocks, m.row_ids, jnp.asarray(col_ids), m.shape[1])
+
+
+def bcsc_matmul(x, m: BCSCMatrix, *, bm: int = 0, out_dtype=jnp.float32,
+                interpret: Optional[bool] = None):
+    """Sparse (M,K)·BCSC(K,N) -> (M,N); skips zero weight blocks entirely."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    blocks, row_ids, col_ids, n_out = prepare_bcsc(m)
+    M, K = x.shape
+    assert K == m.shape[0], (x.shape, m.shape)
+    bk, bn = m.block
+    if bm <= 0:
+        bm = min(512, max(8, 1 << (max(M, 1) - 1).bit_length()))
+        bm = min(bm, 512)
+    xp = _pad_to(x, bm, 0)
+    out = _bcsc.bcsc_matmul_raw(xp, blocks.astype(x.dtype), row_ids, col_ids,
+                                n_out=n_out, bm=bm, out_dtype=out_dtype,
+                                interpret=interpret)
+    return out[:M]
+
+
+# -------------------------------------------------- sliding-window attention
+def sliding_window_attention(q, k, v, *, window: int, softcap: float = 0.0,
+                             bq: int = 128, bkv: int = 128,
+                             interpret: Optional[bool] = None):
+    """q (B,S,H,D); k,v (B,S,KV,D) -> (B,S,H,D) fp32. Any S (padded)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, S, H, D = q.shape
+    bq = min(bq, max(8, S))
+    bkv = min(bkv, max(8, S))
+    qt = _pad_to(jnp.moveaxis(q, 2, 1), bq, 2)       # (B,H,Sp,D)
+    kt = _pad_to(jnp.moveaxis(k, 2, 1), bkv, 2)      # (B,KV,Sp,D)
+    vt = _pad_to(jnp.moveaxis(v, 2, 1), bkv, 2)
+    Sp = max(qt.shape[2], kt.shape[2])
+    qt = _pad_to(qt, Sp, 2)
+    kt = _pad_to(kt, Sp, 2)
+    vt = _pad_to(vt, Sp, 2)
+    out = _swa.sliding_window_attention_raw(
+        qt, kt, vt, window=window, bq=bq, bkv=bkv, softcap=softcap,
+        interpret=interpret)
+    return jnp.moveaxis(out[:, :, :S], 1, 2)         # (B,S,H,D)
+
+
+def flash_attention(q, k, v, *, softcap: float = 0.0, bq: int = 128,
+                    bkv: int = 128, interpret: Optional[bool] = None):
+    """Full causal attention = sliding window with window = S."""
+    return sliding_window_attention(q, k, v, window=q.shape[1],
+                                    softcap=softcap, bq=bq, bkv=bkv,
+                                    interpret=interpret)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function is the semantic specification its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparsity import BCSCMatrix, bcsc_decode
+
+NEG_INF = -2.0e38
+
+
+def matmul_ref(x, w):
+    """(M,K)·(K,N) with fp32 accumulation, fp32 result."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def bcsc_matmul_ref(x, m: BCSCMatrix):
+    """Dense-decode oracle for the block-CSC sparse matmul."""
+    w = jnp.asarray(bcsc_decode(m))
+    return jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32)
+
+
+def sliding_window_attention_ref(q, k, v, window: int, softcap: float = 0.0):
+    """Exact sliding-window causal GQA attention.
+
+    q (B,S,H,D); k,v (B,S,KV,D) with H a multiple of KV. A query at position p
+    attends to keys at positions t with  0 <= p - t < window  (matches
+    models.layers.local_attention's band). Returns (B,S,H,D) fp32.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    R = H // KV
+    qf = q.astype(jnp.float32).reshape(B, S, KV, R, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bsgrd,btgd->bgrst", qf, kf) / math.sqrt(D)
+    if softcap and softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    rel = jnp.arange(S)[:, None] - jnp.arange(S)[None, :]
+    mask = (rel >= 0) & (rel < window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bgrst,btgd->bsgrd", p, vf)
+    return ctx.reshape(B, S, H, D)
+
+
+def flash_attention_ref(q, k, v, softcap: float = 0.0, causal: bool = True):
+    """Exact full (causal) GQA attention — oracle for window >= S."""
+    S = q.shape[1]
+    window = S if causal else 2 * S
+    return sliding_window_attention_ref(q, k, v, window, softcap)

@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, AOT multi-pod dry-run, train/serve drivers."""

@@ -1,0 +1,197 @@
+"""Build one (arch × input-shape × mesh) cell: step function, abstract inputs
+(ShapeDtypeStructs — no allocation), and in/out shardings from the HM-planner.
+
+Shared by launch/dryrun.py (AOT lower+compile), benchmarks (roofline terms)
+and the perf loop (plan overrides = the hillclimb knobs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ShapeConfig, get_config
+from repro.core import planner
+from repro.models import decoding, transformer as tfm
+from repro.models.layers import COMPUTE_DTYPE
+from repro.serve import engine
+from repro.sharding import autoshard, specs as sh
+from repro.train import loop as train_loop, optimizer as opt_lib
+
+
+@dataclasses.dataclass
+class CellBuild:
+    """Everything needed to ``jax.jit(fn, ...).lower(*abstract_args)``."""
+    name: str
+    kind: str                     # train | prefill | decode
+    fn: Callable
+    abstract_args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    plan: planner.ModelPlan
+    cfg: Any
+    shape: ShapeConfig
+    hints: Any = None
+
+    def lower(self, mesh: Mesh):
+        from repro.models import layers
+        jitted = jax.jit(self.fn,
+                         in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        token = layers.set_hints(self.hints)   # intra-layer NoC-mode pins
+        try:
+            with mesh:
+                return jitted.lower(*self.abstract_args)
+        finally:
+            layers.reset_hints(token)
+
+
+def mesh_desc(mesh: Mesh) -> planner.MeshDesc:
+    ax = sh.mesh_axis_sizes(mesh)
+    return planner.MeshDesc(pod=ax.get("pod", 1), data=ax.get("data", 1),
+                            model=ax.get("model", 1))
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: the token batch (+ stub frontend embeddings per spec);
+    decode: the single-token batch (cache specs come from abstract_cache).
+    """
+    B = shape.global_batch
+    if shape.kind == "decode":
+        tok_shape = ((B, cfg.num_codebooks, 1) if cfg.num_codebooks > 1
+                     else (B, 1))
+        out = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    else:
+        S_text = shape.seq_len - (cfg.num_patches if cfg.frontend == "vision"
+                                  else 0)
+        tok_shape = ((B, cfg.num_codebooks, S_text) if cfg.num_codebooks > 1
+                     else (B, S_text))
+        out = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+        if cfg.frontend == "vision":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), COMPUTE_DTYPE)
+    if cfg.cross_attn_cond:
+        out["cond"] = jax.ShapeDtypeStruct(
+            (B, cfg.cross_attn_cond, cfg.d_model), COMPUTE_DTYPE)
+    return out
+
+
+# ------------------------------------------------------------- cell builders
+def build_cell(arch: str, shape: ShapeConfig, mesh: Mesh, *,
+               remat_policy: str = "dots", microbatches: int = 1,
+               plan: Optional[planner.ModelPlan] = None) -> CellBuild:
+    cfg = get_config(arch)
+    md = mesh_desc(mesh)
+    plan = plan or planner.plan_model(cfg, shape, md)
+    mesh_axes = sh.mesh_axis_sizes(mesh)
+
+    if shape.kind == "train":
+        return _build_train(cfg, shape, mesh, plan, mesh_axes,
+                            remat_policy, microbatches)
+    if shape.kind == "prefill":
+        return _build_prefill(cfg, shape, mesh, plan, mesh_axes)
+    return _build_decode(cfg, shape, mesh, plan, mesh_axes)
+
+
+def _named(mesh, tree):
+    return sh.tree_named(mesh, tree)
+
+
+def _build_train(cfg, shape, mesh, plan, mesh_axes, remat_policy,
+                 microbatches) -> CellBuild:
+    opt_cfg = opt_lib.OptimizerConfig()
+    hints = autoshard.make_hints(plan, mesh, shape.global_batch)
+    step = train_loop.make_train_step(cfg, opt_cfg,
+                                      remat_policy=remat_policy,
+                                      microbatches=microbatches,
+                                      hints=hints)
+    a_params, a_opt = train_loop.abstract_train_state(cfg)
+    a_batch = input_specs(cfg, shape)
+
+    p_spec = autoshard.param_specs(a_params, plan, mesh_axes)
+    opt_spec = opt_lib.AdamWState(step=P(), mu=p_spec,
+                                  nu=jax.tree.map(lambda s: s, p_spec))
+    b_spec = autoshard.batch_spec(a_batch, plan, mesh_axes)
+    metrics_spec = jax.eval_shape(step, a_params, a_opt, a_batch)[2]
+    m_spec = jax.tree.map(lambda _: P(), metrics_spec)
+
+    return CellBuild(
+        name=f"{cfg.name}:{shape.name}", kind="train", fn=step,
+        abstract_args=(a_params, a_opt, a_batch),
+        in_shardings=(_named(mesh, p_spec), _named(mesh, opt_spec),
+                      _named(mesh, b_spec)),
+        out_shardings=(_named(mesh, p_spec), _named(mesh, opt_spec),
+                       _named(mesh, m_spec)),
+        donate_argnums=(0, 1), plan=plan, cfg=cfg, shape=shape,
+        hints=hints)
+
+
+def _build_prefill(cfg, shape, mesh, plan, mesh_axes) -> CellBuild:
+    cache_len = shape.seq_len
+    hints = autoshard.make_hints(plan, mesh, shape.global_batch)
+
+    def prefill_step(params, batch):
+        return decoding.prefill(params, batch["tokens"], cfg, cache_len,
+                                patch_embeds=batch.get("patch_embeds"),
+                                cond=batch.get("cond"), hints=hints)
+
+    a_params = tfm.abstract_params(cfg)
+    a_batch = input_specs(cfg, shape)
+    p_spec = autoshard.param_specs(a_params, plan, mesh_axes)
+    b_spec = autoshard.batch_spec(a_batch, plan, mesh_axes)
+
+    a_logits, a_cache = jax.eval_shape(prefill_step, a_params, a_batch)
+    c_spec = autoshard.cache_spec(a_cache, plan, mesh_axes)
+    dp = sh.dp_axes(mesh_axes)
+    l_spec = P(*([sh.maybe(dp, a_logits.shape[0], mesh_axes)] +
+                 [None] * (len(a_logits.shape) - 1)))
+
+    return CellBuild(
+        name=f"{cfg.name}:{shape.name}", kind="prefill", fn=prefill_step,
+        abstract_args=(a_params, a_batch),
+        in_shardings=(_named(mesh, p_spec), _named(mesh, b_spec)),
+        out_shardings=(_named(mesh, l_spec), _named(mesh, c_spec)),
+        donate_argnums=(), plan=plan, cfg=cfg, shape=shape,
+        hints=hints)
+
+
+def _build_decode(cfg, shape, mesh, plan, mesh_axes) -> CellBuild:
+    B, cache_len = shape.global_batch, shape.seq_len
+    hints = autoshard.make_hints(plan, mesh, B)
+
+    def serve_step(params, cache, batch, pos):
+        return decoding.serve_step(params, cache, batch["tokens"], pos, cfg,
+                                   cond=batch.get("cond"), hints=hints)
+
+    a_params = tfm.abstract_params(cfg)
+    a_cache = decoding.abstract_cache(cfg, B, cache_len)
+    a_batch = input_specs(cfg, shape)
+    a_pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    p_spec = autoshard.param_specs(a_params, plan, mesh_axes)
+    c_spec = autoshard.cache_spec(a_cache, plan, mesh_axes)
+    b_spec = autoshard.batch_spec(a_batch, plan, mesh_axes)
+
+    a_logits, _ = jax.eval_shape(serve_step, a_params, a_cache, a_batch, a_pos)
+    dp = sh.dp_axes(mesh_axes)
+    l_spec = P(*([sh.maybe(dp, a_logits.shape[0], mesh_axes)] +
+                 [None] * (len(a_logits.shape) - 1)))
+
+    return CellBuild(
+        name=f"{cfg.name}:{shape.name}", kind="decode", fn=serve_step,
+        abstract_args=(a_params, a_cache, a_batch, a_pos),
+        in_shardings=(_named(mesh, p_spec), _named(mesh, c_spec),
+                      _named(mesh, b_spec), _named(mesh, P())),
+        out_shardings=(_named(mesh, l_spec), _named(mesh, c_spec)),
+        donate_argnums=(1,), plan=plan, cfg=cfg, shape=shape,
+        hints=hints)

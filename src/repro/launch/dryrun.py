@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod AOT dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(**specs)
+        compiled = lowered.compile()
+        memory_analysis()  — proves it fits per-chip HBM
+        cost_analysis()    — FLOPs/bytes for §Roofline
+plus the collective-bytes HLO parse (core.eyexam) for the third roofline term.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh multi
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+Each cell writes one JSON under --out (skipped if it already exists, so the
+batch is resumable). The 512 placeholder host devices exist ONLY here.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import (ARCH_NAMES, SHAPES, cell_is_runnable, get_config,
+                           train_flops_per_token)
+from repro.core import eyexam
+from repro.launch.cell import build_cell, mesh_desc
+from repro.launch.mesh import make_production_mesh
+
+
+def _memory_dict(mem) -> Dict[str, float]:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS for the §Roofline 'useful compute' ratio (whole step)."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch        # one token per slot
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             remat_policy: str = "dots", microbatches: int = 1,
+             plan=None) -> Dict:
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "kind": shape.kind}
+    if not cell_is_runnable(arch, shape_name):
+        rec.update(status="skipped",
+                   reason="pure full-attention arch at 500k ctx "
+                          "(DESIGN.md §4 long_500k applicability)")
+        return rec
+    t0 = time.monotonic()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    try:
+        cell = build_cell(arch, shape, mesh, remat_policy=remat_policy,
+                          microbatches=microbatches, plan=plan)
+        lowered = cell.lower(mesh)
+        compiled = lowered.compile()
+        chips = mesh.devices.size
+        hlo = compiled.as_text()
+        roof = eyexam.roofline_from_compiled(compiled, chips, hlo_text=hlo)
+        mem = _memory_dict(compiled.memory_analysis())
+        mf = model_flops(cfg, shape)
+        rec.update(
+            status="ok",
+            compile_s=round(time.monotonic() - t0, 1),
+            chips=chips,
+            plan_rule=cell.plan.param_rule,
+            plan_flags={
+                "experts": cell.plan.shard_experts,
+                "heads": cell.plan.shard_heads,
+                "kv_heads": cell.plan.shard_kv_heads,
+                "ffn": cell.plan.shard_ffn,
+                "vocab": cell.plan.shard_vocab,
+                "cache_seq": cell.plan.cache_seq_sharded,
+            },
+            memory=mem,
+            hbm_per_chip_gb=round(
+                (mem.get("argument_size_in_bytes", 0) +
+                 mem.get("output_size_in_bytes", 0) +
+                 mem.get("temp_size_in_bytes", 0) -
+                 mem.get("alias_size_in_bytes", 0)) / 1e9, 3),
+            flops_per_chip=roof.flops,
+            hbm_bytes_per_chip=roof.hbm_bytes,
+            coll_bytes_per_chip=roof.coll_bytes,
+            coll_by_op={k: v for k, v in roof.per_op_coll.items()
+                        if k != "counts"},
+            coll_counts=roof.per_op_coll.get("counts"),
+            t_compute_s=roof.t_compute,
+            t_memory_s=roof.t_memory,
+            t_collective_s=roof.t_collective,
+            bound=roof.bound,
+            model_flops_total=mf,
+            model_flops_per_chip=mf / chips,
+            useful_flops_ratio=(mf / chips) / max(roof.flops, 1.0),
+            roofline_fraction=roof.fraction_of_roofline(mf / chips),
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, don't die
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:],
+                   compile_s=round(time.monotonic() - t0, 1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = ([(a, s) for a in ARCH_NAMES for s in SHAPES]
+             if args.all else [(args.arch, args.shape)])
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"SKIP {tag} (exists)")
+                continue
+            rec = run_cell(arch, shape, mp, remat_policy=args.remat,
+                           microbatches=args.microbatches)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec["status"]
+            extra = (f" bound={rec.get('bound')} "
+                     f"t=({rec.get('t_compute_s', 0):.2e},"
+                     f"{rec.get('t_memory_s', 0):.2e},"
+                     f"{rec.get('t_collective_s', 0):.2e})"
+                     if status == "ok" else rec.get("error", rec.get("reason")))
+            print(f"{status.upper():7s} {tag} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models import decoding, frontend, layers, moe, rglru, ssm, transformer
+
+__all__ = ["decoding", "frontend", "layers", "moe", "rglru", "ssm", "transformer"]

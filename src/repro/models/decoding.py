@@ -1,0 +1,268 @@
+"""KV/state caches + single-token decode and prefill paths.
+
+Cache layout mirrors the block layout: entries for the scanned period-blocks are
+stacked on a leading ``num_periods`` axis (so decode also scans), remainder
+layers keep unstacked entries. Sliding-window and chunked layers use ring
+buffers of size ``window``/``chunk`` — decode memory is bounded regardless of
+context length (this is what makes ``long_500k`` runnable for those archs).
+
+Ring invariant: slot ``i`` holds the token at the largest position ``p ≡ i
+(mod m)`` with ``p ≤ pos``; validity masks are recomputed from ``pos`` each step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe as moe_lib, rglru as rglru_lib, ssm as ssm_lib
+from repro.models import transformer as tfm
+from repro.models.layers import COMPUTE_DTYPE, cast_compute, rms_norm
+
+
+def _attn_cache_capacity(cfg, kind: str, cache_len: int) -> int:
+    if kind == "local":
+        return min(cfg.window_size, cache_len)
+    if kind == "chunked":
+        return min(cfg.chunk_size, cache_len)
+    return cache_len
+
+
+def _init_entry(cfg, kind: str, batch: int, cache_len: int):
+    if kind in ("global", "local", "chunked"):
+        cap = _attn_cache_capacity(cfg, kind, cache_len)
+        shape = (batch, cap, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, COMPUTE_DTYPE),
+                "v": jnp.zeros(shape, COMPUTE_DTYPE)}
+    if kind == "ssm":
+        return ssm_lib.init_ssm_state(batch, cfg)
+    if kind == "rglru":
+        return rglru_lib.init_rglru_state(batch, cfg)
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int, cache_len: int):
+    kinds = tfm.slot_kinds(cfg)
+    period = tfm.scan_period(cfg)
+    nper = tfm.num_scan_periods(cfg)
+    rem = tfm.num_remainder(cfg)
+    cache: Dict = {}
+    if nper:
+        def one_period():
+            return {f"slot{j}": _init_entry(cfg, kinds[j][0], batch, cache_len)
+                    for j in range(period)}
+        cache["blocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (nper,) + x.shape).copy(), one_period())
+    if rem:
+        cache["rem"] = {f"rem{j}": _init_entry(cfg, kinds[j][0], batch, cache_len)
+                        for j in range(rem)}
+    return cache
+
+
+def abstract_cache(cfg, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, cache_len))
+
+
+# -------------------------------------------------------------- ring helpers
+def _ring_positions(pos, m: int):
+    """Absolute position held by each of the m ring slots at time ``pos``."""
+    i = jnp.arange(m)
+    return pos - jnp.mod(pos - i, m)
+
+
+def _valid_mask(cfg, kind: str, cap: int, pos):
+    if kind == "global":
+        return (jnp.arange(cap) <= pos)[None, :]
+    slot_pos = _ring_positions(pos, cap)
+    if kind == "local":
+        return (slot_pos >= 0)[None, :]
+    chunk_start = (pos // cfg.chunk_size) * cfg.chunk_size
+    return (slot_pos >= chunk_start)[None, :]
+
+
+# --------------------------------------------------------------- decode block
+def _attn_decode(p, x, kind, cache_entry, pos, cfg):
+    B = x.shape[0]
+    q, k, v = layers.attn_qkv(p, x, cfg)              # q (B,1,H,D), k/v (B,1,KV,D)
+    if cfg.qk_norm:
+        q = layers.head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos_embed == "rope":
+        theta = tfm._rope_theta_for(cfg, kind)
+        positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+        q = layers.rope(q, positions, theta)
+        k = layers.rope(k, positions, theta)
+    cap = cache_entry["k"].shape[1]
+    idx = pos % cap if kind != "global" else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache_entry["k"], k, idx, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache_entry["v"], v, idx, axis=1)
+    mask = _valid_mask(cfg, kind, cap, pos)
+    ctx = layers.decode_attention(q, k_cache, v_cache,
+                                  jnp.broadcast_to(mask, (B, cap)), cfg)
+    return layers.attn_out(p, ctx), {"k": k_cache, "v": v_cache}
+
+
+def apply_block_decode(p, x, cond, kind, is_moe, cfg, cache_entry, pos):
+    h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    if kind in ("global", "local", "chunked"):
+        y, new_entry = _attn_decode(p["attn"], h, kind, cache_entry, pos, cfg)
+    elif kind == "ssm":
+        y, new_entry = ssm_lib.ssm_block_decode(p["ssm"], h, cache_entry, cfg)
+    elif kind == "rglru":
+        y, new_entry = rglru_lib.rglru_block_decode(p["rglru"], h, cache_entry, cfg)
+    if cfg.use_post_norm:
+        y = rms_norm(y, p["post_norm"], cfg.norm_eps)
+    x = x + y
+    if cfg.cross_attn_cond and kind in ("global", "local", "chunked"):
+        hc = rms_norm(x, p["pre_norm_cross"], cfg.norm_eps)
+        x = x + layers.cross_attention(p["cross_attn"], hc, cond, cfg)
+    if kind != "ssm":
+        h = rms_norm(x, p["pre_norm_mlp"], cfg.norm_eps)
+        if is_moe:
+            y, _ = moe_lib.moe_layer(p["moe"], h, cfg)
+        else:
+            y = layers.mlp(p["mlp"], h, cfg)
+        if cfg.use_post_norm:
+            y = rms_norm(y, p["post_norm_mlp"], cfg.norm_eps)
+        x = x + y
+    return x, new_entry
+
+
+def serve_step(params, cache, tokens, pos, cfg, cond=None, hints=None):
+    """One decode step. tokens (B,1) or (B,K,1); pos scalar int32.
+    Returns (logits fp32, new_cache)."""
+    x = tfm.embed_tokens(params, tokens, cfg)
+    if hints is not None:
+        x = hints.constrain_act(x)
+    B = x.shape[0]
+    if cfg.pos_embed == "sinusoidal":
+        positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+        x = x + layers.sinusoidal_pos(positions, cfg.d_model).astype(COMPUTE_DTYPE)
+    kinds = tfm.slot_kinds(cfg)
+    period = tfm.scan_period(cfg)
+
+    new_cache: Dict = {}
+    if "blocks" in params:
+        def body(x, inp):
+            pp, pc = inp
+            npc = {}
+            for j in range(period):
+                x, npc[f"slot{j}"] = apply_block_decode(
+                    pp[f"slot{j}"], x, cond, *kinds[j], cfg,
+                    pc[f"slot{j}"], pos)
+                if hints is not None:
+                    x = hints.constrain_act(x)
+            return x, npc
+        x, new_cache["blocks"] = jax.lax.scan(
+            body, x, (params["blocks"], cache["blocks"]))
+    if "rem" in params:
+        new_cache["rem"] = {}
+        for j in range(tfm.num_remainder(cfg)):
+            x, new_cache["rem"][f"rem{j}"] = apply_block_decode(
+                params["rem"][f"rem{j}"], x, cond, *kinds[j], cfg,
+                cache["rem"][f"rem{j}"], pos)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = tfm.lm_logits(params, x, cfg)
+    return logits, new_cache
+
+
+# -------------------------------------------------------------------- prefill
+def _gather_ring(full, m: int):
+    """full (B,S,...) -> ring (B,m,...) honoring the ring invariant at pos=S-1."""
+    S = full.shape[1]
+    i = jnp.arange(m)
+    p = (S - 1) - jnp.mod((S - 1) - i, m)
+    return jnp.take(full, jnp.clip(p, 0, S - 1), axis=1)
+
+
+def _attn_prefill(p, x, kind, positions, cfg, cache_len: int):
+    q, k, v = layers.attn_qkv(p, x, cfg)
+    if cfg.qk_norm:
+        q = layers.head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos_embed == "rope":
+        theta = tfm._rope_theta_for(cfg, kind)
+        q = layers.rope(q, positions, theta)
+        k = layers.rope(k, positions, theta)
+    if kind == "local":
+        ctx = layers.local_attention(q, k, v, cfg)
+    elif kind == "chunked":
+        ctx = layers.chunked_attention(q, k, v, cfg)
+    else:
+        ctx = layers.full_causal_attention(q, k, v, cfg)
+    cap = _attn_cache_capacity(cfg, kind, cache_len)
+    S = k.shape[1]
+    if kind == "global":
+        pad = cap - S
+        entry = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                 "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+    else:
+        entry = {"k": _gather_ring(k, cap), "v": _gather_ring(v, cap)}
+    return layers.attn_out(p, ctx), entry
+
+
+def apply_block_prefill(p, x, cond, kind, is_moe, cfg, positions, cache_len):
+    h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    if kind in ("global", "local", "chunked"):
+        y, entry = _attn_prefill(p["attn"], h, kind, positions, cfg, cache_len)
+    elif kind == "ssm":
+        y, entry = ssm_lib.ssm_block(p["ssm"], h, cfg, return_state=True)
+    elif kind == "rglru":
+        y, entry = rglru_lib.rglru_block(p["rglru"], h, cfg, return_state=True)
+    if cfg.use_post_norm:
+        y = rms_norm(y, p["post_norm"], cfg.norm_eps)
+    x = x + y
+    if cfg.cross_attn_cond and kind in ("global", "local", "chunked"):
+        hc = rms_norm(x, p["pre_norm_cross"], cfg.norm_eps)
+        x = x + layers.cross_attention(p["cross_attn"], hc, cond, cfg)
+    if kind != "ssm":
+        h = rms_norm(x, p["pre_norm_mlp"], cfg.norm_eps)
+        if is_moe:
+            y, _ = moe_lib.moe_layer(p["moe"], h, cfg)
+        else:
+            y = layers.mlp(p["mlp"], h, cfg)
+        if cfg.use_post_norm:
+            y = rms_norm(y, p["post_norm_mlp"], cfg.norm_eps)
+        x = x + y
+    return x, entry
+
+
+def prefill(params, tokens, cfg, cache_len: int, *, patch_embeds=None,
+            cond=None, hints=None):
+    """Forward over the prompt, building the cache. Returns
+    (last-position logits fp32, cache)."""
+    x = tfm.embed_tokens(params, tokens, cfg)
+    if cfg.frontend == "vision" and patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(COMPUTE_DTYPE), x], axis=1)
+    if hints is not None:
+        x = hints.constrain_act(x)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.pos_embed == "sinusoidal":
+        x = x + layers.sinusoidal_pos(positions, cfg.d_model).astype(COMPUTE_DTYPE)
+    kinds = tfm.slot_kinds(cfg)
+    period = tfm.scan_period(cfg)
+
+    cache: Dict = {}
+    if "blocks" in params:
+        def body(x, pp):
+            entries = {}
+            for j in range(period):
+                x, entries[f"slot{j}"] = apply_block_prefill(
+                    pp[f"slot{j}"], x, cond, *kinds[j], cfg, positions,
+                    cache_len)
+                if hints is not None:
+                    x = hints.constrain_act(x)
+            return x, entries
+        x, cache["blocks"] = jax.lax.scan(body, x, params["blocks"])
+    if "rem" in params:
+        cache["rem"] = {}
+        for j in range(tfm.num_remainder(cfg)):
+            x, cache["rem"][f"rem{j}"] = apply_block_prefill(
+                params["rem"][f"rem{j}"], x, cond, *kinds[j], cfg, positions,
+                cache_len)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = tfm.lm_logits(params, x[:, -1:], cfg)
+    return logits, cache

@@ -1,0 +1,250 @@
+"""Blocked flash attention with a custom VJP — O(S) residuals.
+
+Without this, differentiating the attention scan saves per-step probability
+blocks (O(S²) per layer), which at train_4k/prefill_32k scale is tens of GB
+per chip. The custom VJP saves only (out, lse) and recomputes probability
+blocks in the backward pass — the textbook FlashAttention trade (≈30% more
+attention FLOPs for O(S) memory).
+
+Three masking modes share one implementation:
+    causal  — full causal (all kv blocks visited, masked above the diagonal;
+              compute upper bound 2× the causal minimum)
+    window  — sliding window w: only the ≤(w+qb)/kb blocks in the band are
+              visited (gemma2/3 local layers, mixtral SWA)
+    chunk   — llama4 iRoPE chunked attention: causal within fixed chunks
+
+Sequence sharding (the §Perf "diminished-heads" lever): ``qpos`` carries the
+GLOBAL positions of the local q rows, so the q tensor can be sharded along S
+(e.g. over the model axis under shard_map) while K/V stay replicated — each
+chip computes full attention for its own query rows. Used by
+layers._flash_call when the head count doesn't divide the TP axis.
+
+GQA layout: q (B,KV,R,Sq,D); k,v (B,KV,Sk,D). Output bf16 (fp32 accumulation
+inside — the psum-SPad precision pair). The portable-XLA twin of
+kernels/local_attention.py (the Pallas TPU kernel); both are tested against
+kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+_PAD_POS = -(2 ** 30)        # sentinel position for padded q rows
+
+
+def _block_count(S: int, b: int) -> int:
+    return (S + b - 1) // b
+
+
+def _offsets(mode: str, msize: int, qb: int, kb: int, nk: int) -> int:
+    """How many kv blocks each q block visits."""
+    if mode == "causal":
+        return nk
+    if mode == "window":
+        return min((msize - 1 + qb) // kb + 1, nk)
+    if mode == "chunk":
+        return min(msize // kb + (1 if msize % kb else 0) + 1, nk)
+    raise ValueError(mode)
+
+
+def _mask(mode: str, msize: int, Sk: int, qv, kpos):
+    m = (kpos <= qv) & (kpos >= 0) & (kpos < Sk) & (qv >= 0)
+    if mode == "window":
+        m &= (qv - kpos) < msize
+    elif mode == "chunk":
+        m &= (qv // msize) == (kpos // msize)
+    return m
+
+
+def _kv_block_index(mode: str, i, r, qstart, qb: int, kb: int, nk: int):
+    """Logical kv block for offset r of q block i (may be out of range —
+    clamped for slicing, exact value used for masking positions)."""
+    if mode == "causal":
+        return r
+    last = (qstart + qb - 1) // kb
+    return last - r
+
+
+def _fwd_impl(q, k, v, qpos, mode: str, msize: int, softcap: float,
+              qb: int, kb: int):
+    """Returns (out (B,KV,R,Sq,D) fp32, lse (B,KV,R,Sq) fp32)."""
+    B, KV, R, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    nq, nk = _block_count(Sq, qb), _block_count(Sk, kb)
+    noff = _offsets(mode, msize, qb, kb, nk)
+
+    qp = jnp.pad(q, ((0, 0),) * 3 + ((0, nq * qb - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0),) * 2 + ((0, nk * kb - Sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0),) * 2 + ((0, nk * kb - Sk), (0, 0)))
+    posp = jnp.pad(qpos, (0, nq * qb - Sq), constant_values=_PAD_POS)
+
+    def q_step(_, i):
+        qi = jax.lax.dynamic_slice_in_dim(qp, i * qb, qb, axis=3)
+        pos_i = jax.lax.dynamic_slice_in_dim(posp, i * qb, qb)
+        qstart = pos_i[0]
+        m0 = jnp.full((B, KV, R, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, R, qb), jnp.float32)
+        a0 = jnp.zeros((B, KV, R, qb, D), jnp.float32)
+
+        def kv_step(carry, r):
+            m, l, acc = carry
+            j_log = _kv_block_index(mode, i, r, qstart, qb, kb, nk)
+            j = jnp.clip(j_log, 0, nk - 1)
+            kj = jax.lax.dynamic_slice_in_dim(kp, j * kb, kb, axis=2)
+            vj = jax.lax.dynamic_slice_in_dim(vp, j * kb, kb, axis=2)
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qi.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            if softcap > 0.0:
+                s = jnp.tanh(s / softcap) * softcap
+            kpos = j_log * kb + jnp.arange(kb)
+            msk = _mask(mode, msize, Sk, pos_i[:, None], kpos[None, :])
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new[..., None]), 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            # S²-sized p feeds the MXU in bf16: halves the dominant HBM flow
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p.astype(jnp.bfloat16),
+                vj.astype(jnp.bfloat16),
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(noff))
+        l_safe = jnp.maximum(l, 1e-30)
+        return None, (acc / l_safe[..., None], m + jnp.log(l_safe))
+
+    _, (out_blocks, lse_blocks) = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = jnp.moveaxis(out_blocks, 0, 3).reshape(B, KV, R, nq * qb, D)[
+        :, :, :, :Sq]
+    lse = jnp.moveaxis(lse_blocks, 0, 3).reshape(B, KV, R, nq * qb)[
+        :, :, :, :Sq]
+    return out, lse
+
+
+def _bwd_impl(q, k, v, qpos, out, lse, do, mode: str, msize: int,
+              softcap: float, qb: int, kb: int):
+    B, KV, R, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    nq, nk = _block_count(Sq, qb), _block_count(Sk, kb)
+    noff = _offsets(mode, msize, qb, kb, nk)
+
+    padq = ((0, 0),) * 3 + ((0, nq * qb - Sq), (0, 0))
+    padk = ((0, 0),) * 2 + ((0, nk * kb - Sk), (0, 0))
+    qp = jnp.pad(q, padq)
+    op = jnp.pad(out, padq)
+    dop = jnp.pad(do, padq).astype(jnp.float32)
+    lsep = jnp.pad(lse, ((0, 0),) * 3 + ((0, nq * qb - Sq),))
+    posp = jnp.pad(qpos, (0, nq * qb - Sq), constant_values=_PAD_POS)
+    kp = jnp.pad(k, padk)
+    vp = jnp.pad(v, padk)
+
+    Drow = jnp.sum(dop * op.astype(jnp.float32), axis=-1)      # (B,KV,R,Sq)
+
+    dk0 = jnp.zeros((B, KV, nk * kb, D), jnp.float32)
+    dv0 = jnp.zeros_like(dk0)
+
+    def q_step(carry, i):
+        dk, dv = carry
+        qi = jax.lax.dynamic_slice_in_dim(qp, i * qb, qb, axis=3)
+        oi = jax.lax.dynamic_slice_in_dim(dop, i * qb, qb, axis=3)
+        li = jax.lax.dynamic_slice_in_dim(lsep, i * qb, qb, axis=3)
+        Di = jax.lax.dynamic_slice_in_dim(Drow, i * qb, qb, axis=3)
+        pos_i = jax.lax.dynamic_slice_in_dim(posp, i * qb, qb)
+        qstart = pos_i[0]
+
+        def kv_step(inner, r):
+            dqi, dk, dv = inner
+            j_log = _kv_block_index(mode, i, r, qstart, qb, kb, nk)
+            j = jnp.clip(j_log, 0, nk - 1)
+            kj = jax.lax.dynamic_slice_in_dim(kp, j * kb, kb, axis=2)
+            vj = jax.lax.dynamic_slice_in_dim(vp, j * kb, kb, axis=2)
+            s_pre = jnp.einsum("bgrqd,bgkd->bgrqk", qi.astype(jnp.float32),
+                               kj.astype(jnp.float32)) * scale
+            if softcap > 0.0:
+                t = jnp.tanh(s_pre / softcap)
+                s = t * softcap
+            else:
+                s = s_pre
+            kpos = j_log * kb + jnp.arange(kb)
+            msk = _mask(mode, msize, Sk, pos_i[:, None], kpos[None, :])
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            p = jnp.where(s > NEG_INF / 2, jnp.exp(s - li[..., None]), 0.0)
+            dp = jnp.einsum("bgrqd,bgkd->bgrqk", oi, vj.astype(jnp.float32))
+            ds = p * (dp - Di[..., None])
+            if softcap > 0.0:
+                ds = ds * (1.0 - jnp.square(t))
+            ds = jnp.where(msk[None, None, None], ds, 0.0)
+            ds16 = ds.astype(jnp.bfloat16)        # S²-sized: bf16 to the MXU
+            p16 = p.astype(jnp.bfloat16)
+            dqi = dqi + scale * jnp.einsum(
+                "bgrqk,bgkd->bgrqd", ds16, kj.astype(jnp.bfloat16),
+                preferred_element_type=jnp.float32)
+            dk_blk = scale * jnp.einsum(
+                "bgrqk,bgrqd->bgkd", ds16, qi.astype(jnp.bfloat16),
+                preferred_element_type=jnp.float32)
+            dv_blk = jnp.einsum("bgrqk,bgrqd->bgkd", p16,
+                                oi.astype(jnp.bfloat16),
+                                preferred_element_type=jnp.float32)
+            dk_cur = jax.lax.dynamic_slice_in_dim(dk, j * kb, kb, axis=2)
+            dv_cur = jax.lax.dynamic_slice_in_dim(dv, j * kb, kb, axis=2)
+            dk = jax.lax.dynamic_update_slice_in_dim(dk, dk_cur + dk_blk,
+                                                     j * kb, axis=2)
+            dv = jax.lax.dynamic_update_slice_in_dim(dv, dv_cur + dv_blk,
+                                                     j * kb, axis=2)
+            return (dqi, dk, dv), None
+
+        dq0 = jnp.zeros((B, KV, R, qb, D), jnp.float32)
+        (dqi, dk, dv), _ = jax.lax.scan(kv_step, (dq0, dk, dv),
+                                        jnp.arange(noff))
+        return (dk, dv), dqi
+
+    (dk, dv), dq_blocks = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dq_blocks, 0, 3).reshape(B, KV, R, nq * qb, D)[
+        :, :, :, :Sq]
+    return dq, dk[:, :, :Sk], dv[:, :, :Sk]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _flash(q, k, v, qpos, mode: str, msize: int, softcap: float,
+           qb: int, kb: int):
+    out, _ = _fwd_impl(q, k, v, qpos, mode, msize, softcap, qb, kb)
+    return out.astype(jnp.bfloat16)
+
+
+def _fa_fwd(q, k, v, qpos, mode, msize, softcap, qb, kb):
+    out, lse = _fwd_impl(q, k, v, qpos, mode, msize, softcap, qb, kb)
+    out16 = out.astype(jnp.bfloat16)
+    return out16, (q, k, v, qpos, out16, lse)
+
+
+def _fa_bwd(mode, msize, softcap, qb, kb, res, dout):
+    q, k, v, qpos, out, lse = res
+    dq, dk, dv = _bwd_impl(q, k, v, qpos, out, lse, dout, mode, msize,
+                           softcap, qb, kb)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), None
+
+
+_flash.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q, k, v, mode: str = "causal", msize: int = 0,
+                    softcap: float = 0.0, qb: int = 512, kb: int = 512,
+                    qpos: Optional[jnp.ndarray] = None):
+    """q (B,KV,R,Sq,D); k,v (B,KV,Sk,D) -> out (B,KV,R,Sq,D) bf16.
+
+    ``qpos`` (Sq,) int32: global positions of the q rows (sequence-sharded
+    attention); defaults to arange(Sq) (q and k cover the same positions).
+    """
+    if qpos is None:
+        qpos = jnp.arange(q.shape[3], dtype=jnp.int32)
+    return _flash(q, k, v, qpos.astype(jnp.int32), mode, msize, softcap,
+                  qb, kb)

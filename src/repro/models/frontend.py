@@ -1,0 +1,29 @@
+"""Stub modality frontends (per spec: ``input_specs()`` provides precomputed
+frame/patch embeddings; the ViT / EnCodec encoders themselves are NOT built).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE
+
+
+def patch_embed_spec(batch: int, cfg):
+    return jax.ShapeDtypeStruct((batch, cfg.num_patches, cfg.d_model),
+                                COMPUTE_DTYPE)
+
+
+def cond_embed_spec(batch: int, cfg):
+    return jax.ShapeDtypeStruct((batch, cfg.cross_attn_cond, cfg.d_model),
+                                COMPUTE_DTYPE)
+
+
+def synth_patch_embeds(rng, batch: int, cfg):
+    return jax.random.normal(rng, (batch, cfg.num_patches, cfg.d_model),
+                             COMPUTE_DTYPE) * 0.02
+
+
+def synth_cond_embeds(rng, batch: int, cfg):
+    return jax.random.normal(rng, (batch, cfg.cross_attn_cond, cfg.d_model),
+                             COMPUTE_DTYPE) * 0.02

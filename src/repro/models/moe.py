@@ -1,0 +1,177 @@
+"""Mixture-of-Experts layer with sort-based (gather/scatter) dispatch.
+
+Top-k routing IS the paper's sparsity insight applied at layer granularity: each
+token touches k/E of the weights — the diminished-reuse regime in which the
+HM-planner picks the "unicast" (expert-parallel) mode (DESIGN.md §4).
+
+Dispatch is sort-based and *per batch row* (vmapped) so each data shard sorts
+locally — no global sort collectives. One-hot einsum dispatch (Mesh-TF style)
+would add B·S·k·E·C·d FLOPs (8× the expert GEMMs at E=128); gather/scatter
+dispatch moves bytes instead, which is what the roofline wants.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (ACCUM_DTYPE, COMPUTE_DTYPE, PARAM_DTYPE,
+                                 cast_compute, constrain, dense_init)
+
+
+def init_moe_params(rng, cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E)),
+        "wg": dense_init(ks[1], (E, d, f), in_axis=1),
+        "wu": dense_init(ks[2], (E, d, f), in_axis=1),
+        "wd": dense_init(ks[3], (E, f, d), in_axis=1),
+    }
+    if cfg.shared_expert:
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {"wg": dense_init(kk[0], (d, f)),
+                       "wu": dense_init(kk[1], (d, f)),
+                       "wd": dense_init(kk[2], (f, d))}
+    return p
+
+
+def expert_capacity(tokens_per_row: int, cfg) -> int:
+    c = math.ceil(tokens_per_row * cfg.experts_per_token *
+                  cfg.capacity_factor / cfg.num_experts)
+    return max(8, ((c + 7) // 8) * 8)  # pad to 8 for clean tiling
+
+
+def _dispatch_row(x_row, eid_row, gate_row, E: int, C: int):
+    """Single batch row. x_row (S,d); eid/gate (S,K). Returns
+    expert_in (E,C,d), meta for combine."""
+    S, K = eid_row.shape
+    d = x_row.shape[-1]
+    T = S * K
+    flat_e = eid_row.reshape(T)
+    flat_g = gate_row.reshape(T)
+    tok_idx = jnp.repeat(jnp.arange(S), K)
+    order = jnp.argsort(flat_e)                       # stable, groups experts
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos = jnp.arange(T) - starts[sorted_e]            # slot within expert
+    keep = pos < C
+    pos_c = jnp.clip(pos, 0, C - 1)
+    xs = x_row[tok_idx[order]]                        # (T,d) gathered
+    xs = jnp.where(keep[:, None], xs, 0)
+    buf = jnp.zeros((E, C, d), x_row.dtype)
+    buf = buf.at[sorted_e, pos_c].add(xs, mode="drop")
+    meta = (order, sorted_e, pos_c, keep, tok_idx, flat_g)
+    return buf, meta
+
+
+def _combine_row(expert_out, meta, S: int):
+    order, sorted_e, pos_c, keep, tok_idx, flat_g = meta
+    vals = expert_out[sorted_e, pos_c]                # (T,d)
+    g = flat_g[order]
+    vals = jnp.where(keep[:, None], vals, 0) * g[:, None].astype(vals.dtype)
+    out = jnp.zeros((S, expert_out.shape[-1]), expert_out.dtype)
+    out = out.at[tok_idx[order]].add(vals, mode="drop")
+    return out
+
+
+def moe_layer_decode(params, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode-time MoE (S==1): compute all experts densely, combine by gates.
+
+    At one token per row, sort-dispatch pads every expert to capacity — up to
+    E·C/k wasted FLOPs. Dense-all-experts instead mirrors what an EP shard
+    really does at decode: read the local expert weights once, apply to the few
+    resident tokens; compute is trivial, HBM weight traffic dominates (and the
+    roofline correctly shows the layer as memory-bound).
+    """
+    E, K = cfg.num_experts, cfg.experts_per_token
+    logits = jnp.einsum("bsd,de->bse", x, cast_compute(params["router"]),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eids = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    gates_full = jnp.sum(
+        jax.nn.one_hot(eids, E, dtype=jnp.float32) * gate_vals[..., None],
+        axis=2)                                        # (B,S,E)
+    act = jax.nn.silu if cfg.mlp_act == "silu" else \
+        (lambda t: jax.nn.gelu(t, approximate=True))
+    g = jnp.einsum("bsd,edf->ebsf", x, cast_compute(params["wg"]),
+                   preferred_element_type=ACCUM_DTYPE)
+    u = jnp.einsum("bsd,edf->ebsf", x, cast_compute(params["wu"]),
+                   preferred_element_type=ACCUM_DTYPE)
+    h = (act(g) * u).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("ebsf,efd->ebsd", h, cast_compute(params["wd"]),
+                     preferred_element_type=ACCUM_DTYPE)
+    y = jnp.einsum("ebsd,bse->bsd", out,
+                   gates_full).astype(COMPUTE_DTYPE)
+    if cfg.shared_expert:
+        sp = params["shared"]
+        sg = jnp.einsum("bsd,df->bsf", x, cast_compute(sp["wg"]),
+                        preferred_element_type=ACCUM_DTYPE)
+        su = jnp.einsum("bsd,df->bsf", x, cast_compute(sp["wu"]),
+                        preferred_element_type=ACCUM_DTYPE)
+        sh = (act(sg) * su).astype(COMPUTE_DTYPE)
+        y = y + jnp.einsum("bsf,fd->bsd", sh, cast_compute(sp["wd"]),
+                           preferred_element_type=ACCUM_DTYPE).astype(COMPUTE_DTYPE)
+    return y, jnp.zeros((), jnp.float32)
+
+
+def moe_layer(params, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,d) -> (y (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    if S <= 8:
+        return moe_layer_decode(params, x, cfg)
+    x = constrain(x)          # pin the dispatch input (scatter operands follow)
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = expert_capacity(S, cfg)
+    logits = jnp.einsum("bsd,de->bse", x, cast_compute(params["router"]),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eids = jax.lax.top_k(probs, K)          # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- aux load-balance loss (Switch/Mixtral style)
+    me = jnp.mean(probs, axis=(0, 1))                                # (E,)
+    ce = jnp.mean((jax.nn.one_hot(eids, E).sum(axis=2) > 0), axis=(0, 1))
+    aux = jnp.sum(me * ce) * E
+
+    expert_in, meta = jax.vmap(
+        lambda xr, er, gr: _dispatch_row(xr, er, gr, E, C),
+        out_axes=(1, 0))(x, eids, gate_vals)
+    # expert_in (E,B,C,d), expert-leading so the batched dot partitions/executes
+    # cleanly (EP shards the leading axis; CPU DotThunk needs leading batch).
+    # The E-dim constraint IS the MoE all-to-all: tokens leave the dp layout
+    # and land expert-sharded (paper's interleaved-multicast, DESIGN.md §4).
+    ecand = [(0, (E,))]                  # EP if E divides the model axis
+    fcand = [(0, (E,)), (3, (cfg.d_ff,))]  # else TP over d_ff
+    expert_in = constrain(expert_in, batch_dim=1, tp_candidates=ecand)
+    act = jax.nn.silu if cfg.mlp_act == "silu" else \
+        (lambda t: jax.nn.gelu(t, approximate=True))
+    g = jnp.einsum("ebcd,edf->ebcf", expert_in, cast_compute(params["wg"]),
+                   preferred_element_type=ACCUM_DTYPE)
+    u = jnp.einsum("ebcd,edf->ebcf", expert_in, cast_compute(params["wu"]),
+                   preferred_element_type=ACCUM_DTYPE)
+    h = constrain((act(g) * u).astype(COMPUTE_DTYPE), batch_dim=1,
+                  tp_candidates=fcand)
+    # row-parallel expert down-proj in bf16 (TP all-reduce halves, §Perf C2)
+    out = jnp.einsum("ebcf,efd->ebcd", h, cast_compute(params["wd"]),
+                     preferred_element_type=COMPUTE_DTYPE)
+    out = constrain(out, batch_dim=1, tp_candidates=ecand)
+    y = jax.vmap(lambda eo, m: _combine_row(eo, m, S),
+                 in_axes=(1, 0))(out, meta)
+    y = constrain(y)
+
+    if cfg.shared_expert:
+        sp = params["shared"]
+        sg = jnp.einsum("bsd,df->bsf", x, cast_compute(sp["wg"]),
+                        preferred_element_type=ACCUM_DTYPE)
+        su = jnp.einsum("bsd,df->bsf", x, cast_compute(sp["wu"]),
+                        preferred_element_type=ACCUM_DTYPE)
+        sh = (act(sg) * su).astype(COMPUTE_DTYPE)
+        y = y + jnp.einsum("bsf,fd->bsd", sh, cast_compute(sp["wd"]),
+                           preferred_element_type=ACCUM_DTYPE).astype(COMPUTE_DTYPE)
+    return y, aux

@@ -1,0 +1,128 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Training uses ``jax.lax.associative_scan`` over the linear recurrence
+h_t = a_t ⊙ h_{t-1} + b_t — log-depth, MXU/VPU-friendly, the TPU-native stand-in
+for the ASIC's sequential PE recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (ACCUM_DTYPE, COMPUTE_DTYPE, PARAM_DTYPE,
+                                 cast_compute, constrain, dense_init)
+
+_C = 8.0                 # Griffin's fixed gate exponent scale
+_NUM_BLOCKS = 8          # block-diagonal gate projections
+_CONV_K = 4
+
+
+def init_rglru_params(rng, cfg):
+    d, w = cfg.d_model, cfg.lru_width
+    nb = _NUM_BLOCKS
+    bs = w // nb
+    ks = jax.random.split(rng, 8)
+    return {
+        "in_x": dense_init(ks[0], (d, w)),        # recurrent branch input
+        "in_gate": dense_init(ks[1], (d, w)),     # gelu gate branch
+        "conv_w": dense_init(ks[2], (_CONV_K, w), in_axis=0),
+        "conv_b": jnp.zeros((w,), PARAM_DTYPE),
+        "w_input_gate": dense_init(ks[3], (nb, bs, bs), in_axis=1),
+        "b_input_gate": jnp.zeros((nb, bs), PARAM_DTYPE),
+        "w_rec_gate": dense_init(ks[4], (nb, bs, bs), in_axis=1),
+        "b_rec_gate": jnp.zeros((nb, bs), PARAM_DTYPE),
+        # Lambda init so a^c = sigmoid(L)^c lands in [0.9, 0.999]
+        "Lambda": (jax.random.uniform(ks[5], (w,), jnp.float32,
+                                      minval=2.2, maxval=6.9)).astype(PARAM_DTYPE),
+        "out_proj": dense_init(ks[6], (w, d)),
+    }
+
+
+def _block_diag_proj(x, w, b):
+    """x (..., nb*bs) @ block-diag w (nb, bs, bs) + b."""
+    nb, bs, _ = w.shape
+    xr = x.reshape(x.shape[:-1] + (nb, bs))
+    y = jnp.einsum("...nb,nbc->...nc", xr.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y.reshape(x.shape)
+
+
+def _gates(params, x):
+    """x (..., w) -> (log_a, gated_input) in fp32."""
+    i_gate = jax.nn.sigmoid(_block_diag_proj(x, params["w_input_gate"],
+                                             params["b_input_gate"]))
+    r_gate = jax.nn.sigmoid(_block_diag_proj(x, params["w_rec_gate"],
+                                             params["b_rec_gate"]))
+    log_a = -_C * r_gate * jax.nn.softplus(params["Lambda"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) normalizer keeps the recurrence norm-preserving
+    norm = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bt = norm * i_gate * x.astype(jnp.float32)
+    return a, bt
+
+
+def _causal_conv1d(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for k in range(K):
+        out = out + xp[:, k:k + x.shape[1], :].astype(jnp.float32) * \
+            w[k].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def rglru_block(params, x, cfg, return_state: bool = False):
+    """Full Griffin recurrent block. x (b,l,d) -> (b,l,d) [, decode state]."""
+    gate = constrain(jax.nn.gelu(
+        jnp.einsum("bld,dw->blw", x, cast_compute(params["in_gate"]),
+                   preferred_element_type=ACCUM_DTYPE), approximate=True))
+    xr = constrain(jnp.einsum("bld,dw->blw", x, cast_compute(params["in_x"]),
+                              preferred_element_type=ACCUM_DTYPE
+                              ).astype(COMPUTE_DTYPE))
+    conv = _causal_conv1d(xr, params["conv_w"], params["conv_b"])
+    a, bt = _gates(params, conv)                                 # fp32 (b,l,w)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bt), axis=1)
+    y = (h * gate.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("blw,wd->bld", y, cast_compute(params["out_proj"]),
+                     preferred_element_type=ACCUM_DTYPE).astype(COMPUTE_DTYPE)
+    if not return_state:
+        return out
+    l = x.shape[1]
+    K = _CONV_K
+    if l >= K - 1:
+        conv_state = xr[:, l - (K - 1):]
+    else:
+        conv_state = jnp.pad(xr, ((0, 0), (K - 1 - l, 0), (0, 0)))
+    return out, {"conv": conv_state, "h": h[:, -1]}
+
+
+def rglru_block_decode(params, x, state, cfg):
+    """One-token step. state: {conv (b,K-1,w), h (b,w) fp32}."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bld,dw->blw", x, cast_compute(params["in_gate"]),
+                   preferred_element_type=ACCUM_DTYPE), approximate=True)
+    xr = jnp.einsum("bld,dw->blw", x, cast_compute(params["in_x"]),
+                    preferred_element_type=ACCUM_DTYPE).astype(COMPUTE_DTYPE)
+    window = jnp.concatenate([state["conv"], xr], axis=1)         # (b,K,w)
+    conv = jnp.einsum("bkw,kw->bw", window.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32)) + \
+        params["conv_b"].astype(jnp.float32)
+    a, bt = _gates(params, conv.astype(COMPUTE_DTYPE))            # (b,w)
+    h = a * state["h"] + bt
+    y = (h[:, None, :] * gate.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("blw,wd->bld", y, cast_compute(params["out_proj"]),
+                     preferred_element_type=ACCUM_DTYPE).astype(COMPUTE_DTYPE)
+    return out, {"conv": window[:, 1:], "h": h}
+
+
+def init_rglru_state(batch: int, cfg):
+    return {
+        "conv": jnp.zeros((batch, _CONV_K - 1, cfg.lru_width), COMPUTE_DTYPE),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }

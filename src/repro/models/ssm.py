@@ -1,0 +1,225 @@
+"""Mamba-2 SSD (state-space duality) block — chunked matmul form + decode recurrence.
+
+The chunked SSD algorithm (arXiv:2405.21060 §6) is already MXU-friendly: the
+intra-chunk term is a masked (chunk×chunk) matmul and the inter-chunk term is a
+short scan over chunk states — this is the TPU-native adaptation (DESIGN.md §2):
+no per-element cycle skipping, all compute lands on the systolic array.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import (ACCUM_DTYPE, COMPUTE_DTYPE, PARAM_DTYPE,
+                                 cast_compute, constrain, dense_init, rms_norm)
+
+
+def _segsum(a):
+    """a (..., T) -> (..., T, T): out[i,j] = sum_{k in (j, i]} a[k], -inf above diag."""
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    T = a.shape[-1]
+    mask = jnp.arange(T)[:, None] >= jnp.arange(T)[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _rep_groups(x, h):
+    """(..., g, n) -> (..., h, n) by repeating each group h//g times."""
+    g = x.shape[-2]
+    return jnp.repeat(x, h // g, axis=-2)
+
+
+def ssd_chunked(x, dt, A_log, B, C, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x  (b, l, h, p)   per-head inputs
+    dt (b, l, h)      softplus-ed timestep
+    A_log (h,)        A = -exp(A_log)
+    B, C (b, l, g, n) input/output projections (g groups)
+    Returns y (b, l, h, p), final_state (b, h, n, p).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[-2], B.shape[-1]
+    c = min(chunk, l)
+    while l % c:
+        c //= 2
+    nc = l // c
+    A = -jnp.exp(A_log.astype(jnp.float32))                      # (h,)
+    a = dt.astype(jnp.float32) * A                               # (b,l,h) log-decay
+    xr = constrain(x.reshape(b, nc, c, h, p))
+    dtr = dt.reshape(b, nc, c, h).astype(jnp.float32)
+    ar = a.reshape(b, nc, c, h)
+    Br = constrain(_rep_groups(B.reshape(b, nc, c, g, n), h))    # (b,nc,c,h,n)
+    Cr = constrain(_rep_groups(C.reshape(b, nc, c, g, n), h))
+
+    a_t = ar.transpose(0, 1, 3, 2)                               # (b,nc,h,c)
+    a_cum = jnp.cumsum(a_t, axis=-1)                             # (b,nc,h,c)
+    L = jnp.exp(_segsum(a_t))                                    # (b,nc,h,c,c)
+
+    # ---- intra-chunk (block-diagonal) term
+    # every (b,...)-leading intermediate is pinned batch-sharded: the scan-bwd
+    # cotangents otherwise lose the batch sharding and replicate (DESIGN §5)
+    CB = constrain(jnp.einsum("bzihn,bzjhn->bzhij", Cr, Br,
+                              preferred_element_type=jnp.float32))  # (b,nc,h,c,c)
+    M = CB * L * dtr.transpose(0, 1, 3, 2)[:, :, :, None, :]     # weight by dt_j
+    Y_diag = constrain(jnp.einsum(
+        "bzhij,bzjhp->bzihp", M.astype(COMPUTE_DTYPE),
+        xr.astype(COMPUTE_DTYPE), preferred_element_type=jnp.float32))
+
+    # ---- chunk states: S_z = sum_j exp(a_cum[z,-1] - a_cum[z,j]) dt_j B_j x_j^T
+    decay = jnp.exp(a_cum[..., -1:] - a_cum)                     # (b,nc,h,c)
+    w = (decay * dtr.transpose(0, 1, 3, 2)).transpose(0, 1, 3, 2)  # (b,nc,c,h)
+    states = constrain(jnp.einsum(
+        "bzch,bzchn,bzchp->bzhnp",
+        w.astype(COMPUTE_DTYPE), Br.astype(COMPUTE_DTYPE),
+        xr.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32))                     # (b,nc,h,n,p)
+
+    # ---- inter-chunk recurrence over nc chunks
+    a_tot = a_cum[..., -1]                                       # (b,nc,h)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def chunk_step(s_prev, inp):
+        st, at = inp                                             # (b,h,n,p), (b,h)
+        s_new = constrain(s_prev * jnp.exp(at)[..., None, None] + st)
+        return s_new, s_prev
+
+    (final_state, prev_states) = jax.lax.scan(
+        chunk_step, init_state,
+        (states.transpose(1, 0, 2, 3, 4), a_tot.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)           # (b,nc,h,n,p)
+
+    # ---- contribution of the carried state: Y_off[i] = exp(a_cum[i]) C_i · S_prev
+    Y_off = constrain(jnp.einsum(
+        "bzchn,bzhnp,bzhc->bzchp",
+        Cr.astype(COMPUTE_DTYPE),
+        constrain(prev_states.astype(COMPUTE_DTYPE)),
+        jnp.exp(a_cum).astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32))
+    y = (Y_diag + Y_off).reshape(b, l, h, p)
+    return y.astype(COMPUTE_DTYPE), final_state
+
+
+def ssd_decode_step(state, x, dt, A_log, B, C):
+    """One-token recurrence. state (b,h,n,p); x (b,h,p); dt (b,h); B,C (b,g,n)."""
+    h = x.shape[1]
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32) * A)                     # (b,h)
+    Bh = _rep_groups(B, h).astype(jnp.float32)                   # (b,h,n)
+    Ch = _rep_groups(C, h).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt.astype(jnp.float32), Bh,
+                     x.astype(jnp.float32))
+    state = state * da[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    return y.astype(COMPUTE_DTYPE), state
+
+
+# --------------------------------------------------------------------- block
+def init_ssm_params(rng, cfg):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, hs = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    K = cfg.ssm_conv_kernel
+    conv_ch = di + 2 * g * n
+    ks = jax.random.split(rng, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * g * n + hs)),
+        "conv_w": dense_init(ks[1], (K, conv_ch), in_axis=0),
+        "conv_b": jnp.zeros((conv_ch,), PARAM_DTYPE),
+        "A_log": jnp.zeros((hs,), PARAM_DTYPE),
+        "D": jnp.ones((hs,), PARAM_DTYPE),
+        "dt_bias": jnp.zeros((hs,), PARAM_DTYPE),
+        "gate_norm": jnp.zeros((di,), PARAM_DTYPE),
+        "out_proj": dense_init(ks[2], (di, d)),
+    }
+
+
+def _causal_conv1d(x, w, b):
+    """Depthwise causal conv. x (b,l,ch), w (K,ch)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, shape=x.shape).astype(jnp.float32)
+    for k in range(K):  # K is tiny (4); unrolled taps beat conv lowering here
+        out = out + xp[:, k:k + x.shape[1], :].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssm_block(params, x, cfg, return_state: bool = False):
+    """Full Mamba-2 mixer. x (b,l,d) -> (b,l,d) [, decode state]."""
+    b, l, d = x.shape
+    di, g, n, hs = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    p = cfg.ssm_headdim
+    K = cfg.ssm_conv_kernel
+    zxbcdt = jnp.einsum("bld,de->ble", x, cast_compute(params["in_proj"]),
+                        preferred_element_type=ACCUM_DTYPE).astype(COMPUTE_DTYPE)
+    # the (2di+2gn+hs)-wide projection is rarely axis-divisible: keep it
+    # batch-sharded so the splits below are communication-free
+    zxbcdt = constrain(zxbcdt)
+    z, xin, B, C, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv1d(conv_in, params["conv_w"],
+                                          params["conv_b"]))
+    conv_out = constrain(conv_out)
+    xin, B, C = jnp.split(conv_out, [di, di + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    xh = xin.reshape(b, l, hs, p)
+    Bh = B.reshape(b, l, g, n)
+    Ch = C.reshape(b, l, g, n)
+    y, final_state = ssd_chunked(xh, dt, params["A_log"], Bh, Ch, cfg.ssm_chunk)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = constrain(y.reshape(b, l, di).astype(COMPUTE_DTYPE))
+    y = rms_norm((y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+                  ).astype(COMPUTE_DTYPE), params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, cast_compute(params["out_proj"]),
+                     preferred_element_type=ACCUM_DTYPE).astype(COMPUTE_DTYPE)
+    if not return_state:
+        return out
+    if l >= K - 1:
+        conv_state = conv_in[:, l - (K - 1):]
+    else:
+        conv_state = jnp.pad(conv_in, ((0, 0), (K - 1 - l, 0), (0, 0)))
+    return out, {"conv": conv_state, "ssd": final_state}
+
+
+def ssm_block_decode(params, x, state, cfg):
+    """One-token step. x (b,1,d); state dict with conv (b,K-1,ch), ssd (b,h,n,p)."""
+    b = x.shape[0]
+    di, g, n, hs = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    p = cfg.ssm_headdim
+    K = cfg.ssm_conv_kernel
+    zxbcdt = jnp.einsum("bld,de->ble", x, cast_compute(params["in_proj"]),
+                        preferred_element_type=ACCUM_DTYPE).astype(COMPUTE_DTYPE)
+    z, xin, B, C, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)[:, 0]        # (b,ch)
+    window = jnp.concatenate([state["conv"], conv_in[:, None, :]], axis=1)  # (b,K,ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    conv_out = conv_out.astype(COMPUTE_DTYPE)
+    xin, B, C = (conv_out[:, :di], conv_out[:, di:di + g * n],
+                 conv_out[:, di + g * n:])
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    y, ssd_state = ssd_decode_step(state["ssd"], xin.reshape(b, hs, p), dt,
+                                   params["A_log"], B.reshape(b, g, n),
+                                   C.reshape(b, g, n))
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * \
+        xin.reshape(b, hs, p).astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(COMPUTE_DTYPE)
+    y = rms_norm((y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+                  ).astype(COMPUTE_DTYPE), params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, cast_compute(params["out_proj"]),
+                     preferred_element_type=ACCUM_DTYPE).astype(COMPUTE_DTYPE)
+    new_state = {"conv": window[:, 1:], "ssd": ssd_state}
+    return out, new_state
+
+
+def init_ssm_state(batch: int, cfg):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_kernel - 1, conv_ch), COMPUTE_DTYPE),
+        "ssd": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_headdim),
+                         jnp.float32),
+    }

@@ -1,0 +1,3 @@
+from repro.runtime import elastic, fault_tolerance
+
+__all__ = ["elastic", "fault_tolerance"]

@@ -1,0 +1,41 @@
+"""Elastic scaling: re-shard a checkpoint onto whatever mesh currently exists.
+
+Checkpoints are stored by logical shape (checkpoint.manager), so scaling a job
+from N to M pods — or degrading around a dead host — is: build the new mesh,
+re-run the planner for the new MeshDesc, and restore with the new shardings.
+No checkpoint conversion step.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.planner import MeshDesc, plan_model
+from repro.sharding import autoshard, specs as sspec
+
+
+def mesh_desc(mesh: Mesh) -> MeshDesc:
+    sizes = sspec.mesh_axis_sizes(mesh)
+    return MeshDesc(pod=sizes.get("pod", 1), data=sizes.get("data", 1),
+                    model=sizes.get("model", 1))
+
+
+def restore_elastic(ckpt: CheckpointManager, abstract_state, cfg, shape_cfg,
+                    mesh: Mesh, step: Optional[int] = None) -> Tuple[Any, dict]:
+    """Restore (params, opt_state) onto ``mesh``, re-planning shardings."""
+    plan = plan_model(cfg, shape_cfg, mesh_desc(mesh))
+    ma = sspec.mesh_axis_sizes(mesh)
+    from jax.sharding import PartitionSpec as P
+
+    params_abs, opt_abs = abstract_state
+    p_specs = autoshard.param_specs(params_abs, plan, ma)
+    p_sh = sspec.tree_named(mesh, p_specs)
+    # optimizer moments share the param specs; step is replicated
+    o_specs = type(opt_abs)(step=P(), mu=p_specs, nu=p_specs)
+    o_sh = sspec.tree_named(mesh, o_specs)
+    state, manifest = ckpt.restore((params_abs, opt_abs), step=step,
+                                   shardings=(p_sh, o_sh))
+    return state, manifest

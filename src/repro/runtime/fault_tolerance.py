@@ -1,0 +1,145 @@
+"""Fault tolerance: supervised train loop with checkpoint/restart, heartbeat
+tracking, straggler detection/mitigation, and failure injection for tests.
+
+At 1000+ nodes the assumptions are: (a) any step can fail (preemption, ICI
+link flap, host OOM), (b) stragglers are common, (c) the job must make forward
+progress without human action. The Supervisor provides:
+
+ * periodic checkpoints + restore-on-restart (CheckpointManager);
+ * a retry budget with exponential backoff — a failed step re-executes from
+   the last checkpoint (the step function is pure, the data pipeline is
+   stateless-indexable, so replay is exact);
+ * straggler policy: step times exceeding ``straggler_factor × running
+   median`` are logged and counted; persistent stragglers trigger the
+   ``on_straggler`` callback (at scale: re-dispatch the shard / evict the
+   host — here: pluggable, default logs);
+ * heartbeat file (host liveness signal an external watchdog can consume).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import statistics
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass
+class FaultToleranceConfig:
+    checkpoint_dir: str
+    checkpoint_every: int = 50
+    keep: int = 3
+    max_retries: int = 3
+    backoff_s: float = 0.1
+    straggler_factor: float = 3.0
+    straggler_patience: int = 3
+    heartbeat_path: Optional[str] = None
+
+
+class StragglerDetector:
+    def __init__(self, factor: float, patience: int):
+        self.factor = factor
+        self.patience = patience
+        self.times: List[float] = []
+        self.strikes = 0
+        self.events: List[Dict] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step is flagged as a straggler."""
+        flagged = False
+        if len(self.times) >= 5:
+            med = statistics.median(self.times[-50:])
+            if dt > self.factor * med:
+                flagged = True
+                self.strikes += 1
+                self.events.append({"step": step, "dt": dt, "median": med})
+            else:
+                self.strikes = max(self.strikes - 1, 0)
+        self.times.append(dt)
+        return flagged
+
+    @property
+    def persistent(self) -> bool:
+        return self.strikes >= self.patience
+
+
+class Supervisor:
+    """Drives (step_fn, data_fn) with checkpoint/restart + straggler policy.
+
+    step_fn(state, batch) -> (state, metrics); must be pure (replayable).
+    data_fn(step) -> batch; must be stateless-indexable (data.pipeline is).
+    """
+
+    def __init__(self, cfg: FaultToleranceConfig, step_fn: Callable,
+                 data_fn: Callable, init_state_fn: Callable,
+                 on_straggler: Optional[Callable] = None,
+                 failure_injector: Optional[Callable] = None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.data_fn = data_fn
+        self.init_state_fn = init_state_fn
+        self.on_straggler = on_straggler or (lambda det: None)
+        self.failure_injector = failure_injector
+        self.ckpt = CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep)
+        self.detector = StragglerDetector(cfg.straggler_factor,
+                                          cfg.straggler_patience)
+        self.restarts = 0
+
+    # -------------------------------------------------------------- plumbing
+    def _heartbeat(self, step: int):
+        if self.cfg.heartbeat_path:
+            with open(self.cfg.heartbeat_path, "w") as f:
+                json.dump({"step": step, "time": time.time(),
+                           "restarts": self.restarts}, f)
+
+    def _restore_or_init(self):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return 0, self.init_state_fn()
+        state = self.init_state_fn()
+        restored, manifest = self.ckpt.restore(state, step=latest)
+        return latest + 1, restored
+
+    # ------------------------------------------------------------------ run
+    def run(self, num_steps: int) -> Dict[str, Any]:
+        start, state = self._restore_or_init()
+        metrics_log: List[Dict] = []
+        step = start
+        while step < num_steps:
+            batch = self.data_fn(step)
+            attempt = 0
+            while True:
+                try:
+                    if self.failure_injector is not None:
+                        self.failure_injector(step, attempt)
+                    t0 = time.monotonic()
+                    state, metrics = self.step_fn(state, batch)
+                    dt = time.monotonic() - t0
+                    break
+                except Exception as e:  # noqa: BLE001 — node failure surface
+                    attempt += 1
+                    self.restarts += 1
+                    if attempt > self.cfg.max_retries:
+                        raise RuntimeError(
+                            f"step {step}: retry budget exhausted") from e
+                    time.sleep(self.cfg.backoff_s * (2 ** (attempt - 1)))
+                    # restart from the last durable state
+                    start2, state = self._restore_or_init()
+                    step = start2
+                    batch = self.data_fn(step)
+            if self.detector.observe(step, dt):
+                if self.detector.persistent:
+                    self.on_straggler(self.detector)
+            metrics_log.append({"step": step, **{k: float(v) for k, v in
+                                                 metrics.items()}})
+            if (step + 1) % self.cfg.checkpoint_every == 0 or \
+                    step == num_steps - 1:
+                self.ckpt.save(step, state)
+            self._heartbeat(step)
+            step += 1
+        return {"metrics": metrics_log, "restarts": self.restarts,
+                "straggler_events": self.detector.events,
+                "final_step": step - 1}

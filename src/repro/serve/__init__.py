@@ -1,0 +1,3 @@
+from repro.serve import engine, kvcache
+
+__all__ = ["engine", "kvcache"]

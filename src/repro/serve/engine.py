@@ -1,0 +1,135 @@
+"""Batched serving engine: prefill + decode steps, sampling, slot management.
+
+``serve_step``/``prefill_step`` are the functions the dry-run lowers for the
+``decode_*``/``prefill_*`` shapes. The ``DecodeEngine`` adds a host-side
+continuous-batching loop (slot refill on EOS) used by examples/serve_lm.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decoding, transformer as tfm
+
+
+def make_serve_step(cfg) -> Callable:
+    """(params, cache, tokens, pos[, cond]) -> (logits, new_cache)."""
+    def serve_step(params, cache, tokens, pos, cond=None):
+        return decoding.serve_step(params, cache, tokens, pos, cfg, cond=cond)
+    return serve_step
+
+
+def make_prefill_step(cfg, cache_len: int) -> Callable:
+    def prefill_step(params, tokens, patch_embeds=None, cond=None):
+        return decoding.prefill(params, tokens, cfg, cache_len,
+                                patch_embeds=patch_embeds, cond=cond)
+    return prefill_step
+
+
+def sample_greedy(logits):
+    return jnp.argmax(logits, axis=-1)
+
+
+def sample_temperature(rng, logits, temperature: float = 1.0):
+    if temperature <= 0:
+        return sample_greedy(logits)
+    return jax.random.categorical(rng, logits / temperature, axis=-1)
+
+
+def make_generate_fn(cfg, num_steps: int, temperature: float = 0.0):
+    """Fused prefill + N decode steps via lax.scan (one jit-able program)."""
+    def generate(params, tokens, rng, patch_embeds=None, cond=None):
+        B = tokens.shape[0]
+        prompt_len = tokens.shape[-1] + (
+            cfg.num_patches if cfg.frontend == "vision" else 0)
+        cache_len = prompt_len + num_steps
+        logits, cache = decoding.prefill(params, tokens, cfg, cache_len,
+                                         patch_embeds=patch_embeds, cond=cond)
+
+        def step(carry, rng_i):
+            cache, last_logits, pos = carry
+            nxt = sample_temperature(rng_i, last_logits[..., -1, :] if
+                                     cfg.num_codebooks > 1 else
+                                     last_logits[:, -1], temperature)
+            if cfg.num_codebooks > 1:
+                tok = nxt.reshape(B, cfg.num_codebooks, 1) if nxt.ndim > 1 \
+                    else jnp.tile(nxt[:, None, None], (1, cfg.num_codebooks, 1))
+            else:
+                tok = nxt[:, None]
+            logits, cache = decoding.serve_step(params, cache, tok, pos, cfg,
+                                                cond=cond)
+            return (cache, logits, pos + 1), nxt
+
+        rngs = jax.random.split(rng, num_steps)
+        (_, _, _), out_tokens = jax.lax.scan(
+            step, (cache, logits, jnp.int32(prompt_len)), rngs)
+        return jnp.moveaxis(out_tokens, 0, 1)  # (B, num_steps[, K])
+
+    return generate
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    """Host-side continuous batching over a fixed slot count.
+
+    Slots hold independent sequences; finished slots are refilled from the
+    queue between steps (cache entries are per-slot along batch dim, so refill
+    is a host-side prefill of one slot batched into the running cache — here
+    simplified to cohort refill, which is what fixed-shape TPU serving does).
+    """
+
+    def __init__(self, cfg, params, slots: int, cache_len: int,
+                 eos_id: int = 1, temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self._serve = jax.jit(make_serve_step(cfg))
+        self._prefill = jax.jit(make_prefill_step(cfg, cache_len))
+
+    def run(self, requests: List[Request], rng=None) -> List[Request]:
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        queue = list(requests)
+        done: List[Request] = []
+        while queue:
+            cohort = [queue.pop(0) for _ in range(min(self.slots, len(queue)))]
+            plen = max(len(r.prompt) for r in cohort)
+            toks = jnp.array([[0] * (plen - len(r.prompt)) + r.prompt
+                              for r in cohort], jnp.int32)
+            logits, cache = self._prefill(self.params, toks)
+            pos = jnp.int32(plen)
+            last = logits[:, -1]
+            live = [True] * len(cohort)
+            for step in range(max(r.max_new for r in cohort)):
+                rng, k = jax.random.split(rng)
+                nxt = sample_temperature(k, last, self.temperature)
+                for i, r in enumerate(cohort):
+                    if live[i] and len(r.out) < r.max_new:
+                        t = int(nxt[i])
+                        r.out.append(t)
+                        if t == self.eos_id or len(r.out) >= r.max_new:
+                            live[i] = False
+                            r.done = True
+                if not any(live):
+                    break
+                logits, cache = self._serve(self.params, cache,
+                                            nxt[:, None], pos)
+                last = logits[:, -1] if logits.ndim == 3 else logits[:, -1]
+                pos = pos + 1
+            for r in cohort:
+                r.done = True
+                done.append(r)
+        return done

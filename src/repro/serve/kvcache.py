@@ -1,0 +1,43 @@
+"""Cache sizing/accounting utilities (the GLB-capacity analogue, paper §II).
+
+The cache pytree itself lives in models/decoding.py; this module answers the
+capacity questions the planner and serving engine need: bytes per slot, whether
+a (batch × context) fits HBM per chip under a given sharding, and the max slot
+count for a budget.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+from repro.core import eyexam
+from repro.models import decoding
+
+
+def cache_bytes(cfg, batch: int, cache_len: int) -> int:
+    tree = decoding.abstract_cache(cfg, batch, cache_len)
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def cache_bytes_per_chip(cfg, batch: int, cache_len: int, chips: int,
+                         sharded: bool = True) -> float:
+    total = cache_bytes(cfg, batch, cache_len)
+    return total / chips if sharded else float(total)
+
+
+def max_slots(cfg, cache_len: int, chips: int,
+              hbm_budget_fraction: float = 0.5) -> int:
+    per_slot = cache_bytes(cfg, 1, cache_len) / chips
+    budget = eyexam.HBM_CAP * hbm_budget_fraction
+    return max(int(budget // max(per_slot, 1)), 1)
+
+
+def report(cfg, batch: int, cache_len: int, chips: int) -> Dict[str, float]:
+    total = cache_bytes(cfg, batch, cache_len)
+    return {
+        "total_gb": total / 1e9,
+        "per_chip_gb": total / chips / 1e9,
+        "fits": total / chips < eyexam.HBM_CAP,
+        "max_slots_half_hbm": max_slots(cfg, cache_len, chips),
+    }

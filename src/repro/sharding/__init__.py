@@ -1,0 +1,3 @@
+from repro.sharding import autoshard, collectives, specs
+
+__all__ = ["autoshard", "collectives", "specs"]

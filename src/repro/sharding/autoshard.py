@@ -1,0 +1,284 @@
+"""Apply a core.planner.ModelPlan to a whole model: PartitionSpecs for params,
+optimizer state, batches and decode caches.
+
+Rules (all divisibility-guarded — indivisible dims fall back to replication,
+the planner's BROADCAST mode):
+
+    param_rule 'fsdp_tp'  — TP over `model` (heads / d_ff / experts / vocab),
+                            FSDP (ZeRO-3) over (`pod`,`data`) on the d_model dim
+    param_rule 'ep_fsdp'  — same, but expert dim takes `model` (EP)
+    param_rule 'tp_only'  — TP over `model`, replicated over data axes (decode)
+    param_rule 'replicated' — pure DP
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.planner import ModelPlan
+from repro.sharding.specs import axes_size, dp_axes, maybe
+
+
+def _last_name(path) -> str:
+    for e in reversed(path):
+        if hasattr(e, "key"):
+            return str(e.key)
+    return ""
+
+
+def _path_names(path):
+    return [str(e.key) for e in path if hasattr(e, "key")]
+
+
+class _Rules:
+    def __init__(self, plan: ModelPlan, mesh_axes: Dict[str, int]):
+        self.plan = plan
+        self.ma = mesh_axes
+        rule = plan.param_rule
+        self.fsdp = (dp_axes(mesh_axes)
+                     if rule in ("fsdp_tp", "ep_fsdp", "fsdp_dp") else None)
+        self.tp = "model" if rule in ("fsdp_tp", "ep_fsdp", "tp_only") else None
+
+    def f(self, dim: int):
+        """FSDP axes if divisible."""
+        return maybe(self.fsdp, dim, self.ma) if self.fsdp else None
+
+    def t(self, dim: int):
+        return maybe(self.tp, dim, self.ma) if self.tp else None
+
+
+def param_spec(path, leaf, plan: ModelPlan, mesh_axes: Dict[str, int]) -> P:
+    """PartitionSpec for one parameter leaf (shape includes any leading
+    stacked-period dim, which is never sharded)."""
+    r = _Rules(plan, mesh_axes)
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    stacked = 1 if (names and names[0] == "blocks") else 0
+
+    def pad(spec_entries):
+        return P(*([None] * stacked + spec_entries))
+
+    dims = shape[stacked:]
+    nd = len(dims)
+
+    if name == "embed":
+        if nd == 3:  # (K, V, d)
+            return pad([None, r.t(dims[1]) if plan.shard_vocab else None,
+                        r.f(dims[2])])
+        return pad([r.t(dims[0]) if plan.shard_vocab else None, r.f(dims[1])])
+    if name == "lm_head":
+        if nd == 3:  # (K, d, V)
+            return pad([None, r.f(dims[1]),
+                        r.t(dims[2]) if plan.shard_vocab else None])
+        return pad([r.f(dims[0]), r.t(dims[1]) if plan.shard_vocab else None])
+
+    if name in ("wq",):  # (d, H, D)
+        return pad([r.f(dims[0]),
+                    r.t(dims[1]) if plan.shard_heads else None, None])
+    if name in ("wk", "wv"):  # (d, KV, D) — cross-attn uses H
+        sh = plan.shard_kv_heads if "cross_attn" not in names else plan.shard_heads
+        return pad([r.f(dims[0]), r.t(dims[1]) if sh else None, None])
+    if name == "wo":  # (H, D, d)
+        return pad([r.t(dims[0]) if plan.shard_heads else None, None,
+                    r.f(dims[2])])
+    if name in ("bq",):
+        return pad([r.t(dims[0]) if plan.shard_heads else None, None])
+    if name in ("bk", "bv"):
+        return pad([r.t(dims[0]) if plan.shard_kv_heads else None, None])
+
+    if name in ("wg", "wu", "w1"):
+        if nd == 3:  # MoE experts (E, d, f)
+            if plan.shard_experts:
+                return pad([r.t(dims[0]), r.f(dims[1]), None])
+            return pad([None, r.f(dims[1]),
+                        r.t(dims[2]) if plan.shard_ffn else None])
+        return pad([r.f(dims[0]), r.t(dims[1]) if plan.shard_ffn else None])
+    if name in ("wd", "w2"):
+        if nd == 3:  # (E, f, d)
+            if plan.shard_experts:
+                return pad([r.t(dims[0]), None, r.f(dims[2])])
+            return pad([None, r.t(dims[1]) if plan.shard_ffn else None,
+                        r.f(dims[2])])
+        return pad([r.t(dims[0]) if plan.shard_ffn else None, r.f(dims[1])])
+    if name == "router":  # (d, E)
+        return pad([r.f(dims[0]), r.t(dims[1])])
+
+    if name == "in_proj":  # ssm (d, e_all) — e_all rarely divisible; guard
+        return pad([r.f(dims[0]), r.t(dims[1])])
+    if name == "out_proj":  # (di|w, d)
+        return pad([r.t(dims[0]), r.f(dims[1])])
+    if name in ("in_x", "in_gate"):  # rglru (d, w)
+        return pad([r.f(dims[0]), r.t(dims[1])])
+
+    # conv weights, norms, gates, biases, scalars: replicate
+    return pad([None] * nd)
+
+
+def param_specs(abstract_params, plan: ModelPlan, mesh_axes: Dict[str, int]):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_spec(p, l, plan, mesh_axes), abstract_params)
+
+
+# ------------------------------------------------------------ activation hints
+@dataclasses.dataclass(frozen=True)
+class ShardingHints:
+    """Activation sharding constraints — the planner's iact-NoC mode applied
+    *inside* the program (paper: per-layer NoC reconfiguration).
+
+    Without these, XLA's sharding propagation is free to re-shard activations
+    onto the weight layout (batch-replicated, d_model-sharded), which inflates
+    per-chip FLOPs by the dp factor and floods the ICI with resharding
+    collective-permutes. The constraints pin activations to the planner's
+    choice: INTERLEAVED_MC = batch over the dp axes.
+    """
+    mesh: Optional[object] = None  # jax.sharding.Mesh
+    act: Optional[P] = None        # (B, S, d) hidden states
+    logits: Optional[P] = None     # (B, C, V[,K]) loss-chunk logits
+    model_size: int = 1            # size of the TP axis (for divisibility)
+    tp: bool = True                # TP constraints enabled (param_rule != repl)
+
+    def _named(self, spec: P):
+        from jax.sharding import NamedSharding
+        return NamedSharding(self.mesh, spec)
+
+    def constrain_act(self, x):
+        if self.act is not None and x.ndim >= len(self.act):
+            return jax.lax.with_sharding_constraint(x, self._named(self.act))
+        return x
+
+    def constrain_tokens(self, x, tp_dim: Optional[int] = None,
+                         tp_check: Optional[Tuple[int, ...]] = None,
+                         batch_dim: int = 0, tp_candidates=None,
+                         widen_batch: bool = False):
+        """Pin an intra-block intermediate: batch over dp; optionally one dim
+        over the model axis (the Megatron/TP pattern) when every size in
+        ``tp_check`` divides the model axis. ``tp_candidates`` is a list of
+        (dim, sizes) tried in order — first divisible wins (MoE: EP over the
+        expert dim if it divides, else TP over d_ff).
+
+        This is the per-tensor HM-NoC mode decision (paper Fig. 9) applied
+        inside the layer — without it XLA propagation re-shards projection
+        outputs onto indivisible feature dims (sliver collective-permutes).
+        """
+        if self.act is None:
+            return x
+        entries: list = [None] * x.ndim
+        entries[batch_dim] = self.act[0]
+        cands = tp_candidates if tp_candidates is not None else (
+            [(tp_dim, tp_check if tp_check is not None
+              else (x.shape[tp_dim],))] if tp_dim is not None else [])
+        placed = False
+        if self.tp and self.model_size > 1:
+            for dim, sizes in cands:
+                if all(s % self.model_size == 0 for s in sizes):
+                    entries[dim % x.ndim] = "model"
+                    placed = True
+                    break
+        if widen_batch and not placed and self.model_size > 1:
+            # no TP dim divides: spread the batch over the model axis too (the
+            # planner's unicast fall-back — paper Fig. 9b) when it divides
+            b = self.act[0]
+            if b is not None and "model" not in (
+                    b if isinstance(b, tuple) else (b,)):
+                axes = (b if isinstance(b, tuple) else (b,)) + ("model",)
+                per = 1
+                for a in axes:
+                    per *= self.model_size if a == "model" else 1
+                if x.shape[batch_dim] % (self._axes_size(axes)) == 0:
+                    entries[batch_dim] = axes
+        return jax.lax.with_sharding_constraint(x, self._named(P(*entries)))
+
+    def _axes_size(self, axes) -> int:
+        from repro.sharding.specs import mesh_axis_sizes
+        ma = mesh_axis_sizes(self.mesh)
+        n = 1
+        for a in axes:
+            n *= ma[a]
+        return n
+
+    def constrain_logits(self, x):
+        if self.logits is None:
+            return x
+        spec = self.logits
+        if x.ndim != len(spec):    # musicgen (B,C,K,V): insert codebook None
+            entries = list(spec) + [None] * (x.ndim - len(spec))
+            entries[-1], entries[len(spec) - 1] = entries[len(spec) - 1], None
+            spec = P(*entries)
+        return jax.lax.with_sharding_constraint(x, self._named(spec))
+
+
+def act_batch_axes(plan: ModelPlan, mesh_axes: Dict[str, int],
+                   batch_size: int):
+    """Mesh axes for the token/batch dim, honoring the plan's iact mode with
+    divisibility fall-backs: 'all' → dp+model → dp → None."""
+    dp = dp_axes(mesh_axes)
+    prefs = ([tuple(dp) + ("model",), dp] if plan.act_axes == "all"
+             else [dp])
+    for axes in prefs:
+        got = maybe(axes, batch_size, mesh_axes)
+        if got is not None:
+            return got
+    return None
+
+
+def make_hints(plan: ModelPlan, mesh, batch_size: int) -> ShardingHints:
+    from repro.sharding.specs import mesh_axis_sizes
+    mesh_axes = mesh_axis_sizes(mesh)
+    b_ax = act_batch_axes(plan, mesh_axes, batch_size)
+    act = P(b_ax, None, None)
+    v_ax = "model" if plan.shard_vocab else None
+    logits = P(b_ax, None, v_ax)
+    return ShardingHints(mesh=mesh, act=act, logits=logits,
+                         model_size=mesh_axes.get("model", 1),
+                         tp=plan.param_rule in ("fsdp_tp", "ep_fsdp",
+                                                "tp_only"))
+
+
+# ----------------------------------------------------------------- batch/cache
+def batch_spec(abstract_batch, plan: ModelPlan, mesh_axes: Dict[str, int]):
+    def spec(path, leaf):
+        lead = act_batch_axes(plan, mesh_axes, leaf.shape[0])
+        return P(*([lead] + [None] * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map_with_path(spec, abstract_batch)
+
+
+def cache_spec(abstract_cache, plan: ModelPlan, mesh_axes: Dict[str, int]):
+    """KV caches: batch per the plan's iact mode; heads over model if
+    divisible, else the cache *sequence* dim over model (flash-decode style) —
+    the planner's psum-NoC decision. Recurrent states: batch-sharded."""
+    dp = dp_axes(mesh_axes)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        stacked = 1 if (names and names[0] == "blocks") else 0
+        dims = leaf.shape[stacked:]
+
+        def pad(entries):
+            return P(*([None] * stacked + entries))
+
+        b_ax = act_batch_axes(plan, mesh_axes, dims[0])
+        if name in ("k", "v"):          # (B, T, KV, D)
+            if plan.shard_kv_heads:
+                return pad([b_ax, None, maybe("model", dims[2], mesh_axes),
+                            None])
+            t_ax = maybe("model", dims[1], mesh_axes)
+            if b_ax is None and t_ax is not None:
+                # batch unshardable (long_500k B=1): spread seq over dp too
+                t_all = maybe(tuple(dp) + ("model",), dims[1], mesh_axes)
+                if t_all is not None:
+                    t_ax = t_all
+            return pad([b_ax, t_ax, None, None])
+        # ssd state, conv windows, rglru h: batch-leading
+        return pad([b_ax] + [None] * (len(dims) - 1))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_cache)
+
+
+def replicated_spec(tree):
+    return jax.tree.map(lambda l: P(), tree)

@@ -1,0 +1,51 @@
+"""Named-axis helpers and divisibility-aware PartitionSpec builders."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh_axes: Dict[str, int]) -> Tuple[str, ...]:
+    """Data-parallel axes: ('pod','data') on the multi-pod mesh, ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh_axes)
+
+
+def axes_size(mesh_axes: Dict[str, int], axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh_axes[axes]
+    n = 1
+    for a in axes:
+        n *= mesh_axes[a]
+    return n
+
+
+def maybe(axes, dim_size: int, mesh_axes: Dict[str, int]):
+    """Return ``axes`` if ``dim_size`` divides evenly over them, else None.
+
+    This is the planner's fall-back-to-BROADCAST rule for diminished
+    dimensions (e.g. GQA kv_heads < model axis — paper Table I)."""
+    if axes is None:
+        return None
+    n = axes_size(mesh_axes, axes)
+    if n <= 1 or dim_size % n != 0:
+        return None
+    if isinstance(axes, (list, tuple)) and len(axes) == 1:
+        return axes[0]
+    return tuple(axes) if isinstance(axes, (list, tuple)) else axes
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,3 @@
+from repro.train import grad_compression, loop, optimizer
+
+__all__ = ["grad_compression", "loop", "optimizer"]

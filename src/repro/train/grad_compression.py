@@ -1,0 +1,106 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+Each replica quantizes its local gradient to int8 (per-tensor scale), keeps the
+quantization residual in an error-feedback buffer (added back next step — keeps
+Adam convergent), all-gathers the int8 payloads over the dp axes, and
+dequantizes + sums in fp32 locally.
+
+Communication: (n−1)/n · 1 byte/elt vs 2·(n−1)/n · 4 bytes for a ring fp32
+all-reduce → ~8× fewer collective bytes on the DP axes.
+
+State layout: error-feedback buffers are *per-replica*, stored stacked on a
+leading dp-sharded axis (n_dp, *param_shape) so they are representable as
+global arrays. The whole step runs under shard_map with params replicated
+(the planner's BROADCAST weight mode — pure DP; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding.collectives import shard_map
+
+from repro.train import optimizer as opt_lib
+
+
+def quantize(g, ef):
+    """g fp32 + error feedback -> (q int8, scale fp32 scalar, new_ef)."""
+    gc = g.astype(jnp.float32) + ef
+    scale = jnp.max(jnp.abs(gc)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(gc / scale), -127, 127).astype(jnp.int8)
+    new_ef = gc - q.astype(jnp.float32) * scale
+    return q, scale, new_ef
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a, s in zip(mesh.axis_names, mesh.devices.shape):
+        if a in ("pod", "data"):
+            n *= s
+    return n
+
+
+def init_error_feedback(mesh: Mesh, params):
+    n = _dp_size(mesh)
+    return jax.tree.map(
+        lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params)
+
+
+def compressed_allreduce_leaf(g, ef, axis_names):
+    """Inside shard_map. g: local grad; ef: local residual (same shape).
+    Returns (summed grad fp32, new local residual)."""
+    q, scale, new_ef = quantize(g, ef)
+    flatq = q.reshape(-1)
+    parts_q = flatq[None]                      # (1, numel)
+    parts_s = scale[None]
+    for ax in axis_names:
+        parts_q = jax.lax.all_gather(parts_q, ax, axis=0, tiled=True)
+        parts_s = jax.lax.all_gather(parts_s, ax, axis=0, tiled=True)
+    total = jnp.einsum("nd,n->d", parts_q.astype(jnp.float32), parts_s)
+    return total.reshape(g.shape), new_ef
+
+
+def make_compressed_dp_train_step(mesh: Mesh, loss_fn, opt_cfg):
+    """Pure-DP train step with int8-EF gradient all-reduce.
+
+    loss_fn(params, batch) -> (scalar, metrics). Params/opt replicated; batch
+    sharded over dp on dim0; ef stacked (n_dp, ...) sharded over dp.
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_dp = _dp_size(mesh)
+
+    def body(params, opt_state, batch, ef):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(ef)
+        new_g, new_e = [], []
+        for g, e in zip(flat_g, flat_e):
+            s, ne = compressed_allreduce_leaf(g, e[0], dp)
+            new_g.append(s / n_dp)
+            new_e.append(ne[None])
+        grads = jax.tree.unflatten(tdef, new_g)
+        ef = jax.tree.unflatten(tdef, new_e)
+        loss = jax.lax.pmean(loss, dp)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, dp), metrics)
+        params, opt_state, om = opt_lib.adamw_update(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, ef, {**metrics, **om, "loss_total": loss}
+
+    def step(params, opt_state, batch, ef):
+        # prefix specs: replicated params/opt/metrics, dp-sharded batch/ef
+        f = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(), P(dp), P(dp)),
+            out_specs=(P(), P(), P(dp), P()),
+            check_vma=False)
+        return f(params, opt_state, batch, ef)
+
+    return step

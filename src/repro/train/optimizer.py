@@ -1,0 +1,102 @@
+"""AdamW + schedules + clipping, from scratch (no optax dependency).
+
+Optimizer state is a pytree congruent with params, so the FSDP PartitionSpecs
+from autoshard apply leaf-for-leaf (ZeRO: moments live on the param shards).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # () int32
+    mu: dict                   # first moment, param-shaped
+    nu: dict                   # second moment, param-shaped
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+
+
+def cosine_schedule(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * \
+        0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def _decay_mask(path) -> bool:
+    """Apply weight decay only to ≥2D matrices (skip norms/bias/scalars)."""
+    return True
+
+
+def adamw_update(cfg: OptimizerConfig, params, grads,
+                 state: AdamWState) -> Tuple[dict, AdamWState, Dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    step = state.step + 1
+    lr = cosine_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        a, b, c = upd(p, g, m, v)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    params = jax.tree.unflatten(treedef, new_p)
+    mu = jax.tree.unflatten(treedef, new_m)
+    nu = jax.tree.unflatten(treedef, new_v)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return params, AdamWState(step=step, mu=mu, nu=nu), metrics

@@ -1,0 +1,83 @@
+"""Config sanity (analytic param counts vs known model sizes), RS tiling
+properties, elastic restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.core import dataflow
+
+# Published total parameter counts (±tolerance: vocab padding, bias/norm
+# accounting, tied embeddings differ slightly across reports).
+KNOWN_PARAMS = {
+    "gemma2-2b": (2.6e9, 0.3),
+    "mistral-nemo-12b": (12.2e9, 0.15),
+    "qwen2.5-3b": (3.1e9, 0.25),
+    "gemma3-12b": (12.2e9, 0.25),
+    "mamba2-130m": (0.13e9, 0.25),
+    "recurrentgemma-2b": (2.7e9, 0.30),
+    "internvl2-26b": (20e9, 0.35),    # backbone only (frontend is a stub)
+    "musicgen-large": (3.3e9, 0.4),
+    "mixtral-8x7b": (46.7e9, 0.15),
+    "llama4-maverick-400b-a17b": (400e9, 0.25),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_count_matches_published(arch):
+    cfg = get_config(arch)
+    got = cfg.param_count()
+    want, tol = KNOWN_PARAMS[arch]
+    assert abs(got - want) / want < tol, (arch, f"{got:.3e}", f"{want:.3e}")
+
+
+def test_moe_active_params_far_below_total():
+    cfg = get_config("llama4-maverick-400b-a17b")   # 128 experts, top-1
+    total = cfg.param_count()
+    active = cfg.param_count(active_only=True)
+    assert active < total / 5
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_configs_validate(arch):
+    cfg = get_config(arch + "-reduced")
+    cfg.validate()
+    assert cfg.param_count() < 5e6          # genuinely tiny
+
+
+# --------------------------------------------------------------- RS tilings
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 16384), st.integers(1, 16384), st.integers(1, 65536))
+def test_rs_tiling_always_fits_vmem(M, K, N):
+    t = dataflow.rs_matmul_tiling(M, K, N)
+    assert t.fits()
+    assert t.bm >= 1 and t.bk >= 1 and t.bn >= 1
+
+
+def test_rs_tiling_mxu_aligned_for_big_matmuls():
+    t = dataflow.rs_matmul_tiling(4096, 4096, 14336)
+    assert t.bn % 128 == 0 and t.bk % 128 == 0
+    assert t.bm % 8 == 0
+
+
+# ------------------------------------------------------------ elastic restore
+def test_elastic_restore_replans_for_new_mesh(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime import elastic
+    from repro.train import loop as train_loop
+
+    cfg = get_config("qwen2.5-3b-reduced")
+    params, opt = train_loop.init_train_state(jax.random.PRNGKey(0), cfg)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, (params, opt))
+
+    mesh = make_local_mesh()                 # the "new" (degraded) mesh
+    abstract = train_loop.abstract_train_state(cfg)
+    (p2, o2), manifest = elastic.restore_elastic(
+        mgr, abstract, cfg, SHAPES["train_4k"], mesh)
+    assert manifest["step"] == 5
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,119 @@
+"""HM-mesh planner: reuse model, per-layer mode selection (paper Fig. 9),
+PartitionSpec synthesis, divisibility fall-backs."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.core import hmmesh, planner, reuse
+from repro.core.hmmesh import Mode
+
+
+# ------------------------------------------------------------------ reuse law
+def test_reuse_matches_paper_definitions():
+    # conventional conv layer: lots of reuse everywhere
+    c = reuse.conv("conv", n=4, c=64, m=128, h=16, w=16, r=3, s=3)
+    r = reuse.reuse(c)
+    assert r["weight"] > 100 and r["iact"] > 100 and r["psum"] > 100
+    # depth-wise conv: G=C, M=C=1 per group — iact reuse collapses (Table I)
+    dw = reuse.conv("dw", n=1, c=1, m=1, h=16, w=16, r=3, s=3, groups=64)
+    assert reuse.reuse(dw)["iact"] < 10
+    # FC at batch 1: weight reuse collapses to 1
+    fc = reuse.gemm("fc", tokens=1, c_in=1024, m_out=1024)
+    assert reuse.reuse(fc)["weight"] == 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 4096), st.integers(1, 4096))
+def test_reuse_identity_total_macs(n, c, m):
+    """MACs = reuse × count for every data type (conservation law)."""
+    g = reuse.gemm("g", n, c, m)
+    r = reuse.reuse(g)
+    assert np.isclose(r["weight"] * g.weight_count, g.macs)
+    assert np.isclose(r["iact"] * g.iact_count, g.macs)
+    assert np.isclose(r["psum"] * g.psum_count, g.macs)
+
+
+# --------------------------------------------------------------- mode table
+MESH = planner.MeshDesc(pod=1, data=16, model=16)
+
+
+def test_fig9_fc_batch1_weights_not_broadcast():
+    """FC @ small batch: no weight reuse -> weights must NOT be broadcast
+    (paper Fig. 9c picks unicast for weights)."""
+    fc = reuse.gemm("fc", tokens=16, c_in=4096, m_out=4096)
+    lp = planner.plan_layer(fc, MESH, training=False)
+    assert lp.weight_mode != Mode.BROADCAST
+
+
+def test_fig9_conv_like_training_avoids_weight_unicast_when_reuse_high():
+    big = reuse.gemm("mlp", tokens=1 << 20, c_in=4096, m_out=16384)
+    lp = planner.plan_layer(big, MESH, training=True)
+    # huge token count: plenty of weight reuse; planner must exploit
+    # parallelism rather than replicate compute
+    assert lp.iact_mode in (Mode.INTERLEAVED_MC, Mode.UNICAST)
+
+
+def test_plan_is_feasible_for_every_arch_cell():
+    for arch in ("gemma2-2b", "mixtral-8x7b", "mamba2-130m"):
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            plan = planner.plan_model(cfg, shape, MESH)
+            assert plan.layers, (arch, shape.name)
+            assert plan.param_rule in ("fsdp_tp", "ep_fsdp", "tp_only",
+                                       "fsdp_dp", "replicated")
+
+
+def test_moe_plans_expert_parallel_when_divisible():
+    cfg = get_config("llama4-maverick-400b-a17b")     # 128 experts % 16 == 0
+    plan = planner.plan_model(cfg, SHAPES["train_4k"], MESH)
+    assert plan.shard_experts
+    cfg8 = get_config("mixtral-8x7b")                 # 8 experts % 16 != 0
+    plan8 = planner.plan_model(cfg8, SHAPES["train_4k"], MESH)
+    assert not plan8.shard_experts
+    assert plan8.shard_ffn                            # falls back to TP
+
+
+def test_gqa_kv_heads_fall_back_to_broadcast():
+    cfg = get_config("gemma2-2b")                     # 8 heads, 4 kv < 16
+    plan = planner.plan_model(cfg, SHAPES["train_4k"], MESH)
+    assert not plan.shard_heads and not plan.shard_kv_heads
+    cfg2 = get_config("qwen2.5-3b")                   # 16 heads % 16 == 0
+    plan2 = planner.plan_model(cfg2, SHAPES["train_4k"], MESH)
+    assert plan2.shard_heads
+
+
+def test_pure_ssm_gets_unicast_act_mode():
+    """mamba: no TP-able dims — the paper's Fig. 9b DW-CONV case."""
+    cfg = get_config("mamba2-130m")
+    plan = planner.plan_model(cfg, SHAPES["train_4k"], MESH)
+    assert plan.act_axes == "all"
+    assert plan.param_rule == "fsdp_dp"
+    hybrid = planner.plan_model(get_config("recurrentgemma-2b"),
+                                SHAPES["train_4k"], MESH)
+    assert hybrid.act_axes == "dp"                    # has attention + MLP
+
+
+# ----------------------------------------------------------- hmmesh -> specs
+def test_mode_to_partition_spec():
+    assert hmmesh.spec_for(Mode.BROADCAST, 2, 0, False) == P(None, None)
+    assert hmmesh.spec_for(Mode.GROUPED_MC, 2, 1, False) == P(None, "model")
+    assert hmmesh.spec_for(Mode.INTERLEAVED_MC, 3, 0, True) == \
+        P(("pod", "data"), None, None)
+    assert hmmesh.spec_for(Mode.UNICAST, 2, 0, True) == \
+        P(("pod", "data", "model"), None)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 4096),
+       st.sampled_from(list(Mode)),
+       st.booleans())
+def test_divisible_consistent_with_spec(dim, mode, multi_pod):
+    mesh_shape = ({"pod": 2, "data": 16, "model": 16} if multi_pod
+                  else {"data": 16, "model": 16})
+    ok = hmmesh.divisible(dim, mode, mesh_shape, multi_pod)
+    n = 1
+    for a in hmmesh.mode_axes(mode, multi_pod):
+        n *= mesh_shape[a]
+    assert ok == (dim % n == 0 or n == 1)

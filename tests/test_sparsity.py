@@ -1,0 +1,116 @@
+"""CSC / block-CSC formats (paper §IV, Fig. 16) + pruning. Includes the
+paper's exact Fig. 16 example and hypothesis round-trip properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsity
+
+
+# ------------------------------------------------- the paper's Fig.16 example
+def test_paper_fig16_example():
+    """Weight matrix from Fig. 16 — address vector must match the paper."""
+    # columns: [a,b | c,d,e | f | (empty) | g,h | i | j,k,l] per the figure
+    mat = np.zeros((7, 8), dtype=np.int64)
+    vals = dict(a=1, b=2, c=3, d=4, e=5, f=6, g=7, h=8, i=9, j=10, k=11, l=12)
+    # col 0: a at row 1 (count 1), b at row 2 (count 0)
+    mat[1, 0] = vals["a"]
+    mat[2, 0] = vals["b"]
+    # col 1: c (count 0) row 0, d (count 0) row 1, e (count 1) row 3
+    mat[0, 1] = vals["c"]
+    mat[1, 1] = vals["d"]
+    mat[3, 1] = vals["e"]
+    # col 2: f with 2 leading zeros -> row 2
+    mat[2, 2] = vals["f"]
+    # col 3: all zero
+    # col 4: g with count 3 -> row 3
+    mat[3, 4] = vals["g"]
+    # col 5: h count 1 -> row 1, i count 1 -> row 3
+    mat[1, 5] = vals["h"]
+    mat[3, 5] = vals["i"]
+    # col 6: j count 0 row 0, k count 0 row 1, l count 0 row 2
+    mat[0, 6] = vals["j"]
+    mat[1, 6] = vals["k"]
+    mat[2, 6] = vals["l"]
+    # col 7: all zero
+    m = sparsity.csc_encode(mat)
+    assert list(m.data) == [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]
+    assert list(m.count) == [1, 0, 0, 0, 1, 2, 3, 1, 1, 0, 0, 0]
+    # paper: address = {0, 2, 5, 6, 6, 7, 9, 9(+3=12)}; repeated 6 marks the
+    # empty column
+    assert list(m.address) == [0, 2, 5, 6, 6, 7, 9, 12, 12]
+    np.testing.assert_array_equal(sparsity.csc_decode(m), mat)
+
+
+# --------------------------------------------------------- round-trip property
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 24), st.integers(1, 16), st.floats(0.0, 1.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_csc_roundtrip(rows, cols, zero_frac, seed):
+    rng = np.random.default_rng(seed)
+    mat = rng.integers(1, 127, (rows, cols)).astype(np.int64)
+    mask = rng.random((rows, cols)) < zero_frac
+    mat[mask] = 0
+    m = sparsity.csc_encode(mat)
+    np.testing.assert_array_equal(sparsity.csc_decode(m), mat)
+
+
+def test_csc_count_overflow_long_runs():
+    """Runs > 15 zeros must round-trip via explicit padding zeros (4b count)."""
+    mat = np.zeros((40, 2), np.int64)
+    mat[38, 0] = 5
+    mat[0, 1] = 7
+    mat[39, 1] = 9
+    m = sparsity.csc_encode(mat, count_bits=4)
+    assert (np.asarray(m.count) <= 15).all()
+    np.testing.assert_array_equal(sparsity.csc_decode(m), mat)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([(16, 16, 4, 4), (32, 16, 8, 8), (64, 64, 16, 16)]),
+       st.floats(0.0, 1.0), st.integers(0, 2 ** 31 - 1))
+def test_bcsc_roundtrip(dims, zero_frac, seed):
+    K, N, bk, bn = dims
+    rng = np.random.default_rng(seed)
+    mat = rng.standard_normal((K, N)).astype(np.float32)
+    # zero whole blocks
+    nb = (K // bk, N // bn)
+    bmask = rng.random(nb) < zero_frac
+    mask = np.kron(bmask, np.ones((bk, bn), bool))
+    mat[mask] = 0
+    m = sparsity.bcsc_encode(mat, bk, bn)
+    np.testing.assert_array_equal(sparsity.bcsc_decode(m), mat)
+
+
+def test_compression_ratio_increases_with_sparsity():
+    rng = np.random.default_rng(0)
+    ratios = []
+    for sp in (0.0, 0.5, 0.9):
+        mat = rng.integers(1, 127, (64, 64)).astype(np.int64)
+        mask = rng.random((64, 64)) < sp
+        mat[mask] = 0
+        ratios.append(sparsity.csc_encode(mat).compression_ratio())
+    assert ratios[0] < ratios[1] < ratios[2]
+    assert ratios[0] < 1.0          # dense data: CSC must cost MORE than raw
+    assert ratios[2] > 2.0          # 90% sparse: clear win (paper Table III)
+
+
+def test_magnitude_prune_sparsity_level():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    wp = sparsity.magnitude_prune(w, 0.75)
+    frac = float((np.asarray(wp) == 0).mean())
+    assert 0.70 <= frac <= 0.80
+    # surviving entries unchanged
+    keep = np.asarray(wp) != 0
+    np.testing.assert_array_equal(np.asarray(wp)[keep], np.asarray(w)[keep])
+
+
+def test_block_prune_produces_skippable_blocks():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    wp = sparsity.block_magnitude_prune(w, 0.5, 16, 16)
+    m = sparsity.bcsc_encode(np.asarray(wp), 16, 16)
+    assert m.nnzb == 8            # exactly half of the 16 blocks survive
