@@ -32,7 +32,7 @@ def main():
     print("\n" + "=" * 78)
     out["perf_compare"] = perf_compare.main()
     print("\n" + "=" * 78)
-    out["sparse_decode"] = sparse_decode.main()
+    out["sparse_decode"] = sparse_decode.main(smoke=True)
     with open("results/bench/summary.json", "w") as f:
         json.dump(out, f, indent=1, default=str)
     print("\nwrote results/bench/summary.json")

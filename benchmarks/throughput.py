@@ -54,7 +54,16 @@ def run(batch: int = 1) -> Dict:
     return out
 
 
-def main() -> Dict:
+def decode_tokens_per_s(batches=(1, 4, 8), smoke: bool = False) -> Dict:
+    """Dense-vs-sparse DecodeEngine tokens/sec (ISSUE 1) — the serving-side
+    counterpart of Table VI's batch-1 rows. Delegates to
+    benchmarks.sparse_decode so both reports share one harness."""
+    from benchmarks.sparse_decode import decode_benchmark
+    return decode_benchmark(batches=(1,) if smoke else batches,
+                            max_new=4 if smoke else 8)
+
+
+def main(decode: bool = False, smoke: bool = False) -> Dict:
     res = run()
     print("=== Table VI: Eyeriss v2 throughput (batch 1, 200 MHz) ===")
     print(f"{'DNN':18s} {'MACs':>10s} {'inf/s (model)':>14s} "
@@ -68,8 +77,21 @@ def main() -> Dict:
     r = res["_ratios"]
     print(f"MobileNet/AlexNet: model {r['mobilenet_over_alexnet']:.1f}x, "
           f"paper {r['paper_mobilenet_over_alexnet']:.1f}x")
+    if decode:
+        d = decode_tokens_per_s(smoke=smoke)
+        res["_decode_tokens_per_s"] = d
+        print("--- decode tokens/sec (dense vs BCSC-sparse serve path) ---")
+        for b, row in d["batches"].items():
+            print(f"  batch {b}: dense {row['dense']['tokens_per_s']:8.2f}"
+                  f"  sparse {row['sparse']['tokens_per_s']:8.2f}")
     return res
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--decode", action="store_true",
+                    help="also time the dense-vs-sparse decode serve path")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    main(decode=args.decode, smoke=args.smoke)

@@ -55,6 +55,16 @@ def main():
     print(f"  kernel grid steps: {m.nnzb} sparse vs {dense_steps} dense "
           f"({dense_steps / max(m.nnzb, 1):.1f}x fewer)")
 
+    # batch-1 decode shape: ops dispatches to the bcsc_gemv fast path
+    # (fp32 VMEM scratch accumulator + fused activation epilogue, DESIGN.md §2)
+    from repro.core import dataflow
+    x1 = x[:1]
+    assert dataflow.matmul_path(x1.shape[0]) == "gemv"
+    y1 = ops.bcsc_gemv(x1, m, activation="silu")
+    err1 = float(jnp.max(jnp.abs(y1 - jax.nn.silu(y_dense[:1]))))
+    print(f"  batch-1 GEMV path (fused silu): max|err| {err1:.2e}; "
+          f"{m.nnzb} grid steps vs {dense_steps} dense")
+
 
 if __name__ == "__main__":
     main()

@@ -62,6 +62,33 @@ def rs_matmul_tiling(M: int, K: int, N: int, dtype_bytes: int = 2,
     return t
 
 
+# --------------------------------------------------------- decode (skinny-M)
+# Batch-1 decode is the paper's headline regime (Table VI): M = batch·seq rows
+# of activations against a large stationary weight. At M ≤ GEMV_M_MAX the MXU
+# m-dimension is mostly padding and the win comes from skipping weight blocks,
+# so ops.py routes these shapes to the bcsc_gemv kernel (one m-tile, fp32 VMEM
+# scratch accumulator) instead of the revisit-accumulate GEMM kernel.
+GEMV_M_MAX = 8          # decode-shaped row counts at/below this take the GEMV path
+GEMV_BM = SUBLANE       # the single m-tile of the GEMV kernel (rows padded to 8)
+
+
+def matmul_path(M: int) -> str:
+    """Dispatch rule: 'gemv' for decode-shaped (skinny) M, else 'gemm'."""
+    return "gemv" if M <= GEMV_M_MAX else "gemm"
+
+
+def bcsc_tile_m(M: int) -> int:
+    """m-tile for the BCSC kernels: next pow2 ≥ M, clamped to [SUBLANE, 512].
+
+    The single source of truth for the bm heuristic (previously duplicated in
+    ops.bcsc_matmul). GEMV shapes get exactly GEMV_BM; GEMM shapes grow with M
+    so the per-block dot amortizes the index-vector walk.
+    """
+    if matmul_path(M) == "gemv":
+        return GEMV_BM
+    return min(512, max(SUBLANE, 1 << (max(M, 1) - 1).bit_length()))
+
+
 def spad_fit_report(weight_count: int, sparsity: float,
                     tiling: MatmulTiling) -> dict:
     """Table-III analogue: do the (compressed) resident weights fit the budget?"""

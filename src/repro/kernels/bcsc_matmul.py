@@ -30,6 +30,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sparsity import BCSCMatrix
+from repro.kernels import epilogue as _epi
+from repro.kernels.epilogue import fused_epilogue
 
 
 def _bcsc_kernel(row_ids_ref, col_ids_ref, x_ref, blk_ref, o_ref):
@@ -114,7 +116,85 @@ def bcsc_matmul_raw(x, blocks, row_ids, col_ids, *, n_out: int, bm: int,
         _bcsc_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, n_out), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_epi.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(row_ids, col_ids, x, blocks)
+
+
+# ------------------------------------------------------------ GEMV fast path
+def _bcsc_gemv_kernel(row_ids_ref, col_ids_ref, x_ref, blk_ref, *rest,
+                      nnzb: int, activation, has_bias: bool):
+    """Grid (nnzb,): one step per non-zero block, single m-tile (M ≤ bm).
+
+    Decode-shaped variant (DESIGN.md §2): instead of revisit-accumulating
+    through ``o_ref`` the column partials build up in a fp32 VMEM scratch tile
+    (the psum-SPad analogue), and the fused bias+activation epilogue fires on
+    the last block of each output-column segment as the tile drains to HBM.
+    """
+    if has_bias:
+        bias_ref, o_ref, acc_ref = rest
+    else:
+        o_ref, acc_ref = rest
+        bias_ref = None
+    j = pl.program_id(0)
+    col = col_ids_ref[j]
+    first = jnp.logical_or(j == 0, col != col_ids_ref[jnp.maximum(j - 1, 0)])
+    last = jnp.logical_or(j == nnzb - 1,
+                          col != col_ids_ref[jnp.minimum(j + 1, nnzb - 1)])
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], blk_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(last)
+    def _flush():
+        b = bias_ref[0] if has_bias else None
+        o_ref[...] = fused_epilogue(acc_ref[...], b,
+                                    activation).astype(o_ref.dtype)
+
+
+def bcsc_gemv_raw(x, blocks, row_ids, col_ids, *, n_out: int, bm: int,
+                  bias=None, activation=None, out_dtype=jnp.float32,
+                  interpret: bool = False):
+    """Skinny x (M,K) · BCSC(K,N) -> (M,N), M ≤ bm (padded by ops.py).
+
+    Same index-vector contract as bcsc_matmul_raw (col_ids non-decreasing,
+    every block-column covered). bias, if given, is (1, n_out). Runtime is one
+    grid step per non-zero block — the batch-1 regime where weight-block
+    skipping is the whole win (paper Table VI).
+    """
+    M, K = x.shape
+    nnzb, bk, bn = blocks.shape
+    assert M == bm and K % bk == 0 and n_out % bn == 0, (M, K, n_out, bm)
+    has_bias = bias is not None
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda j, rows, cols: (0, rows[j])),
+        pl.BlockSpec((1, bk, bn), lambda j, rows, cols: (j, 0, 0)),
+    ]
+    args = [row_ids, col_ids, x, blocks]
+    if has_bias:
+        in_specs.append(
+            pl.BlockSpec((1, bn), lambda j, rows, cols: (0, cols[j])))
+        args.append(bias)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nnzb,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda j, rows, cols: (0, cols[j])),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_bcsc_gemv_kernel, nnzb=nnzb,
+                          activation=activation, has_bias=has_bias),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bm, n_out), out_dtype),
+        compiler_params=_epi.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(*args)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import epilogue as _epi
+
 NEG_INF = -2.0e38
 
 
@@ -115,7 +117,7 @@ def sliding_window_attention_raw(q, k, v, *, window: int, bq: int = 128,
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_epi.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

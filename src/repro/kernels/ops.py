@@ -18,6 +18,7 @@ import numpy as np
 from repro.core import dataflow
 from repro.core.sparsity import BCSCMatrix
 from repro.kernels import bcsc_matmul as _bcsc
+from repro.kernels import epilogue as _epi
 from repro.kernels import local_attention as _swa
 from repro.kernels import rs_matmul as _rs
 
@@ -36,9 +37,14 @@ def _pad_to(x, m: int, axis: int):
 
 
 # ------------------------------------------------------------------ rs_matmul
-def rs_matmul(x, w, *, out_dtype=jnp.float32, tiling=None,
+def rs_matmul(x, w, *, bias=None, activation: Optional[str] = None,
+              out_dtype=jnp.float32, tiling=None,
               interpret: Optional[bool] = None):
-    """Dense (M,K)·(K,N) via the row-stationary kernel. Any M,K,N (padded)."""
+    """Dense (M,K)·(K,N) via the row-stationary kernel. Any M,K,N (padded).
+
+    bias (N,) and ``activation`` fuse into the kernel's accumulator-flush
+    epilogue (kernels/epilogue.py) — no second pass over the output.
+    """
     interpret = (not _on_tpu()) if interpret is None else interpret
     M, K = x.shape
     _, N = w.shape
@@ -46,8 +52,10 @@ def rs_matmul(x, w, *, out_dtype=jnp.float32, tiling=None,
     assert t.fits(), t                       # the Table-III SPad-fit gate
     xp = _pad_to(_pad_to(x, t.bm, 0), t.bk, 1)
     wp = _pad_to(_pad_to(w, t.bk, 0), t.bn, 1)
-    out = _rs.rs_matmul_raw(xp, wp, bm=t.bm, bk=t.bk, bn=t.bn,
-                            out_dtype=out_dtype, interpret=interpret)
+    bp = None if bias is None else _pad_to(bias.reshape(1, N), t.bn, 1)
+    out = _rs.rs_matmul_raw(xp, wp, bm=t.bm, bk=t.bk, bn=t.bn, bias=bp,
+                            activation=activation, out_dtype=out_dtype,
+                            interpret=interpret)
     return out[:M, :N]
 
 
@@ -62,22 +70,82 @@ def prepare_bcsc(m: BCSCMatrix):
     return (m.blocks, m.row_ids, jnp.asarray(col_ids), m.shape[1])
 
 
-def bcsc_matmul(x, m: BCSCMatrix, *, bm: int = 0, out_dtype=jnp.float32,
+def _bcsc_apply(x, blocks, row_ids, col_ids, *, n_out: int, bm: int,
+                bias, activation, out_dtype, interpret):
+    """Shared GEMV/GEMM dispatch over prepared BCSC vectors (dataflow rule)."""
+    M = x.shape[0]
+    if bm <= 0:
+        bm = dataflow.bcsc_tile_m(M)
+    xp = _pad_to(x, bm, 0)
+    bp = None if bias is None else _pad_to(bias.reshape(1, n_out),
+                                           blocks.shape[2], 1)
+    if dataflow.matmul_path(M) == "gemv" and bm == dataflow.GEMV_BM:
+        out = _bcsc.bcsc_gemv_raw(xp, blocks.astype(x.dtype), row_ids,
+                                  col_ids, n_out=n_out, bm=bm, bias=bp,
+                                  activation=activation, out_dtype=out_dtype,
+                                  interpret=interpret)
+        return out[:M]
+    out = _bcsc.bcsc_matmul_raw(xp, blocks.astype(x.dtype), row_ids, col_ids,
+                                n_out=n_out, bm=bm, out_dtype=jnp.float32,
+                                interpret=interpret)
+    if bias is not None or activation not in (None, "none"):
+        # GEMM path keeps the revisit-accumulate kernel; epilogue applies as a
+        # jnp post-op through the same shared definition (numerics identical).
+        out = _epi.fused_epilogue(out, bp, activation)
+    return out[:M].astype(out_dtype)
+
+
+def bcsc_matmul(x, m: BCSCMatrix, *, bm: int = 0, bias=None,
+                activation: Optional[str] = None, out_dtype=jnp.float32,
                 interpret: Optional[bool] = None):
-    """Sparse (M,K)·BCSC(K,N) -> (M,N); skips zero weight blocks entirely."""
+    """Sparse (M,K)·BCSC(K,N) -> (M,N); skips zero weight blocks entirely.
+
+    Dispatches automatically on M (core.dataflow.matmul_path): decode-shaped
+    M ≤ GEMV_M_MAX takes the scratch-accumulator GEMV kernel, larger M the
+    revisit-accumulate GEMM kernel. Pass ``bm`` to force a GEMM tile.
+    """
     interpret = (not _on_tpu()) if interpret is None else interpret
     blocks, row_ids, col_ids, n_out = prepare_bcsc(m)
-    M, K = x.shape
-    assert K == m.shape[0], (x.shape, m.shape)
-    bk, bn = m.block
-    if bm <= 0:
-        bm = min(512, max(8, 1 << (max(M, 1) - 1).bit_length()))
-        bm = min(bm, 512)
-    xp = _pad_to(x, bm, 0)
-    out = _bcsc.bcsc_matmul_raw(xp, blocks.astype(x.dtype), row_ids, col_ids,
-                                n_out=n_out, bm=bm, out_dtype=out_dtype,
-                                interpret=interpret)
-    return out[:M]
+    assert x.shape[1] == m.shape[0], (x.shape, m.shape)
+    return _bcsc_apply(x, blocks, row_ids, col_ids, n_out=n_out, bm=bm,
+                       bias=bias, activation=activation, out_dtype=out_dtype,
+                       interpret=interpret)
+
+
+def bcsc_gemv(x, m: BCSCMatrix, *, bias=None,
+              activation: Optional[str] = None, out_dtype=jnp.float32,
+              interpret: Optional[bool] = None):
+    """Decode fast path: skinny (M≤8,K)·BCSC(K,N) -> (M,N) via the GEMV kernel."""
+    M = x.shape[0]
+    assert M <= dataflow.GEMV_M_MAX, \
+        f"bcsc_gemv is the M<={dataflow.GEMV_M_MAX} decode path, got M={M}"
+    return bcsc_matmul(x, m, bias=bias, activation=activation,
+                       out_dtype=out_dtype, interpret=interpret)
+
+
+def is_packed(w) -> bool:
+    """True if a params leaf-group is a BCSC-packed weight dict — the
+    {blocks, row_ids, col_ids} contract consumed by bcsc_apply_packed
+    (produced by serve.sparse.pack_weight)."""
+    return isinstance(w, dict) and "blocks" in w and "col_ids" in w
+
+
+def bcsc_apply_packed(x, packed, *, n_out: int, bias=None,
+                      activation: Optional[str] = None,
+                      out_dtype=jnp.float32,
+                      interpret: Optional[bool] = None):
+    """Jit-friendly entry: (M,K) · packed BCSC dict -> (M,N).
+
+    ``packed`` is serve.sparse.pack_weight's dict of plain arrays
+    {blocks (nnzb,bk,bn), row_ids (nnzb,), col_ids (nnzb,)} — traversable as a
+    params pytree leaf group (stacks under lax.scan, no host-side prep at
+    trace time). n_out must be static (callers derive it from the config).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _bcsc_apply(x, packed["blocks"], packed["row_ids"],
+                       packed["col_ids"], n_out=n_out, bm=0, bias=bias,
+                       activation=activation, out_dtype=out_dtype,
+                       interpret=interpret)
 
 
 # -------------------------------------------------- sliding-window attention

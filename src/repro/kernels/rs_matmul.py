@@ -18,9 +18,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import epilogue as _epi
+from repro.kernels.epilogue import fused_epilogue
 
-def _rs_matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
-    """Grid (m, n, k), k innermost: accumulate into the stationary psum tile."""
+
+def _rs_matmul_kernel(x_ref, w_ref, *rest, nk: int, activation, has_bias: bool):
+    """Grid (m, n, k), k innermost: accumulate into the stationary psum tile.
+
+    The fused bias+activation epilogue (kernels/epilogue.py) runs as the psum
+    tile drains at k == nk-1 — shared with the bcsc_gemv decode kernel.
+    """
+    if has_bias:
+        bias_ref, o_ref, acc_ref = rest
+    else:
+        o_ref, acc_ref = rest
+        bias_ref = None
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -32,29 +44,44 @@ def _rs_matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
 
     @pl.when(k == nk - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        b = bias_ref[0] if has_bias else None
+        o_ref[...] = fused_epilogue(acc_ref[...], b,
+                                    activation).astype(o_ref.dtype)
 
 
-def rs_matmul_raw(x, w, *, bm: int, bk: int, bn: int,
-                  out_dtype=jnp.float32, interpret: bool = False):
-    """(M,K)·(K,N) -> (M,N). M % bm == K % bk == N % bn == 0 (pad in ops.py)."""
+def rs_matmul_raw(x, w, *, bm: int, bk: int, bn: int, bias=None,
+                  activation=None, out_dtype=jnp.float32,
+                  interpret: bool = False):
+    """(M,K)·(K,N) -> (M,N). M % bm == K % bk == N % bn == 0 (pad in ops.py).
+
+    bias, if given, is (1, N) and is added — with ``activation`` applied —
+    inside the kernel's final k-step (no second pass over the output).
+    """
     M, K = x.shape
     K2, N = w.shape
     assert K == K2, (x.shape, w.shape)
     assert M % bm == 0 and K % bk == 0 and N % bn == 0, (M, K, N, bm, bk, bn)
     nm, nn, nk = M // bm, N // bn, K // bk
+    has_bias = bias is not None
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    args = [x, w]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        args.append(bias)
 
     return pl.pallas_call(
-        functools.partial(_rs_matmul_kernel, nk=nk),
+        functools.partial(_rs_matmul_kernel, nk=nk, activation=activation,
+                          has_bias=has_bias),
         grid=(nm, nn, nk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_epi.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, w)
+    )(*args)

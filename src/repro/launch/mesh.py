@@ -8,7 +8,14 @@ importing this module never touches jax device state — only launch/dryrun.py
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+# AxisType landed after jax 0.4.x; older versions only have Auto meshes, which
+# is exactly what we request — so its absence changes nothing.
+try:
+    from jax.sharding import AxisType
+except ImportError:          # pragma: no cover - jax < 0.5
+    AxisType = None
 
 
 def _make(shape, axes) -> Mesh:
@@ -19,9 +26,9 @@ def _make(shape, axes) -> Mesh:
     assert len(devs) >= n, (f"need {n} devices, have {len(devs)} — the dry-run "
                             "must set XLA_FLAGS=--xla_force_host_platform_"
                             "device_count=512 before importing jax")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devs[:n])
+    kw = {} if AxisType is None else {
+        "axis_types": (AxisType.Auto,) * len(axes)}
+    return jax.make_mesh(shape, axes, devices=devs[:n], **kw)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -73,17 +73,34 @@ def _ring_positions(pos, m: int):
 
 
 def _valid_mask(cfg, kind: str, cap: int, pos):
+    """pos scalar or (B,) — per-slot positions for the device-resident decode
+    loop (serve.engine). Returns (1, cap) or (B, cap)."""
+    p = jnp.asarray(pos)[..., None]          # (1,) -> (cap,) or (B,1) -> (B,cap)
+    i = jnp.arange(cap)
     if kind == "global":
-        return (jnp.arange(cap) <= pos)[None, :]
-    slot_pos = _ring_positions(pos, cap)
-    if kind == "local":
-        return (slot_pos >= 0)[None, :]
-    chunk_start = (pos // cfg.chunk_size) * cfg.chunk_size
-    return (slot_pos >= chunk_start)[None, :]
+        m = i <= p
+    else:
+        slot_pos = p - jnp.mod(p - i, cap)   # _ring_positions, broadcast form
+        if kind == "local":
+            m = slot_pos >= 0
+        else:
+            chunk_start = (p // cfg.chunk_size) * cfg.chunk_size
+            m = slot_pos >= chunk_start
+    return m if m.ndim == 2 else m[None, :]
 
 
 # --------------------------------------------------------------- decode block
+def _positions_2d(pos, B: int):
+    """Scalar or (B,) pos -> (B,1) int32 position matrix."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    return pos[:, None].astype(jnp.int32)
+
+
 def _attn_decode(p, x, kind, cache_entry, pos, cfg):
+    """pos scalar (cohort decode) or (B,) (per-slot, the continuous-batching
+    engine): each slot writes its own ring/cache position."""
     B = x.shape[0]
     q, k, v = layers.attn_qkv(p, x, cfg)              # q (B,1,H,D), k/v (B,1,KV,D)
     if cfg.qk_norm:
@@ -91,13 +108,24 @@ def _attn_decode(p, x, kind, cache_entry, pos, cfg):
         k = layers.head_rms_norm(k, p["k_norm"], cfg.norm_eps)
     if cfg.pos_embed == "rope":
         theta = tfm._rope_theta_for(cfg, kind)
-        positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+        positions = _positions_2d(pos, B)
         q = layers.rope(q, positions, theta)
         k = layers.rope(k, positions, theta)
     cap = cache_entry["k"].shape[1]
-    idx = pos % cap if kind != "global" else pos
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache_entry["k"], k, idx, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache_entry["v"], v, idx, axis=1)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        idx = pos % cap if kind != "global" else pos
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache_entry["k"], k,
+                                                      idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache_entry["v"], v,
+                                                      idx, axis=1)
+    else:
+        # per-slot write: one-hot select along the cap axis (vectorized form
+        # of dynamic_update_slice; same clamp-at-cap semantics for 'global')
+        idx = pos % cap if kind != "global" else jnp.minimum(pos, cap - 1)
+        sel = (jnp.arange(cap)[None, :] == idx[:, None])[..., None, None]
+        k_cache = jnp.where(sel, k, cache_entry["k"])
+        v_cache = jnp.where(sel, v, cache_entry["v"])
     mask = _valid_mask(cfg, kind, cap, pos)
     ctx = layers.decode_attention(q, k_cache, v_cache,
                                   jnp.broadcast_to(mask, (B, cap)), cfg)
@@ -131,14 +159,15 @@ def apply_block_decode(p, x, cond, kind, is_moe, cfg, cache_entry, pos):
 
 
 def serve_step(params, cache, tokens, pos, cfg, cond=None, hints=None):
-    """One decode step. tokens (B,1) or (B,K,1); pos scalar int32.
-    Returns (logits fp32, new_cache)."""
+    """One decode step. tokens (B,1) or (B,K,1); pos scalar int32 (shared
+    across the batch) or (B,) int32 (per-slot positions — the continuous
+    batching engine's device-resident loop). Returns (logits fp32, new_cache)."""
     x = tfm.embed_tokens(params, tokens, cfg)
     if hints is not None:
         x = hints.constrain_act(x)
     B = x.shape[0]
     if cfg.pos_embed == "sinusoidal":
-        positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+        positions = _positions_2d(pos, B)
         x = x + layers.sinusoidal_pos(positions, cfg.d_model).astype(COMPUTE_DTYPE)
     kinds = tfm.slot_kinds(cfg)
     period = tfm.scan_period(cfg)

@@ -275,27 +275,58 @@ def cross_attention(params, x, cond, cfg):
 
 
 # ------------------------------------------------------------------------- MLP
+def _packed_proj(x, packed, n_out: int, activation: Optional[str] = None):
+    """(B,S,d) · BCSC-packed weight -> (B,S,n_out) via the sparse kernels.
+
+    M = B·S rows: decode shapes (M ≤ dataflow.GEMV_M_MAX) hit the bcsc_gemv
+    scratch-accumulator kernel with the activation fused into the epilogue;
+    prefill/training shapes take the BCSC GEMM kernel. Zero weight blocks are
+    skipped entirely — the serve-path realization of the paper's Sparse PE.
+    """
+    from repro.kernels import ops as _ops   # deferred: keep layer import light
+    B, S, d = x.shape
+    y = _ops.bcsc_apply_packed(x.reshape(B * S, d), packed, n_out=n_out,
+                               activation=activation,
+                               out_dtype=jnp.float32)
+    return y.reshape(B, S, n_out)
+
+
 def mlp(params, x, cfg, d_ff: Optional[int] = None):
     """GeGLU/SwiGLU MLP, Megatron-TP pattern: up-projections column-sharded
     over the model axis (grouped-multicast mode), down-projection row-sharded
-    with a psum — the hidden h stays (batch, seq, d_ff/model) per chip."""
+    with a psum — the hidden h stays (batch, seq, d_ff/model) per chip.
+
+    Any projection stored BCSC-packed (serve.sparse.sparsify_mlp_params)
+    bypasses the einsum and runs the sparse kernel with the activation fused
+    into its epilogue; dense weights keep the exact original path."""
+    from repro.kernels.ops import is_packed
+    act_name = "silu" if cfg.mlp_act == "silu" else "gelu"
     act = jax.nn.silu if cfg.mlp_act == "silu" else \
         (lambda t: jax.nn.gelu(t, approximate=True))
+    ff = d_ff or (cfg.dense_d_ff if (cfg.moe and cfg.dense_d_ff) else cfg.d_ff)
+    d = x.shape[-1]
     if cfg.mlp_gated:
-        g = jnp.einsum("bsd,df->bsf", x, cast_compute(params["wg"]),
+        wg, wu = params["wg"], params["wu"]
+        g_act = _packed_proj(x, wg, ff, act_name) if is_packed(wg) else \
+            act(jnp.einsum("bsd,df->bsf", x, cast_compute(wg),
+                           preferred_element_type=ACCUM_DTYPE))
+        u = _packed_proj(x, wu, ff) if is_packed(wu) else \
+            jnp.einsum("bsd,df->bsf", x, cast_compute(wu),
                        preferred_element_type=ACCUM_DTYPE)
-        u = jnp.einsum("bsd,df->bsf", x, cast_compute(params["wu"]),
-                       preferred_element_type=ACCUM_DTYPE)
-        h = constrain((act(g) * u).astype(COMPUTE_DTYPE), tp_dim=2)
+        h = constrain((g_act * u).astype(COMPUTE_DTYPE), tp_dim=2)
     else:
-        h = constrain(act(
-            jnp.einsum("bsd,df->bsf", x, cast_compute(params["w1"]),
-                       preferred_element_type=ACCUM_DTYPE)
-        ).astype(COMPUTE_DTYPE), tp_dim=2)
+        w1 = params["w1"]
+        h1 = _packed_proj(x, w1, ff, act_name) if is_packed(w1) else \
+            act(jnp.einsum("bsd,df->bsf", x, cast_compute(w1),
+                           preferred_element_type=ACCUM_DTYPE))
+        h = constrain(h1.astype(COMPUTE_DTYPE), tp_dim=2)
     wd = params["wd"] if cfg.mlp_gated else params["w2"]
     # row-parallel down-proj in bf16: TP all-reduce payload halves (§Perf C2)
-    out = jnp.einsum("bsf,fd->bsd", h, cast_compute(wd),
-                     preferred_element_type=COMPUTE_DTYPE)
+    if is_packed(wd):
+        out = _packed_proj(h, wd, d).astype(COMPUTE_DTYPE)
+    else:
+        out = jnp.einsum("bsf,fd->bsd", h, cast_compute(wd),
+                         preferred_element_type=COMPUTE_DTYPE)
     return constrain(out)
 
 

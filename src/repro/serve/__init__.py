@@ -1,3 +1,3 @@
-from repro.serve import engine, kvcache
+from repro.serve import engine, kvcache, sparse
 
-__all__ = ["engine", "kvcache"]
+__all__ = ["engine", "kvcache", "sparse"]

@@ -1,8 +1,12 @@
 """Batched serving engine: prefill + decode steps, sampling, slot management.
 
 ``serve_step``/``prefill_step`` are the functions the dry-run lowers for the
-``decode_*``/``prefill_*`` shapes. The ``DecodeEngine`` adds a host-side
-continuous-batching loop (slot refill on EOS) used by examples/serve_lm.py.
+``decode_*``/``prefill_*`` shapes. The ``DecodeEngine`` adds a continuous
+batching loop (per-slot refill on EOS) whose inner decode loop is **device
+resident**: sampling, EOS detection and budget accounting all run inside a
+``lax.scan`` of ``sync_every`` fused steps, so between refills there are zero
+per-token device→host transfers — the utilization lever the Eyexam step model
+identifies for batch-1 decode (paper Table VI; ISSUE 1).
 """
 from __future__ import annotations
 
@@ -13,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import decoding, transformer as tfm
+from repro.serve import kvcache
 
 
 def make_serve_step(cfg) -> Callable:
@@ -81,55 +86,156 @@ class Request:
 
 
 class DecodeEngine:
-    """Host-side continuous batching over a fixed slot count.
+    """Continuous batching over a fixed slot count, device-resident decode.
 
-    Slots hold independent sequences; finished slots are refilled from the
-    queue between steps (cache entries are per-slot along batch dim, so refill
-    is a host-side prefill of one slot batched into the running cache — here
-    simplified to cohort refill, which is what fixed-shape TPU serving does).
+    Slots hold independent sequences with **per-slot positions** (the
+    vector-pos path of decoding.serve_step). Finished slots are refilled
+    individually: one prompt is prefilled at batch 1 and its cache rows are
+    spliced into the running slot cache (kvcache.SlotAllocator does the
+    alloc/free accounting). Between refills the loop never leaves the device:
+    ``sync_every`` decode steps — on-device sampling, EOS live-mask and
+    max_new budget tracking — run as one ``lax.scan`` (same structure as
+    make_generate_fn), and the generated token block is fetched with a single
+    ``jax.device_get`` per chunk. ``host_syncs`` counts those fetches; there
+    are zero per-token transfers (the pre-refactor loop did one ``int(nxt[i])``
+    sync per slot per token).
     """
 
     def __init__(self, cfg, params, slots: int, cache_len: int,
-                 eos_id: int = 1, temperature: float = 0.0):
+                 eos_id: int = 1, temperature: float = 0.0,
+                 sync_every: int = 8):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.cache_len = cache_len
         self.eos_id = eos_id
         self.temperature = temperature
-        self._serve = jax.jit(make_serve_step(cfg))
-        self._prefill = jax.jit(make_prefill_step(cfg, cache_len))
+        self.sync_every = max(1, sync_every)
+        self.host_syncs = 0                  # device->host fetches (per chunk)
+        self._chunk = jax.jit(self._make_chunk_fn())
+        self._refill = jax.jit(self._make_refill_fn())
+
+    # ------------------------------------------------------ device programs
+    def _make_refill_fn(self) -> Callable:
+        """Prefill one prompt (batch 1) and splice it into slot ``slot``."""
+        cfg, cache_len = self.cfg, self.cache_len
+
+        def refill(params, state, toks, slot, max_new):
+            cache, last, pos, live, budget = state
+            logits, slot_cache = decoding.prefill(params, toks, cfg, cache_len)
+            plen = toks.shape[-1] + (cfg.num_patches
+                                     if cfg.frontend == "vision" else 0)
+
+            def splice(c, s, axis):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    c, s.astype(c.dtype), slot, axis=axis)
+
+            new_cache = {}
+            if "blocks" in cache:    # stacked entries: (nper, B, ...) — axis 1
+                new_cache["blocks"] = jax.tree.map(
+                    lambda c, s: splice(c, s, 1),
+                    cache["blocks"], slot_cache["blocks"])
+            if "rem" in cache:       # unstacked entries: (B, ...) — axis 0
+                new_cache["rem"] = jax.tree.map(
+                    lambda c, s: splice(c, s, 0),
+                    cache["rem"], slot_cache["rem"])
+            last = splice(last, logits[:, -1].astype(last.dtype), 0)
+            pos = jax.lax.dynamic_update_slice(pos, jnp.int32(plen)[None],
+                                               (slot,))
+            live = jax.lax.dynamic_update_slice(
+                live, jnp.ones((1,), jnp.bool_), (slot,))
+            budget = jax.lax.dynamic_update_slice(budget, max_new[None],
+                                                  (slot,))
+            return (new_cache, last, pos, live, budget)
+
+        return refill
+
+    def _make_chunk_fn(self) -> Callable:
+        """sync_every fused decode steps: sample → track EOS/budget → step."""
+        cfg, T = self.cfg, self.sync_every
+        temperature, eos_id = self.temperature, self.eos_id
+        K = cfg.num_codebooks
+
+        def chunk(params, state, rng):
+            def step(carry, rng_i):
+                cache, last, pos, live, budget = carry
+                # ``last`` is (B,V) for LMs, (B,K,V) for multi-codebook
+                # (musicgen) — sample_temperature reduces the trailing axis
+                # either way; the first codebook carries EOS.
+                nxt = sample_temperature(rng_i, last, temperature)
+                head = nxt[:, 0] if K > 1 else nxt
+                emit = live                          # emitted this step
+                budget = budget - emit.astype(jnp.int32)
+                live = live & (head != eos_id) & (budget > 0)
+                tok = nxt[..., None]                 # (B,1) or (B,K,1)
+                logits, cache = decoding.serve_step(params, cache, tok, pos,
+                                                    cfg)
+                last = logits[:, -1]                 # (B,V) or (B,K,V)
+                return (cache, last, pos + 1, live, budget), (nxt, emit)
+
+            rngs = jax.random.split(rng, T)
+            state, (toks, emits) = jax.lax.scan(step, state, rngs)
+            return state, toks, emits
+
+        return chunk
+
+    # -------------------------------------------------------------- host loop
+    def _init_state(self):
+        cfg = self.cfg
+        cache = decoding.init_cache(cfg, self.slots, self.cache_len)
+        vshape = (self.slots, cfg.num_codebooks, cfg.vocab_padded) \
+            if cfg.num_codebooks > 1 else (self.slots, cfg.vocab_padded)
+        last = jnp.zeros(vshape, jnp.float32)
+        pos = jnp.zeros((self.slots,), jnp.int32)
+        live = jnp.zeros((self.slots,), jnp.bool_)
+        budget = jnp.zeros((self.slots,), jnp.int32)
+        return (cache, last, pos, live, budget)
 
     def run(self, requests: List[Request], rng=None) -> List[Request]:
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         queue = list(requests)
         done: List[Request] = []
-        while queue:
-            cohort = [queue.pop(0) for _ in range(min(self.slots, len(queue)))]
-            plen = max(len(r.prompt) for r in cohort)
-            toks = jnp.array([[0] * (plen - len(r.prompt)) + r.prompt
-                              for r in cohort], jnp.int32)
-            logits, cache = self._prefill(self.params, toks)
-            pos = jnp.int32(plen)
-            last = logits[:, -1]
-            live = [True] * len(cohort)
-            for step in range(max(r.max_new for r in cohort)):
-                rng, k = jax.random.split(rng)
-                nxt = sample_temperature(k, last, self.temperature)
-                for i, r in enumerate(cohort):
-                    if live[i] and len(r.out) < r.max_new:
-                        t = int(nxt[i])
-                        r.out.append(t)
-                        if t == self.eos_id or len(r.out) >= r.max_new:
-                            live[i] = False
-                            r.done = True
-                if not any(live):
-                    break
-                logits, cache = self._serve(self.params, cache,
-                                            nxt[:, None], pos)
-                last = logits[:, -1] if logits.ndim == 3 else logits[:, -1]
-                pos = pos + 1
-            for r in cohort:
-                r.done = True
-                done.append(r)
+        for r in [r for r in queue if r.max_new <= 0]:
+            queue.remove(r)
+            r.done = True
+            done.append(r)
+        alloc = kvcache.SlotAllocator(self.slots)
+        active: Dict[int, Request] = {}
+        state = self._init_state()
+        K = self.cfg.num_codebooks
+
+        while queue or active:
+            while queue and alloc.available():
+                r = queue[0]
+                plen = len(r.prompt) + (self.cfg.num_patches
+                                        if self.cfg.frontend == "vision" else 0)
+                if plen + r.max_new > self.cache_len:
+                    # global-attention slots would silently wrap/clobber the
+                    # last cache row past cache_len — refuse loudly instead
+                    raise ValueError(
+                        f"request {r.rid}: prompt ({plen}) + max_new "
+                        f"({r.max_new}) exceeds cache_len ({self.cache_len})")
+                slot = alloc.alloc()
+                queue.pop(0)
+                toks = jnp.asarray([r.prompt], jnp.int32)
+                state = self._refill(self.params, state, toks,
+                                     jnp.int32(slot), jnp.int32(r.max_new))
+                active[slot] = r
+            rng, k = jax.random.split(rng)
+            state, toks, emits = self._chunk(self.params, state, k)
+            # the single device->host transfer for this sync_every-token chunk
+            toks_h, emits_h, live_h = jax.device_get(
+                (toks, emits, state[3]))
+            self.host_syncs += 1
+            for t in range(emits_h.shape[0]):
+                for slot, r in active.items():
+                    if emits_h[t, slot]:
+                        r.out.append([int(v) for v in toks_h[t, slot]]
+                                     if K > 1 else int(toks_h[t, slot]))
+            for slot in list(active):
+                if not live_h[slot]:
+                    r = active.pop(slot)
+                    r.done = True
+                    done.append(r)
+                    alloc.free(slot)
         return done

@@ -33,6 +33,44 @@ def max_slots(cfg, cache_len: int, chips: int,
     return max(int(budget // max(per_slot, 1)), 1)
 
 
+class SlotAllocator:
+    """Alloc/free accounting for the engine's preallocated slot cache.
+
+    The device cache is a fixed (slots, cache_len, ...) allocation (the GLB
+    analogue: capacity is provisioned once, occupancy varies). The allocator
+    tracks which batch rows are live so refills write into free rows only —
+    the host-side half of the per-slot refill contract in serve.engine.
+    """
+
+    def __init__(self, slots: int):
+        self.slots = slots
+        self._free = list(range(slots - 1, -1, -1))   # pop() yields slot 0 first
+        self._live = set()
+
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.slots - len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("no free slots")
+        s = self._free.pop()
+        self._live.add(s)
+        return s
+
+    def free(self, slot: int) -> None:
+        if slot not in self._live:
+            raise ValueError(f"slot {slot} is not live")
+        self._live.remove(slot)
+        self._free.append(slot)
+
+    def live_slots(self):
+        return sorted(self._live)
+
+
 def report(cfg, batch: int, cache_len: int, chips: int) -> Dict[str, float]:
     total = cache_bytes(cfg, batch, cache_len)
     return {

@@ -1,0 +1,152 @@
+"""BCSC-pack MLP weights so decode projections hit the sparse GEMV kernel.
+
+The paper's batch-1 headline (Table VI: sparse MobileNet 12.6×) comes from
+processing weights *in compressed form* — never expanding them — while the PE
+array stays busy. The serve-path analogue (DESIGN.md §2–3): block-prune and
+BCSC-encode each MLP projection **on host at load time**, store the prepared
+index vectors as plain arrays inside the params pytree, and let
+``models.layers.mlp`` route any packed weight through
+``kernels.ops.bcsc_apply_packed`` (GEMV for decode-shaped M, GEMM otherwise).
+
+Stacking constraint: the transformer scans over a stacked params pytree
+(leading ``num_periods`` axis), so every layer's packed weight must have the
+same nnzb. Layers with fewer non-zero blocks are padded with explicit zero
+blocks appended to the last block-column — the same repeated-address
+convention ensure_nonempty_cols uses (paper Fig. 16), so correctness is
+unchanged and the pad cost is bounded by the densest layer of the stack.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparsity as sp
+from repro.kernels import ops as _ops
+
+# MLP projection names eligible for packing (gated and plain variants).
+MLP_WEIGHTS = ("wg", "wu", "wd", "w1", "w2")
+
+
+# the packed-dict contract lives with its consumer (kernels.ops); re-exported
+# here for serve-side callers
+is_packed = _ops.is_packed
+
+
+def pack_weight(w, bk: int, bn: int) -> Dict[str, jnp.ndarray]:
+    """Host-side prune-free encode+prepare of one (K,N) weight.
+
+    Returns {blocks (nnzb,bk,bn), row_ids (nnzb,), col_ids (nnzb,)} — the
+    scalar-prefetch vectors fully expanded so nothing host-side remains at
+    trace time (jit/scan-safe). N is NOT stored: it is re-derived from the
+    config by the consumer (shapes must be static under jit).
+    """
+    blocks, row_ids, col_ids, _ = _ops.prepare_bcsc(
+        sp.bcsc_encode(np.asarray(w), bk, bn))
+    return {"blocks": jnp.asarray(blocks),
+            "row_ids": jnp.asarray(row_ids),
+            "col_ids": jnp.asarray(col_ids, dtype=jnp.int32)}
+
+
+def pad_packed(packed: Dict[str, jnp.ndarray], nnzb: int) -> Dict[str, jnp.ndarray]:
+    """Pad a packed weight to ``nnzb`` blocks with explicit zero blocks.
+
+    Appended blocks carry the last column id (col_ids stays non-decreasing)
+    and accumulate zeros — a no-op numerically, exactly like the repeated
+    address entries of Fig. 16.
+    """
+    have = packed["blocks"].shape[0]
+    if have == nnzb:
+        return packed
+    assert have < nnzb, (have, nnzb)
+    pad = nnzb - have
+    bk, bn = packed["blocks"].shape[1:]
+    blocks = np.concatenate([np.asarray(packed["blocks"]),
+                             np.zeros((pad, bk, bn),
+                                      np.asarray(packed["blocks"]).dtype)])
+    row_ids = np.concatenate([np.asarray(packed["row_ids"]),
+                              np.zeros((pad,), np.int32)])
+    last_col = np.asarray(packed["col_ids"])[-1]
+    col_ids = np.concatenate([np.asarray(packed["col_ids"]),
+                              np.full((pad,), last_col, np.int32)])
+    return {"blocks": jnp.asarray(blocks), "row_ids": jnp.asarray(row_ids),
+            "col_ids": jnp.asarray(col_ids)}
+
+
+def _pack_stack(w_stack: np.ndarray, bk: int, bn: int) -> Dict[str, jnp.ndarray]:
+    """(L,K,N) stacked weight -> packed dict with leading L axis (common nnzb)."""
+    per_layer = [pack_weight(w_stack[l], bk, bn)
+                 for l in range(w_stack.shape[0])]
+    nnzb = max(p["blocks"].shape[0] for p in per_layer)
+    per_layer = [pad_packed(p, nnzb) for p in per_layer]
+    return {k: jnp.stack([p[k] for p in per_layer]) for k in per_layer[0]}
+
+
+def _packable(w, bk: int, bn: int) -> bool:
+    return (hasattr(w, "ndim") and w.ndim >= 2
+            and w.shape[-2] % bk == 0 and w.shape[-1] % bn == 0)
+
+
+def sparsify_mlp_params(params, cfg, sparsity: float = 0.0,
+                        block: Tuple[int, int] = (16, 16)):
+    """Block-prune (optional) + BCSC-pack every dense-MLP weight in ``params``.
+
+    Returns (new_params, stats). sparsity == 0 packs without pruning (every
+    block with a non-zero entry is kept) — used to check numerical equivalence
+    against the dense path. Weights whose dims don't tile by ``block`` are
+    left dense. MoE experts and attention projections are out of scope (the
+    paper's Sparse-PE targets the big stationary weight streams).
+    """
+    bk, bn = block
+    stats = {"packed": 0, "kept_blocks": 0, "total_blocks": 0}
+
+    def pack_mat(w):
+        wn = np.asarray(w, np.float32)
+        if sparsity > 0:
+            wn = np.asarray(sp.block_magnitude_prune(jnp.asarray(wn),
+                                                     sparsity, bk, bn))
+        return wn
+
+    def convert_mlp(mlp: Dict, stacked: bool) -> Dict:
+        out = dict(mlp)
+        for name in MLP_WEIGHTS:
+            w = mlp.get(name)
+            if w is None or not _packable(w, bk, bn):
+                continue
+            if stacked:
+                pruned = np.stack([pack_mat(np.asarray(w)[l])
+                                   for l in range(w.shape[0])])
+                out[name] = _pack_stack(pruned, bk, bn)
+                nb = (w.shape[-2] // bk) * (w.shape[-1] // bn) * w.shape[0]
+                kept = int(out[name]["blocks"].shape[0] *
+                           out[name]["blocks"].shape[1])
+            else:
+                packed = pack_weight(pack_mat(w), bk, bn)
+                out[name] = packed
+                nb = (w.shape[-2] // bk) * (w.shape[-1] // bn)
+                kept = int(packed["blocks"].shape[0])
+            stats["packed"] += 1
+            stats["kept_blocks"] += kept
+            stats["total_blocks"] += nb
+        return out
+
+    def walk(tree, stacked: bool):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for k, v in tree.items():
+            if k == "mlp" and isinstance(v, dict):
+                out[k] = convert_mlp(v, stacked)
+            else:
+                out[k] = walk(v, stacked)
+        return out
+
+    new_params = dict(params)
+    if "blocks" in params:
+        new_params["blocks"] = walk(params["blocks"], stacked=True)
+    if "rem" in params:
+        new_params["rem"] = walk(params["rem"], stacked=False)
+    if stats["total_blocks"]:
+        stats["block_density"] = stats["kept_blocks"] / stats["total_blocks"]
+    return new_params, stats

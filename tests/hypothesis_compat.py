@@ -1,0 +1,31 @@
+"""Optional-hypothesis shim (ISSUE 1 satellite).
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt). When it is
+missing, importing it at test-module top level used to abort *collection* of
+the whole suite. This shim keeps every non-property test runnable: property
+tests decorated with the stub ``given`` are individually skipped instead.
+
+Usage in test modules:  ``from hypothesis_compat import given, settings, st``
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAS_HYPOTHESIS = False
+
+    class _Strategy:
+        """Accepts any strategies.* call and returns an inert placeholder."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategy()
+
+    def given(*_a, **_k):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed (see requirements-dev.txt)")(fn)
+
+    def settings(*_a, **_k):
+        return lambda fn: fn

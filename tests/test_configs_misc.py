@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional dep, see tests/hypothesis_compat.py
 
 from repro.configs import ARCH_NAMES, SHAPES, get_config
 from repro.core import dataflow

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional dep, see tests/hypothesis_compat.py
 
 from repro.core import eyexam, hloparse, reuse
 
@@ -72,6 +72,8 @@ def test_hloparse_counts_loop_iterations():
     expect = 5 * 2 * 32 * 64 * 64          # 5 iterations x one (32,64)@(64,64)
     assert cost.flops == expect
     ca = compiled.cost_analysis()
+    if isinstance(ca, list):               # jax < 0.5 returns [dict]
+        ca = ca[0] if ca else {}
     assert ca.get("flops", 0) < expect     # the builtin undercounts
 
 

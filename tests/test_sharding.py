@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional dep, see tests/hypothesis_compat.py
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config

@@ -2,7 +2,7 @@
 paper's exact Fig. 16 example and hypothesis round-trip properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional dep, see tests/hypothesis_compat.py
 
 from repro.core import sparsity
 
