@@ -89,6 +89,47 @@ def bcsc_tile_m(M: int) -> int:
     return min(512, max(SUBLANE, 1 << (max(M, 1) - 1).bit_length()))
 
 
+# ------------------------------------------------------------- MLP dispatch
+# The fused bcsc_mlp megakernel (kernels/bcsc_mlp.py) holds the whole
+# (bm × d_ff) hidden activation in VMEM scratch — the SPad-residency condition
+# of the paper's compressed-domain processing. The rule mirrors Table III:
+# fuse when the scratch fits the budget, fall back to the two-call path when
+# it does not, and skip packing entirely when the block density is so high
+# that structural skipping cannot beat the dense MXU stream.
+FUSED_MLP_VMEM_BUDGET = VMEM_BYTES // 2   # scratch share of VMEM (streams keep the rest)
+DENSE_BLOCK_DENSITY = 0.85                # ≥ this, BCSC walk loses to dense stream
+# Payload blocks streamed per megakernel grid step (one contiguous DMA, C
+# unrolled MACs) — the SPad-line streaming analogue. Packs are padded to a
+# multiple of this (serve.sparse) so every segment divides evenly.
+BCSC_CHUNK = 8
+
+
+def fused_mlp_scratch_bytes(bm: int, d_ff: int, n_out: int,
+                            gated: bool = True) -> int:
+    """fp32 VMEM scratch of the megakernel: hidden (×2 gated) + out accum."""
+    n_hidden = 2 if gated else 1
+    return 4 * bm * (n_hidden * d_ff + n_out)
+
+
+def mlp_path(M: int, d_ff: int, n_out: int, *, gated: bool = True,
+             density: float = None) -> str:
+    """Dispatch rule for a BCSC-packed MLP: 'fused' | 'two_call' | 'dense'.
+
+    'dense'   — block density too high for structural skipping to pay
+                (pack-time callers leave the weight dense).
+    'fused'   — the megakernel's hidden-activation scratch fits VMEM at the
+                bm implied by M (always true for decode-shaped M).
+    'two_call'— per-projection kernels with the hidden in HBM (large-M
+                prefill/training shapes where the scratch would not fit).
+    """
+    if density is not None and density >= DENSE_BLOCK_DENSITY:
+        return "dense"
+    bm = bcsc_tile_m(M)
+    if fused_mlp_scratch_bytes(bm, d_ff, n_out, gated) <= FUSED_MLP_VMEM_BUDGET:
+        return "fused"
+    return "two_call"
+
+
 def spad_fit_report(weight_count: int, sparsity: float,
                     tiling: MatmulTiling) -> dict:
     """Table-III analogue: do the (compressed) resident weights fit the budget?"""

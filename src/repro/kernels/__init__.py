@@ -5,9 +5,10 @@ row-stationary dataflow (dense matmul, §II), and the compact-DNN attention
 band (sliding-window flash attention).
 """
 from repro.kernels.ops import (bcsc_apply_packed, bcsc_gemv, bcsc_matmul,
+                               bcsc_mlp_packed,
                                flash_attention, is_packed, prepare_bcsc,
                                rs_matmul, sliding_window_attention)
 
-__all__ = ["bcsc_apply_packed", "bcsc_gemv", "bcsc_matmul", "flash_attention",
-           "is_packed", "prepare_bcsc", "rs_matmul",
+__all__ = ["bcsc_apply_packed", "bcsc_gemv", "bcsc_matmul", "bcsc_mlp_packed",
+           "flash_attention", "is_packed", "prepare_bcsc", "rs_matmul",
            "sliding_window_attention"]

@@ -18,6 +18,7 @@ import numpy as np
 from repro.core import dataflow
 from repro.core.sparsity import BCSCMatrix
 from repro.kernels import bcsc_matmul as _bcsc
+from repro.kernels import bcsc_mlp as _bmlp
 from repro.kernels import epilogue as _epi
 from repro.kernels import local_attention as _swa
 from repro.kernels import rs_matmul as _rs
@@ -146,6 +147,57 @@ def bcsc_apply_packed(x, packed, *, n_out: int, bias=None,
                        packed["col_ids"], n_out=n_out, bm=0, bias=bias,
                        activation=activation, out_dtype=out_dtype,
                        interpret=interpret)
+
+
+def packed_nnzb(packed) -> jnp.ndarray:
+    """Actual (un-padded) block count of a packed weight, int32 scalar.
+
+    Ragged-aware packs (serve.sparse ≥ PR 2) carry ``nnzb``; legacy packs
+    fall back to the padded payload length (every block treated as real).
+    """
+    n = packed.get("nnzb")
+    if n is None:
+        return jnp.int32(packed["blocks"].shape[0])
+    return n.astype(jnp.int32).reshape(())
+
+
+def bcsc_mlp_packed(x, gate_packed, up_packed, down_packed, *, d_ff: int,
+                    n_out: int, activation: Optional[str] = None,
+                    counts=None, out_dtype=jnp.float32,
+                    interpret: Optional[bool] = None):
+    """Fused sparse MLP megakernel over packed BCSC dicts (one pallas_call).
+
+    ``gate_packed``/``down_packed`` are serve.sparse packed dicts for the
+    gate/up-projection and down-projection; ``up_packed`` is the second
+    (linear) up-projection for gated MLPs, or None. The hidden activation
+    stays in VMEM scratch; per-layer actual nnzb rides the prefetched
+    ``counts`` vector so padded stack blocks are skipped (no DMA, no MACs).
+    ``counts`` is the pack-time-prepared (3,) int32 [n_g, n_u, n_d]
+    (serve.sparse stores it as ``_bcsc_counts``); assembled here when absent.
+    Callers should gate on ``core.dataflow.mlp_path(...) == 'fused'``.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    M = x.shape[0]
+    bm = dataflow.bcsc_tile_m(M)
+    xp = _pad_to(x, bm, 0)
+    gated = up_packed is not None
+    if counts is None:
+        counts = jnp.stack([
+            packed_nnzb(gate_packed),
+            packed_nnzb(up_packed) if gated else jnp.int32(0),
+            packed_nnzb(down_packed),
+        ])
+    kw = {}
+    if gated:
+        kw = dict(u_blocks=up_packed["blocks"].astype(x.dtype),
+                  u_rows=up_packed["row_ids"], u_cols=up_packed["col_ids"])
+    out = _bmlp.bcsc_mlp_raw(
+        xp, gate_packed["blocks"].astype(x.dtype), gate_packed["row_ids"],
+        gate_packed["col_ids"], down_packed["blocks"].astype(x.dtype),
+        down_packed["row_ids"], down_packed["col_ids"], counts,
+        d_ff=d_ff, n_out=n_out, bm=bm, activation=activation,
+        out_dtype=out_dtype, interpret=interpret, **kw)
+    return out[:M]
 
 
 # -------------------------------------------------- sliding-window attention

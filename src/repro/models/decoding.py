@@ -206,7 +206,26 @@ def _gather_ring(full, m: int):
     return jnp.take(full, jnp.clip(p, 0, S - 1), axis=1)
 
 
-def _attn_prefill(p, x, kind, positions, cfg, cache_len: int):
+def _gather_ring_ragged(full, m: int, lengths):
+    """Per-row ring gather: row b honors the ring invariant at pos=lengths[b]-1.
+
+    The batched-prefill analogue of _gather_ring for right-padded batches:
+    each row's ring slots are filled from its *own* last positions, so pad
+    tokens past a row's length never enter the ring. Slots that would map to
+    negative positions (prompt shorter than the ring) clip to 0 — their data
+    is garbage-but-masked, exactly like _gather_ring's clip (the decode-side
+    _valid_mask recomputes validity from pos).
+    """
+    S = full.shape[1]
+    i = jnp.arange(m)
+    last = (lengths - 1)[:, None]                    # (B,1)
+    p = last - jnp.mod(last - i[None, :], m)         # (B,m)
+    p = jnp.clip(p, 0, S - 1)
+    idx = p.reshape(p.shape + (1,) * (full.ndim - 2))
+    return jnp.take_along_axis(full, idx, axis=1)
+
+
+def _attn_prefill(p, x, kind, positions, cfg, cache_len: int, lengths=None):
     q, k, v = layers.attn_qkv(p, x, cfg)
     if cfg.qk_norm:
         q = layers.head_rms_norm(q, p["q_norm"], cfg.norm_eps)
@@ -224,18 +243,26 @@ def _attn_prefill(p, x, kind, positions, cfg, cache_len: int):
     cap = _attn_cache_capacity(cfg, kind, cache_len)
     S = k.shape[1]
     if kind == "global":
+        # pad rows of a right-padded batch leave pad-KV at positions >= that
+        # row's length; decode's _valid_mask (i <= pos) never exposes them and
+        # the serve loop overwrites them in order as pos advances.
         pad = cap - S
         entry = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
                  "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
-    else:
+    elif lengths is None:
         entry = {"k": _gather_ring(k, cap), "v": _gather_ring(v, cap)}
+    else:
+        entry = {"k": _gather_ring_ragged(k, cap, lengths),
+                 "v": _gather_ring_ragged(v, cap, lengths)}
     return layers.attn_out(p, ctx), entry
 
 
-def apply_block_prefill(p, x, cond, kind, is_moe, cfg, positions, cache_len):
+def apply_block_prefill(p, x, cond, kind, is_moe, cfg, positions, cache_len,
+                        lengths=None):
     h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
     if kind in ("global", "local", "chunked"):
-        y, entry = _attn_prefill(p["attn"], h, kind, positions, cfg, cache_len)
+        y, entry = _attn_prefill(p["attn"], h, kind, positions, cfg, cache_len,
+                                 lengths)
     elif kind == "ssm":
         y, entry = ssm_lib.ssm_block(p["ssm"], h, cfg, return_state=True)
     elif kind == "rglru":
@@ -258,10 +285,8 @@ def apply_block_prefill(p, x, cond, kind, is_moe, cfg, positions, cache_len):
     return x, entry
 
 
-def prefill(params, tokens, cfg, cache_len: int, *, patch_embeds=None,
-            cond=None, hints=None):
-    """Forward over the prompt, building the cache. Returns
-    (last-position logits fp32, cache)."""
+def _prefill_impl(params, tokens, cfg, cache_len: int, lengths=None, *,
+                  patch_embeds=None, cond=None, hints=None):
     x = tfm.embed_tokens(params, tokens, cfg)
     if cfg.frontend == "vision" and patch_embeds is not None:
         x = jnp.concatenate([patch_embeds.astype(COMPUTE_DTYPE), x], axis=1)
@@ -281,7 +306,7 @@ def prefill(params, tokens, cfg, cache_len: int, *, patch_embeds=None,
             for j in range(period):
                 x, entries[f"slot{j}"] = apply_block_prefill(
                     pp[f"slot{j}"], x, cond, *kinds[j], cfg, positions,
-                    cache_len)
+                    cache_len, lengths)
                 if hints is not None:
                     x = hints.constrain_act(x)
             return x, entries
@@ -291,7 +316,47 @@ def prefill(params, tokens, cfg, cache_len: int, *, patch_embeds=None,
         for j in range(tfm.num_remainder(cfg)):
             x, cache["rem"][f"rem{j}"] = apply_block_prefill(
                 params["rem"][f"rem{j}"], x, cond, *kinds[j], cfg, positions,
-                cache_len)
+                cache_len, lengths)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = tfm.lm_logits(params, x[:, -1:], cfg)
+    if lengths is None:
+        x_last = x[:, -1:]
+    else:
+        # per-row last real position of the right-padded batch
+        idx = (lengths - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, jnp.broadcast_to(
+            idx, (B, 1, x.shape[-1])), axis=1)
+    logits = tfm.lm_logits(params, x_last, cfg)
     return logits, cache
+
+
+def prefill(params, tokens, cfg, cache_len: int, *, patch_embeds=None,
+            cond=None, hints=None):
+    """Forward over the prompt, building the cache. Returns
+    (last-position logits fp32, cache)."""
+    return _prefill_impl(params, tokens, cfg, cache_len, None,
+                         patch_embeds=patch_embeds, cond=cond, hints=hints)
+
+
+def prefill_batched(params, tokens, lengths, cfg, cache_len: int, *,
+                    cond=None, hints=None):
+    """Batched prefill over right-padded prompts of unequal length.
+
+    tokens (B, S) right-padded to a common tier length S; lengths (B,) int32
+    actual prompt lengths. Returns (per-row last-*real*-position logits
+    (B,1,...), cache) where every cache entry honors each row's own length:
+    ring entries gather per-row (``_gather_ring_ragged``), global entries
+    rely on decode's pos-derived validity mask to hide pad positions.
+
+    Causality makes the padded forward exact for the real prefix of every
+    attention row. NOT valid for recurrent kinds (ssm/rglru) when any
+    length < S — pad tokens would pollute the carried state; callers
+    (serve.engine) bucket those archs by exact length so lengths == S.
+    Vision patch embeds are unsupported here: the per-row last-logits gather
+    and ragged ring gather do not carry the ``num_patches`` offset of the
+    concatenated sequence (no serving caller passes patches today).
+    """
+    assert cfg.frontend != "vision" or cfg.num_patches == 0, \
+        "prefill_batched does not support vision patch offsets"
+    return _prefill_impl(params, tokens, cfg, cache_len,
+                         jnp.asarray(lengths, jnp.int32),
+                         cond=cond, hints=hints)

@@ -298,13 +298,31 @@ def mlp(params, x, cfg, d_ff: Optional[int] = None):
 
     Any projection stored BCSC-packed (serve.sparse.sparsify_mlp_params)
     bypasses the einsum and runs the sparse kernel with the activation fused
-    into its epilogue; dense weights keep the exact original path."""
+    into its epilogue; dense weights keep the exact original path. When EVERY
+    projection of the layer is packed and the dataflow rule allows it, the
+    whole MLP collapses into the fused bcsc_mlp megakernel — one pallas_call,
+    hidden activation in VMEM scratch, per-layer actual nnzb (never the
+    padded stack count)."""
+    from repro.core import dataflow as _df
     from repro.kernels.ops import is_packed
     act_name = "silu" if cfg.mlp_act == "silu" else "gelu"
     act = jax.nn.silu if cfg.mlp_act == "silu" else \
         (lambda t: jax.nn.gelu(t, approximate=True))
     ff = d_ff or (cfg.dense_d_ff if (cfg.moe and cfg.dense_d_ff) else cfg.d_ff)
     d = x.shape[-1]
+
+    names = ("wg", "wu", "wd") if cfg.mlp_gated else ("w1", "w2")
+    if all(is_packed(params[n]) for n in names):
+        B, S, _ = x.shape
+        if _df.mlp_path(B * S, ff, d, gated=cfg.mlp_gated) == "fused":
+            from repro.kernels import ops as _ops
+            up2 = params["wu"] if cfg.mlp_gated else None
+            y = _ops.bcsc_mlp_packed(
+                x.reshape(B * S, d), params[names[0]], up2, params[names[-1]],
+                d_ff=ff, n_out=d, activation=act_name,
+                counts=params.get("_bcsc_counts"), out_dtype=jnp.float32)
+            return constrain(y.reshape(B, S, d).astype(COMPUTE_DTYPE))
+
     if cfg.mlp_gated:
         wg, wu = params["wg"], params["wu"]
         g_act = _packed_proj(x, wg, ff, act_name) if is_packed(wg) else \

@@ -2,19 +2,23 @@
 
 ``serve_step``/``prefill_step`` are the functions the dry-run lowers for the
 ``decode_*``/``prefill_*`` shapes. The ``DecodeEngine`` adds a continuous
-batching loop (per-slot refill on EOS) whose inner decode loop is **device
-resident**: sampling, EOS detection and budget accounting all run inside a
-``lax.scan`` of ``sync_every`` fused steps, so between refills there are zero
-per-token device→host transfers — the utilization lever the Eyexam step model
-identifies for batch-1 decode (paper Table VI; ISSUE 1).
+batching loop (batched tier-bucketed refill on EOS, ISSUE 2) whose inner
+decode loop is **device resident**: sampling, EOS detection and budget
+accounting all run inside a ``lax.scan`` of ``sync_every`` fused steps, so
+between refills there are zero per-token device→host transfers — the
+utilization lever the Eyexam step model identifies for batch-1 decode (paper
+Table VI; ISSUE 1). The decode state is donated to both jitted programs, so
+the slot KV cache is updated in place rather than copied each chunk.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import decoding, transformer as tfm
 from repro.serve import kvcache
@@ -89,16 +93,24 @@ class DecodeEngine:
     """Continuous batching over a fixed slot count, device-resident decode.
 
     Slots hold independent sequences with **per-slot positions** (the
-    vector-pos path of decoding.serve_step). Finished slots are refilled
-    individually: one prompt is prefilled at batch 1 and its cache rows are
-    spliced into the running slot cache (kvcache.SlotAllocator does the
-    alloc/free accounting). Between refills the loop never leaves the device:
-    ``sync_every`` decode steps — on-device sampling, EOS live-mask and
-    max_new budget tracking — run as one ``lax.scan`` (same structure as
-    make_generate_fn), and the generated token block is fetched with a single
-    ``jax.device_get`` per chunk. ``host_syncs`` counts those fetches; there
-    are zero per-token transfers (the pre-refactor loop did one ``int(nxt[i])``
-    sync per slot per token).
+    vector-pos path of decoding.serve_step). Admission is **chunked batched
+    prefill** (ISSUE 2): pending prompts are bucketed into padded length
+    tiers (next power of two; exact lengths for recurrent archs, where pad
+    tokens would pollute the carried state), each tier is prefilled as ONE
+    batch through ``decoding.prefill_batched``, and the resulting cache rows
+    are scattered into their slots — admission cost amortizes over the
+    cohort the same way decode already does, instead of one batch-1 prefill
+    per slot. Between refills the loop never leaves the device: ``sync_every``
+    decode steps — on-device sampling, EOS live-mask and max_new budget
+    tracking — run as one ``lax.scan`` (same structure as make_generate_fn),
+    and the generated token block is fetched with a single ``jax.device_get``
+    per chunk. ``host_syncs`` counts those fetches; there are zero per-token
+    transfers. The decode-state argument of both jitted programs is donated,
+    so the KV cache updates in place instead of being copied every chunk.
+
+    ``phase_stats`` (reset per run) reports the prefill/decode wall-clock
+    split, batch counts, and real-vs-padded prefill token counts — the
+    admission-amortization evidence benchmarks/sparse_decode.py records.
     """
 
     def __init__(self, cfg, params, slots: int, cache_len: int,
@@ -112,43 +124,54 @@ class DecodeEngine:
         self.temperature = temperature
         self.sync_every = max(1, sync_every)
         self.host_syncs = 0                  # device->host fetches (per chunk)
-        self._chunk = jax.jit(self._make_chunk_fn())
-        self._refill = jax.jit(self._make_refill_fn())
+        kinds = {k for k, _ in tfm.slot_kinds(cfg)}
+        self._recurrent = bool(kinds & {"ssm", "rglru"})
+        self.phase_stats: Dict = {}
+        # the decode state (arg 1: cache + sampling state) is donated — the
+        # cache buffer is updated in place step over step, never copied
+        self._chunk = jax.jit(self._make_chunk_fn(), donate_argnums=(1,))
+        self._refill = jax.jit(self._make_refill_fn(), donate_argnums=(1,))
 
     # ------------------------------------------------------ device programs
     def _make_refill_fn(self) -> Callable:
-        """Prefill one prompt (batch 1) and splice it into slot ``slot``."""
+        """Batched prefill of one length tier, scattered into its slots.
+
+        toks (B, tier) right-padded; lengths/slots/max_new (B,). One jit per
+        (tier, B) shape pair — tiers are powers of two, so the trace count
+        stays logarithmic in prompt-length spread.
+        """
         cfg, cache_len = self.cfg, self.cache_len
 
-        def refill(params, state, toks, slot, max_new):
+        def refill(params, state, toks, lengths, slots, max_new):
             cache, last, pos, live, budget = state
-            logits, slot_cache = decoding.prefill(params, toks, cfg, cache_len)
-            plen = toks.shape[-1] + (cfg.num_patches
-                                     if cfg.frontend == "vision" else 0)
-
-            def splice(c, s, axis):
-                return jax.lax.dynamic_update_slice_in_dim(
-                    c, s.astype(c.dtype), slot, axis=axis)
-
+            logits, row_cache = decoding.prefill_batched(
+                params, toks, lengths, cfg, cache_len)
+            plen = lengths + (cfg.num_patches
+                              if cfg.frontend == "vision" else 0)
             new_cache = {}
             if "blocks" in cache:    # stacked entries: (nper, B, ...) — axis 1
                 new_cache["blocks"] = jax.tree.map(
-                    lambda c, s: splice(c, s, 1),
-                    cache["blocks"], slot_cache["blocks"])
+                    lambda c, s: c.at[:, slots].set(s.astype(c.dtype)),
+                    cache["blocks"], row_cache["blocks"])
             if "rem" in cache:       # unstacked entries: (B, ...) — axis 0
                 new_cache["rem"] = jax.tree.map(
-                    lambda c, s: splice(c, s, 0),
-                    cache["rem"], slot_cache["rem"])
-            last = splice(last, logits[:, -1].astype(last.dtype), 0)
-            pos = jax.lax.dynamic_update_slice(pos, jnp.int32(plen)[None],
-                                               (slot,))
-            live = jax.lax.dynamic_update_slice(
-                live, jnp.ones((1,), jnp.bool_), (slot,))
-            budget = jax.lax.dynamic_update_slice(budget, max_new[None],
-                                                  (slot,))
+                    lambda c, s: c.at[slots].set(s.astype(c.dtype)),
+                    cache["rem"], row_cache["rem"])
+            last = last.at[slots].set(logits[:, -1].astype(last.dtype))
+            pos = pos.at[slots].set(plen)
+            live = live.at[slots].set(True)
+            budget = budget.at[slots].set(max_new)
             return (new_cache, last, pos, live, budget)
 
         return refill
+
+    def _tier(self, plen: int) -> int:
+        """Length bucket for batched prefill: next power of two (attention
+        archs — causality makes right-padding exact); exact length for
+        recurrent archs (pads would pollute ssm/rglru carried state)."""
+        if self._recurrent:
+            return plen
+        return 1 << max(plen - 1, 0).bit_length()
 
     def _make_chunk_fn(self) -> Callable:
         """sync_every fused decode steps: sample → track EOS/budget → step."""
@@ -203,8 +226,15 @@ class DecodeEngine:
         active: Dict[int, Request] = {}
         state = self._init_state()
         K = self.cfg.num_codebooks
+        st = self.phase_stats = {
+            "prefill_s": 0.0, "decode_s": 0.0, "prefill_batches": 0,
+            "prefill_prompts": 0, "prefill_real_tokens": 0,
+            "prefill_padded_tokens": 0, "decode_chunks": 0,
+        }
 
         while queue or active:
+            # ---- admission: batched prefill, one call per length tier ----
+            admits: List[Tuple[int, Request]] = []
             while queue and alloc.available():
                 r = queue[0]
                 plen = len(r.prompt) + (self.cfg.num_patches
@@ -215,18 +245,48 @@ class DecodeEngine:
                     raise ValueError(
                         f"request {r.rid}: prompt ({plen}) + max_new "
                         f"({r.max_new}) exceeds cache_len ({self.cache_len})")
-                slot = alloc.alloc()
                 queue.pop(0)
-                toks = jnp.asarray([r.prompt], jnp.int32)
-                state = self._refill(self.params, state, toks,
-                                     jnp.int32(slot), jnp.int32(r.max_new))
-                active[slot] = r
+                admits.append((alloc.alloc(), r))
+            if admits:
+                buckets: Dict[int, List[Tuple[int, Request]]] = {}
+                for slot, r in admits:
+                    buckets.setdefault(self._tier(len(r.prompt)),
+                                       []).append((slot, r))
+                t0 = time.perf_counter()
+                for tier, group in sorted(buckets.items()):
+                    B = len(group)
+                    toks = np.zeros((B, tier), np.int32)
+                    lengths = np.empty((B,), np.int32)
+                    slot_ids = np.empty((B,), np.int32)
+                    max_news = np.empty((B,), np.int32)
+                    for i, (slot, r) in enumerate(group):
+                        toks[i, :len(r.prompt)] = r.prompt
+                        lengths[i] = len(r.prompt)
+                        slot_ids[i] = slot
+                        max_news[i] = r.max_new
+                        active[slot] = r
+                    state = self._refill(self.params, state,
+                                         jnp.asarray(toks),
+                                         jnp.asarray(lengths),
+                                         jnp.asarray(slot_ids),
+                                         jnp.asarray(max_news))
+                    st["prefill_batches"] += 1
+                    st["prefill_prompts"] += B
+                    st["prefill_real_tokens"] += int(lengths.sum())
+                    st["prefill_padded_tokens"] += B * tier
+                jax.block_until_ready(state[1])     # phase-accurate timing
+                st["prefill_s"] += time.perf_counter() - t0
+
+            # ---------------------- device-resident decode chunk ----------
+            t0 = time.perf_counter()
             rng, k = jax.random.split(rng)
             state, toks, emits = self._chunk(self.params, state, k)
             # the single device->host transfer for this sync_every-token chunk
             toks_h, emits_h, live_h = jax.device_get(
                 (toks, emits, state[3]))
             self.host_syncs += 1
+            st["decode_chunks"] += 1
+            st["decode_s"] += time.perf_counter() - t0
             for t in range(emits_h.shape[0]):
                 for slot, r in active.items():
                     if emits_h[t, slot]:

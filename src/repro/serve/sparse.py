@@ -9,11 +9,20 @@ index vectors as plain arrays inside the params pytree, and let
 ``kernels.ops.bcsc_apply_packed`` (GEMV for decode-shaped M, GEMM otherwise).
 
 Stacking constraint: the transformer scans over a stacked params pytree
-(leading ``num_periods`` axis), so every layer's packed weight must have the
-same nnzb. Layers with fewer non-zero blocks are padded with explicit zero
-blocks appended to the last block-column — the same repeated-address
-convention ensure_nonempty_cols uses (paper Fig. 16), so correctness is
-unchanged and the pad cost is bounded by the densest layer of the stack.
+(leading ``num_periods`` axis), so every layer's packed *payload* must have
+the same padded capacity. Layers with fewer non-zero blocks are padded with
+explicit zero blocks whose index entries repeat the last real entry — the
+paper's repeated-address convention (Fig. 16). The padding is now **ragged-
+aware**: every pack carries its actual block count ``nnzb``, which the fused
+megakernel (kernels/bcsc_mlp.py) scalar-prefetches to execute only the real
+blocks of each layer. The two-call kernels still walk the padded capacity
+(zero blocks are numeric no-ops there), which is exactly the waste the
+``packing_efficiency`` stat quantifies and the fused path eliminates.
+
+Storage dtype: blocks are stored in the serve compute dtype (bf16) at pack
+time — the "keep it compressed *and* ready to stream" half of the paper's
+§IV argument. The old path converted the full padded payload fp32→bf16 on
+every decode step, a whole extra weight-stream pass per projection.
 """
 from __future__ import annotations
 
@@ -22,8 +31,9 @@ from typing import Dict, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sparsity as sp
+from repro.core import dataflow, sparsity as sp
 from repro.kernels import ops as _ops
+from repro.models.layers import COMPUTE_DTYPE
 
 # MLP projection names eligible for packing (gated and plain variants).
 MLP_WEIGHTS = ("wg", "wu", "wd", "w1", "w2")
@@ -34,27 +44,46 @@ MLP_WEIGHTS = ("wg", "wu", "wd", "w1", "w2")
 is_packed = _ops.is_packed
 
 
-def pack_weight(w, bk: int, bn: int) -> Dict[str, jnp.ndarray]:
+def pack_weight(w, bk: int, bn: int,
+                store_dtype=None) -> Dict[str, jnp.ndarray]:
     """Host-side prune-free encode+prepare of one (K,N) weight.
 
-    Returns {blocks (nnzb,bk,bn), row_ids (nnzb,), col_ids (nnzb,)} — the
-    scalar-prefetch vectors fully expanded so nothing host-side remains at
-    trace time (jit/scan-safe). N is NOT stored: it is re-derived from the
-    config by the consumer (shapes must be static under jit).
+    Returns {blocks (nnzb,bk,bn), row_ids (nnzb,), col_ids (nnzb,),
+    nnzb ()} — the scalar-prefetch vectors fully expanded so nothing
+    host-side remains at trace time (jit/scan-safe). ``nnzb`` is the actual
+    block count (ragged contract for the fused megakernel; padded stacks keep
+    it per-layer). N is NOT stored: it is re-derived from the config by the
+    consumer (shapes must be static under jit). ``store_dtype`` converts the
+    payload once at pack time (serve uses bf16) instead of per decode step.
     """
     blocks, row_ids, col_ids, _ = _ops.prepare_bcsc(
         sp.bcsc_encode(np.asarray(w), bk, bn))
-    return {"blocks": jnp.asarray(blocks),
-            "row_ids": jnp.asarray(row_ids),
-            "col_ids": jnp.asarray(col_ids, dtype=jnp.int32)}
+    blocks = jnp.asarray(blocks)
+    if store_dtype is not None:
+        blocks = blocks.astype(store_dtype)
+    packed = {"blocks": blocks,
+              "row_ids": jnp.asarray(row_ids),
+              "col_ids": jnp.asarray(col_ids, dtype=jnp.int32),
+              "nnzb": jnp.asarray(blocks.shape[0], jnp.int32)}
+    # round the payload capacity up to the megakernel's chunked-DMA stride
+    # (zero-payload pads; nnzb keeps the real count)
+    return pad_packed(packed, _chunk_pad(blocks.shape[0]))
+
+
+def _chunk_pad(n: int) -> int:
+    c = dataflow.BCSC_CHUNK
+    return ((n + c - 1) // c) * c
 
 
 def pad_packed(packed: Dict[str, jnp.ndarray], nnzb: int) -> Dict[str, jnp.ndarray]:
-    """Pad a packed weight to ``nnzb`` blocks with explicit zero blocks.
+    """Pad a packed weight to ``nnzb`` payload blocks with explicit zeros.
 
-    Appended blocks carry the last column id (col_ids stays non-decreasing)
-    and accumulate zeros — a no-op numerically, exactly like the repeated
-    address entries of Fig. 16.
+    Appended index entries repeat the last real (row, col) pair — col_ids
+    stays non-decreasing (Fig. 16's repeated-address convention) and a
+    clamped index map re-fetches the already-resident block, so padded steps
+    are DMA-idempotent. The zero payload accumulates nothing, so the two-call
+    kernels (which walk the full padded capacity) stay numerically exact.
+    ``nnzb`` keeps the *actual* count — the fused kernel's skip bound.
     """
     have = packed["blocks"].shape[0]
     if have == nnzb:
@@ -65,22 +94,15 @@ def pad_packed(packed: Dict[str, jnp.ndarray], nnzb: int) -> Dict[str, jnp.ndarr
     blocks = np.concatenate([np.asarray(packed["blocks"]),
                              np.zeros((pad, bk, bn),
                                       np.asarray(packed["blocks"]).dtype)])
+    last_row = np.asarray(packed["row_ids"])[-1]
     row_ids = np.concatenate([np.asarray(packed["row_ids"]),
-                              np.zeros((pad,), np.int32)])
+                              np.full((pad,), last_row, np.int32)])
     last_col = np.asarray(packed["col_ids"])[-1]
     col_ids = np.concatenate([np.asarray(packed["col_ids"]),
                               np.full((pad,), last_col, np.int32)])
     return {"blocks": jnp.asarray(blocks), "row_ids": jnp.asarray(row_ids),
-            "col_ids": jnp.asarray(col_ids)}
-
-
-def _pack_stack(w_stack: np.ndarray, bk: int, bn: int) -> Dict[str, jnp.ndarray]:
-    """(L,K,N) stacked weight -> packed dict with leading L axis (common nnzb)."""
-    per_layer = [pack_weight(w_stack[l], bk, bn)
-                 for l in range(w_stack.shape[0])]
-    nnzb = max(p["blocks"].shape[0] for p in per_layer)
-    per_layer = [pad_packed(p, nnzb) for p in per_layer]
-    return {k: jnp.stack([p[k] for p in per_layer]) for k in per_layer[0]}
+            "col_ids": jnp.asarray(col_ids),
+            "nnzb": packed.get("nnzb", jnp.asarray(have, jnp.int32))}
 
 
 def _packable(w, bk: int, bn: int) -> bool:
@@ -89,17 +111,28 @@ def _packable(w, bk: int, bn: int) -> bool:
 
 
 def sparsify_mlp_params(params, cfg, sparsity: float = 0.0,
-                        block: Tuple[int, int] = (16, 16)):
+                        block: Tuple[int, int] = (16, 16),
+                        store_dtype=COMPUTE_DTYPE):
     """Block-prune (optional) + BCSC-pack every dense-MLP weight in ``params``.
 
     Returns (new_params, stats). sparsity == 0 packs without pruning (every
     block with a non-zero entry is kept) — used to check numerical equivalence
     against the dense path. Weights whose dims don't tile by ``block`` are
-    left dense. MoE experts and attention projections are out of scope (the
-    paper's Sparse-PE targets the big stationary weight streams).
+    left dense, as are weights whose block density is too high for skipping
+    to pay (core.dataflow.mlp_path's 'dense' arm, judged at the decode shape
+    M=1 the packing targets). MoE experts and attention projections are out
+    of scope (the paper's Sparse-PE targets the big stationary weight
+    streams).
+
+    ``stats`` reports, per packed weight, the real vs padded block counts of
+    every layer and the resulting ``packing_efficiency`` (Σreal / Σpadded) —
+    the fraction of two-call grid steps that do useful work. The fused
+    megakernel executes only the real blocks, so 1 − efficiency is exactly
+    the waste it removes.
     """
     bk, bn = block
-    stats = {"packed": 0, "kept_blocks": 0, "total_blocks": 0}
+    stats: Dict = {"packed": 0, "kept_blocks": 0, "total_blocks": 0,
+                   "padded_blocks": 0, "left_dense": [], "weights": {}}
 
     def pack_mat(w):
         wn = np.asarray(w, np.float32)
@@ -114,21 +147,50 @@ def sparsify_mlp_params(params, cfg, sparsity: float = 0.0,
             w = mlp.get(name)
             if w is None or not _packable(w, bk, bn):
                 continue
+            nb_layer = (w.shape[-2] // bk) * (w.shape[-1] // bn)
             if stacked:
                 pruned = np.stack([pack_mat(np.asarray(w)[l])
                                    for l in range(w.shape[0])])
-                out[name] = _pack_stack(pruned, bk, bn)
-                nb = (w.shape[-2] // bk) * (w.shape[-1] // bn) * w.shape[0]
-                kept = int(out[name]["blocks"].shape[0] *
-                           out[name]["blocks"].shape[1])
+                per_layer = [pack_weight(pruned[l], bk, bn, store_dtype)
+                             for l in range(pruned.shape[0])]
             else:
-                packed = pack_weight(pack_mat(w), bk, bn)
-                out[name] = packed
-                nb = (w.shape[-2] // bk) * (w.shape[-1] // bn)
-                kept = int(packed["blocks"].shape[0])
+                per_layer = [pack_weight(pack_mat(w), bk, bn, store_dtype)]
+            real = [int(p["nnzb"]) for p in per_layer]
+            nb = nb_layer * len(per_layer)
+            density = sum(real) / max(nb, 1)
+            # ff/d_out for the dispatch rule: hidden width is whichever dim
+            # the projection touches that isn't d_model — conservative M=1
+            route = dataflow.mlp_path(1, w.shape[-1], w.shape[-2],
+                                      gated=cfg.mlp_gated, density=density)
+            if route == "dense":
+                stats["left_dense"].append(name)
+                continue
+            padded = max(int(p["blocks"].shape[0]) for p in per_layer)
+            if stacked:
+                per_layer = [pad_packed(p, padded) for p in per_layer]
+                out[name] = {k: jnp.stack([p[k] for p in per_layer])
+                             for k in per_layer[0]}
+            else:
+                out[name] = per_layer[0]
             stats["packed"] += 1
-            stats["kept_blocks"] += kept
+            stats["kept_blocks"] += sum(real)
             stats["total_blocks"] += nb
+            stats["padded_blocks"] += padded * len(per_layer)
+            wstat = stats["weights"].setdefault(
+                name, {"real": [], "padded": [], "dense_blocks": nb_layer})
+            wstat["real"] += real
+            wstat["padded"] += [padded] * len(per_layer)
+        # pack-time prep of the megakernel's prefetched counts vector
+        # ([n_gate, n_up, n_down] actual blocks; (L,3) for stacks) so the
+        # serve path does zero per-call assembly
+        order = ("wg", "wu", "wd") if "wg" in out else ("w1", "w2")
+        if all(is_packed(out.get(n)) for n in order):
+            cols = [out[order[0]]["nnzb"],
+                    out[order[1]]["nnzb"] if len(order) == 3
+                    else jnp.zeros_like(out[order[0]]["nnzb"]),
+                    out[order[-1]]["nnzb"]]
+            out["_bcsc_counts"] = jnp.stack(
+                [c.astype(jnp.int32) for c in cols], axis=-1)
         return out
 
     def walk(tree, stacked: bool):
@@ -149,4 +211,10 @@ def sparsify_mlp_params(params, cfg, sparsity: float = 0.0,
         new_params["rem"] = walk(params["rem"], stacked=False)
     if stats["total_blocks"]:
         stats["block_density"] = stats["kept_blocks"] / stats["total_blocks"]
+    for wstat in stats["weights"].values():
+        wstat["packing_efficiency"] = (
+            sum(wstat["real"]) / max(sum(wstat["padded"]), 1))
+    if stats["padded_blocks"]:
+        stats["packing_efficiency"] = (
+            stats["kept_blocks"] / stats["padded_blocks"])
     return new_params, stats

@@ -261,6 +261,96 @@ def test_sparse_params_engine_runs_gemv_decode():
     assert dense_out == sparse_out
 
 
+# ------------------------------------------------------- batched prefill (ISSUE 2)
+def test_prefill_batched_matches_per_row_prefill():
+    """Right-padded batched prefill == per-row batch-1 prefill, judged by the
+    decode-visible contract: last-position logits AND the logits of a decode
+    step taken from the resulting cache (this exercises the ragged ring
+    gather, the pad-KV masking of global entries, and per-row positions)."""
+    cfg = get_config("gemma2-2b-reduced")       # local+global -> ring caches
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [[5, 6, 7], [9, 8, 7, 6, 5, 4], [1, 2]]
+    B = len(prompts)
+    S = max(len(p) for p in prompts)
+    toks = np.zeros((B, S), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+    lengths = np.asarray([len(p) for p in prompts], np.int32)
+    lb, cb = decoding.prefill_batched(params, jnp.asarray(toks),
+                                      jnp.asarray(lengths), cfg, 32)
+    nxt = jnp.argmax(lb[:, -1], -1)[:, None]
+    lb2, _ = decoding.serve_step(params, cb, nxt,
+                                 jnp.asarray(lengths, jnp.int32), cfg)
+    for i, p in enumerate(prompts):
+        l1, c1 = decoding.prefill(params, jnp.asarray([p], jnp.int32),
+                                  cfg, 32)
+        np.testing.assert_allclose(np.asarray(lb[i:i + 1]), np.asarray(l1),
+                                   rtol=2e-2, atol=2e-2)
+        l2, _ = decoding.serve_step(params, c1, nxt[i:i + 1],
+                                    jnp.int32(len(p)), cfg)
+        np.testing.assert_allclose(np.asarray(lb2[i:i + 1]), np.asarray(l2),
+                                   rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b-reduced", "gemma2-2b-reduced"])
+def test_engine_batched_prefill_matches_per_request(arch):
+    """Tier-bucketed batched admission produces the same tokens as separate
+    single-request engines, for mixed prompt lengths."""
+    cfg = get_config(arch)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [[5, 6, 7], [9, 8, 7, 6, 5, 4], [1, 2], [3, 3, 3, 3, 3]]
+    ref = []
+    for i, p in enumerate(prompts):
+        eng = DecodeEngine(cfg, params, slots=1, cache_len=64, eos_id=-1,
+                           sync_every=4)
+        ref.append(eng.run([Request(i, p, 5)])[0].out)
+    eng = DecodeEngine(cfg, params, slots=4, cache_len=64, eos_id=-1,
+                       sync_every=4)
+    done = eng.run([Request(i, p, 5) for i, p in enumerate(prompts)])
+    got = [r.out for r in sorted(done, key=lambda r: r.rid)]
+    assert got == ref
+    st = eng.phase_stats
+    # lengths 3,6,2,5 -> pow2 tiers {4, 8, 2} -> 3 batched prefills, not 4
+    assert st["prefill_prompts"] == 4
+    assert st["prefill_batches"] == 3
+    assert st["prefill_real_tokens"] == 16
+    assert st["prefill_padded_tokens"] == 2 + 4 + 8 * 2
+
+
+def test_engine_tier_rule():
+    cfg = get_config("qwen2.5-3b-reduced")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(cfg, params, slots=1, cache_len=32, eos_id=-1)
+    assert not eng._recurrent
+    assert [eng._tier(n) for n in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]
+    rcfg = get_config("recurrentgemma-2b-reduced")
+    rparams = tfm.init_params(jax.random.PRNGKey(0), rcfg)
+    reng = DecodeEngine(rcfg, rparams, slots=1, cache_len=32, eos_id=-1)
+    assert reng._recurrent            # pads would pollute rg-lru state:
+    assert [reng._tier(n) for n in (3, 5, 7)] == [3, 5, 7]   # exact buckets
+
+
+def test_engine_recurrent_arch_batched_admission():
+    """Recurrent archs batch exact-length buckets (no padding) and still
+    match per-request decoding."""
+    cfg = get_config("recurrentgemma-2b-reduced")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [[5, 6, 7], [8, 9, 10], [1, 2]]     # two share a length bucket
+    ref = []
+    for i, p in enumerate(prompts):
+        eng = DecodeEngine(cfg, params, slots=1, cache_len=64, eos_id=-1,
+                           sync_every=4)
+        ref.append(eng.run([Request(i, p, 4)])[0].out)
+    eng = DecodeEngine(cfg, params, slots=3, cache_len=64, eos_id=-1,
+                       sync_every=4)
+    done = eng.run([Request(i, p, 4) for i, p in enumerate(prompts)])
+    assert [r.out for r in sorted(done, key=lambda r: r.rid)] == ref
+    assert eng.phase_stats["prefill_batches"] == 2          # {len3 x2, len2}
+    assert eng.phase_stats["prefill_padded_tokens"] == \
+        eng.phase_stats["prefill_real_tokens"]              # exact tiers
+
+
 # ------------------------------------------------------------- slot allocator
 def test_slot_allocator_accounting():
     a = kvcache.SlotAllocator(2)
