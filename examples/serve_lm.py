@@ -1,6 +1,11 @@
-"""Batched serving with continuous slot refill (deliverable b, serving kind).
+"""Streaming serving on the paged continuous-batching scheduler (ISSUE 3).
 
-    PYTHONPATH=src python examples/serve_lm.py --requests 12 --slots 4
+Requests arrive on a Poisson process, stream tokens through per-request
+callbacks as they are generated, and share a page pool provisioned *below*
+the dense worst case — the block-table indirection is what turns short
+requests' stranded HBM into extra batch rows.
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 12 --rows 4
 """
 import argparse
 import time
@@ -10,45 +15,71 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as tfm
-from repro.serve import kvcache
-from repro.serve.engine import DecodeEngine, Request
+from repro.serve.scheduler import ContinuousBatchingScheduler, StreamRequest
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b")
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--rows", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--cache-len", type=int, default=96)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--mean-gap", type=float, default=4.0,
+                    help="mean Poisson inter-arrival gap, in decode steps")
     args = ap.parse_args()
 
     cfg = get_config(args.arch + "-reduced")
     params = tfm.init_params(jax.random.PRNGKey(0), cfg)
 
-    # GLB-capacity analogue: how many slots fit the cache budget? (§II)
-    rep = kvcache.report(cfg, batch=args.slots, cache_len=args.cache_len,
-                         chips=1)
-    print(f"cache: {rep['total_gb'] * 1e3:.2f} MB for {args.slots} slots "
-          f"x {args.cache_len} ctx")
+    # pool provisioned at half the dense (rows x cache_len) worst case —
+    # paging + preemption make that safe
+    from repro.core import dataflow
+    num_pages = max(args.rows * dataflow.pages_for(
+        args.cache_len, args.page_size) // 2, 1)
+    sch = ContinuousBatchingScheduler(
+        cfg, params, rows=args.rows, cache_len=args.cache_len,
+        page_size=args.page_size, num_pages=num_pages, eos_id=1)
+    print(f"attn path: {'paged' if sch.paged else 'contiguous'} "
+          f"({num_pages} pages x {sch.page_size} tokens vs dense "
+          f"{args.rows} x {args.cache_len})")
 
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=list(rng.integers(2, cfg.vocab_size,
-                                             rng.integers(4, 12))),
-                    max_new=args.max_new)
+    arrivals = np.cumsum(rng.exponential(args.mean_gap, args.requests))
+    first_tokens = {}
+
+    def stream(req, tok):
+        if req.rid not in first_tokens:
+            first_tokens[req.rid] = tok
+            print(f"  req {req.rid} (arrived t={req.arrival:.0f}, admitted "
+                  f"t={req.admitted_at:.0f}) first token: {tok}")
+
+    reqs = [StreamRequest(rid=i,
+                          prompt=list(rng.integers(2, cfg.vocab_size,
+                                                   rng.integers(4, 12))),
+                          max_new=int(rng.integers(4, args.max_new + 1)),
+                          arrival=float(arrivals[i]),
+                          on_token=stream)
             for i in range(args.requests)]
 
-    eng = DecodeEngine(cfg, params, slots=args.slots,
-                       cache_len=args.cache_len, eos_id=1)
     t0 = time.time()
-    done = eng.run(reqs)
+    done = sch.run(reqs)
     dt = time.time() - t0
     new_toks = sum(len(r.out) for r in done)
-    print(f"{len(done)} requests, {new_toks} new tokens in {dt:.1f}s "
-          f"({new_toks / dt:.1f} tok/s, batch-of-{args.slots} continuous)")
-    for r in done[:3]:
-        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.out[:10]}...")
+    st = sch.phase_stats
+    lat = [r.finished_at - r.arrival for r in done]
+    print(f"{len(done)} requests, {new_toks} tokens in {dt:.1f}s "
+          f"({new_toks / dt:.1f} tok/s wall; "
+          f"{new_toks / max(st['clock_steps'], 1):.2f} tok/step)")
+    print(f"latency p50 {np.percentile(lat, 50):.0f} / "
+          f"p99 {np.percentile(lat, 99):.0f} steps; "
+          f"preemptions {st['preemptions']}")
+    pg = sch.phase_stats.get("pages_peak")
+    if pg:
+        print(f"pages at peak: {pg['pages_used']}/{pg['pages_total']} in "
+              f"use ({pg['used_tokens']} tokens), "
+              f"fragmentation {pg['fragmentation']:.2f}")
 
 
 if __name__ == "__main__":

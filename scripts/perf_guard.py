@@ -1,4 +1,4 @@
-"""Wall-clock-free perf regression guard (ISSUE 2, CI tooling satellite).
+"""Wall-clock-free perf regression guard (ISSUE 2 + ISSUE 3 CI tooling).
 
 Runs after the sparse-decode benchmark in CI and fails the build when the
 fused bcsc_mlp megakernel stops beating the two-call path on the
@@ -14,6 +14,12 @@ Checks:
   4. fused launches    <  two-call launches
   5. the batch-1 e2e ratio and per-phase breakdown are present (the
      benchmark actually measured what the JSON claims)
+  6. paged KV (ISSUE 3): paged cache bytes strictly below the dense slot
+     cache at 50% mean occupancy, and the paged decode kernel's work steps
+     within ceil(len/page_size) per row (the pl.when skip bound)
+  7. arrivals (ISSUE 3): continuous batching beats the drain-the-chunk
+     baseline on goodput at high length variance — gated because both sides
+     run on the deterministic virtual step clock, not wall time
 
     PYTHONPATH=src python scripts/perf_guard.py [BENCH_sparse_decode.json]
 """
@@ -59,6 +65,42 @@ def main(path: str = "BENCH_sparse_decode.json") -> int:
           fused["kernel_launches"] < two["kernel_launches"],
           f"fused {fused['kernel_launches']} < two-call "
           f"{two['kernel_launches']}")
+
+    pg = data.get("paged", {})
+    if pg:
+        check("paged-hbm-bytes", pg["paged_bytes"] < pg["dense_slot_bytes"],
+              f"paged {pg['paged_bytes']} < dense slot "
+              f"{pg['dense_slot_bytes']} at {pg['mean_occupancy']:.0%} "
+              f"occupancy ({pg['bytes_ratio']:.2f}x)")
+        # work_steps comes from the kernel's own skip expression
+        # (kernels.paged_attention.row_work_steps — shared with its pl.when
+        # guard), ceil_pages from core.dataflow: a kernel-side skip
+        # regression moves the left side and trips one of these
+        check("paged-grid-steps", pg["work_steps"] <= pg["ceil_pages"],
+              f"kernel work steps {pg['work_steps']} <= spec ceil(len/ps) "
+              f"sum {pg['ceil_pages']}")
+        check("paged-skip-saves-steps",
+              pg["work_steps"] < pg["padded_grid_steps"],
+              f"kernel work steps {pg['work_steps']} < padded grid "
+              f"{pg['padded_grid_steps']} (ragged rows must skip)")
+    else:
+        print("  [--] paged section absent; paged gates skipped")
+
+    ar = data.get("arrivals", {})
+    if ar:
+        hv = ar["cases"]["high_variance"]
+        check("continuous-beats-drain",
+              hv["goodput_ratio"] > 1.0,
+              f"scheduler/drain goodput x{hv['goodput_ratio']:.2f} at "
+              f"variance x{ar['variance_ratio']:.0f} (virtual-step clock)")
+        check("arrival-latency-reported",
+              all(k in hv["scheduler"] for k in
+                  ("latency_p50_steps", "latency_p99_steps")),
+              f"p50 {hv['scheduler'].get('latency_p50_steps')} "
+              f"p99 {hv['scheduler'].get('latency_p99_steps')}")
+    else:
+        print("  [--] arrivals section absent (--no-arrivals run); "
+              "goodput gate skipped")
 
     dec = data.get("decode", {})
     if dec:

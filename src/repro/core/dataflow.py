@@ -130,6 +130,55 @@ def mlp_path(M: int, d_ff: int, n_out: int, *, gated: bool = True,
     return "two_call"
 
 
+# ------------------------------------------------------ paged KV dispatch
+# The KV cache is the activation-over-time analogue of the paper's weight
+# streams, and the block table is its CSC address vector: a dense
+# (rows × cache_len) slot provisions for the worst case (the v1 mistake the
+# hierarchical mesh fixes), while fixed-size pages + per-request block tables
+# allocate exactly ceil(len / page_size) pages as each sequence grows
+# (serve/paging.py, kernels/paged_attention.py). The rule below mirrors
+# mlp_path: dispatch 'paged' only when the indirection actually saves HBM at
+# the expected occupancy; short contexts and near-full slots keep the
+# contiguous ring/dense path (no block-table walk, no page-granularity waste).
+PAGE_SIZE = 64                  # tokens per KV page (lane-friendly multiple)
+PAGED_OCCUPANCY_MAX = 0.75      # above this mean occupancy dense wins (waste
+                                # < page granularity; indirection pays nothing);
+                                # exactly at the threshold still pages
+
+
+def pages_for(length: int, page_size: int = PAGE_SIZE) -> int:
+    """Pages a sequence of ``length`` tokens occupies: ceil(len / page_size)."""
+    return -(-max(int(length), 0) // page_size)
+
+
+def paged_kv_tokens(lengths, page_size: int = PAGE_SIZE) -> int:
+    """Token-slots resident under paging: Σ ceil(len/ps)·ps over rows."""
+    return sum(pages_for(n, page_size) * page_size for n in lengths)
+
+
+def dense_kv_tokens(rows: int, cache_len: int) -> int:
+    """Token-slots resident under the dense per-slot cache: rows · cache_len."""
+    return rows * cache_len
+
+
+def attn_path(cache_len: int, mean_len: float,
+              page_size: int = PAGE_SIZE) -> str:
+    """Dispatch rule for decode attention: 'paged' | 'contiguous'.
+
+    'paged' when the expected resident tokens (mean length rounded up to page
+    granularity) stay below PAGED_OCCUPANCY_MAX of the dense slot — the
+    occupancy regime where block-table indirection converts stranded HBM into
+    extra batch rows. 'contiguous' otherwise, and always for caches shorter
+    than two pages (indirection overhead with nothing to reclaim).
+    """
+    if cache_len < 2 * page_size:
+        return "contiguous"
+    expected = pages_for(mean_len, page_size) * page_size
+    if expected <= PAGED_OCCUPANCY_MAX * cache_len:
+        return "paged"
+    return "contiguous"
+
+
 def spad_fit_report(weight_count: int, sparsity: float,
                     tiling: MatmulTiling) -> dict:
     """Table-III analogue: do the (compressed) resident weights fit the budget?"""

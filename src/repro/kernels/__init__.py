@@ -6,9 +6,10 @@ band (sliding-window flash attention).
 """
 from repro.kernels.ops import (bcsc_apply_packed, bcsc_gemv, bcsc_matmul,
                                bcsc_mlp_packed,
-                               flash_attention, is_packed, prepare_bcsc,
-                               rs_matmul, sliding_window_attention)
+                               flash_attention, is_packed, paged_attention,
+                               prepare_bcsc, rs_matmul,
+                               sliding_window_attention)
 
 __all__ = ["bcsc_apply_packed", "bcsc_gemv", "bcsc_matmul", "bcsc_mlp_packed",
-           "flash_attention", "is_packed", "prepare_bcsc", "rs_matmul",
-           "sliding_window_attention"]
+           "flash_attention", "is_packed", "paged_attention", "prepare_bcsc",
+           "rs_matmul", "sliding_window_attention"]

@@ -21,6 +21,7 @@ from repro.kernels import bcsc_matmul as _bcsc
 from repro.kernels import bcsc_mlp as _bmlp
 from repro.kernels import epilogue as _epi
 from repro.kernels import local_attention as _swa
+from repro.kernels import paged_attention as _paged
 from repro.kernels import rs_matmul as _rs
 
 
@@ -198,6 +199,27 @@ def bcsc_mlp_packed(x, gate_packed, up_packed, down_packed, *, d_ff: int,
         d_ff=d_ff, n_out=n_out, bm=bm, activation=activation,
         out_dtype=out_dtype, interpret=interpret, **kw)
     return out[:M]
+
+
+# ------------------------------------------------------- paged attention
+def paged_attention(q, k_pool, v_pool, block_table, lengths, *,
+                    softcap: float = 0.0, interpret: Optional[bool] = None):
+    """Decode attention against a paged KV pool through a block table.
+
+    q (B,1,H,D) — the decode-step query layout of layers.decode_attention;
+    k_pool/v_pool (P, page_size, KV, D); block_table (B, max_pages) int32
+    (-1 = unallocated); lengths (B,) int32 valid tokens per row. Returns
+    (B,1,H,D) fp32. Dispatch between this and the contiguous-ring path is
+    core.dataflow.attn_path's call (occupancy rule).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, _, H, D = q.shape
+    KV = k_pool.shape[2]
+    R = H // KV
+    out = _paged.paged_attention_raw(
+        q.reshape(B, KV, R, D), k_pool, v_pool, block_table, lengths,
+        softcap=softcap, interpret=interpret)
+    return out.reshape(B, 1, H, D)
 
 
 # -------------------------------------------------- sliding-window attention

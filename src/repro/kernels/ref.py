@@ -56,3 +56,27 @@ def flash_attention_ref(q, k, v, softcap: float = 0.0, causal: bool = True):
     S = q.shape[1]
     window = S if causal else 2 * S
     return sliding_window_attention_ref(q, k, v, window, softcap)
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, lengths,
+                        softcap: float = 0.0):
+    """Gather-then-softmax oracle for the paged decode-attention kernel.
+
+    q (B,KV,R,D); k_pool/v_pool (P,ps,KV,D); block_table (B,MP) int32;
+    lengths (B,). Gathers each row's pages into a dense (MP·ps) history and
+    runs one exact masked softmax — the semantics paged_attention_raw must
+    reproduce through block-table indirection and online-softmax merging.
+    """
+    B, KV, R, D = q.shape
+    P, ps = k_pool.shape[:2]
+    MP = block_table.shape[1]
+    bt = jnp.clip(block_table, 0, P - 1)
+    kd = k_pool[bt].reshape(B, MP * ps, KV, D).astype(jnp.float32)
+    vd = v_pool[bt].reshape(B, MP * ps, KV, D).astype(jnp.float32)
+    s = jnp.einsum("bgrd,btgd->bgrt", q.astype(jnp.float32), kd) / math.sqrt(D)
+    if softcap and softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = jnp.arange(MP * ps)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgrt,btgd->bgrd", p, vd)

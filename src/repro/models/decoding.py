@@ -65,6 +65,68 @@ def abstract_cache(cfg, batch: int, cache_len: int):
     return jax.eval_shape(lambda: init_cache(cfg, batch, cache_len))
 
 
+# ------------------------------------------------------------- paged cache
+# Global-attention entries swap the dense (rows, cache_len, ...) slot for a
+# shared pool of fixed-size pages, addressed through a per-row block table
+# (the CSC address-vector analogue — serve/paging.py owns the host-side
+# accounting, kernels/paged_attention.py the device-side read). Ring
+# (local/chunked) and recurrent (ssm/rglru) entries keep their bounded
+# per-row state: their memory never scales with context, so paging them
+# would add indirection with nothing to reclaim.
+def _init_paged_entry(cfg, num_pages: int, page_size: int):
+    shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return {"pk": jnp.zeros(shape, COMPUTE_DTYPE),
+            "pv": jnp.zeros(shape, COMPUTE_DTYPE)}
+
+
+def is_paged_entry(entry) -> bool:
+    return isinstance(entry, dict) and "pk" in entry
+
+
+def init_paged_cache(cfg, rows: int, cache_len: int, num_pages: int,
+                     page_size: int):
+    """Like init_cache, but 'global' entries become (num_pages, page_size,
+    KV, D) pools; every other kind keeps its (rows, ...) per-row state."""
+    kinds = tfm.slot_kinds(cfg)
+    period = tfm.scan_period(cfg)
+    nper = tfm.num_scan_periods(cfg)
+    rem = tfm.num_remainder(cfg)
+
+    def entry(kind):
+        if kind == "global":
+            return _init_paged_entry(cfg, num_pages, page_size)
+        return _init_entry(cfg, kind, rows, cache_len)
+
+    cache: Dict = {}
+    if nper:
+        one = {f"slot{j}": entry(kinds[j][0]) for j in range(period)}
+        cache["blocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (nper,) + x.shape).copy(), one)
+    if rem:
+        cache["rem"] = {f"rem{j}": entry(kinds[j][0]) for j in range(rem)}
+    return cache
+
+
+def scatter_rows_to_pages(pool, rows_kv, block_table_rows, lengths):
+    """Write per-row contiguous KV (B,S,KV,D) into a page pool (P,ps,KV,D).
+
+    Token t of row b lands at (block_table_rows[b, t // ps], t % ps) for
+    t < lengths[b]; pad positions and unallocated (-1) table entries are
+    routed out of range and dropped. Used by the scheduler's refill to move
+    prefill_batched's dense cache rows into pages, and symmetric with the
+    paged kernel's read addressing.
+    """
+    P, ps = pool.shape[:2]
+    B, S = rows_kv.shape[:2]
+    s = jnp.arange(S, dtype=jnp.int32)
+    page = jnp.take_along_axis(
+        block_table_rows, jnp.broadcast_to(s // ps, (B, S)), axis=1)
+    valid = (s[None, :] < lengths[:, None]) & (page >= 0)
+    page = jnp.where(valid, page, P)                 # out of range -> dropped
+    off = jnp.broadcast_to(s % ps, (B, S))
+    return pool.at[page, off].set(rows_kv.astype(pool.dtype), mode="drop")
+
+
 # -------------------------------------------------------------- ring helpers
 def _ring_positions(pos, m: int):
     """Absolute position held by each of the m ring slots at time ``pos``."""
@@ -98,9 +160,13 @@ def _positions_2d(pos, B: int):
     return pos[:, None].astype(jnp.int32)
 
 
-def _attn_decode(p, x, kind, cache_entry, pos, cfg):
+def _attn_decode(p, x, kind, cache_entry, pos, cfg, block_table=None):
     """pos scalar (cohort decode) or (B,) (per-slot, the continuous-batching
-    engine): each slot writes its own ring/cache position."""
+    engine): each slot writes its own ring/cache position. A paged entry
+    ({pk, pv} pool, is_paged_entry) takes the block-table path instead: the
+    token is scattered into its page and attention reads the history through
+    kernels.paged_attention (dispatch decided host-side by
+    core.dataflow.attn_path — the serve scheduler's paged mode)."""
     B = x.shape[0]
     q, k, v = layers.attn_qkv(p, x, cfg)              # q (B,1,H,D), k/v (B,1,KV,D)
     if cfg.qk_norm:
@@ -111,6 +177,24 @@ def _attn_decode(p, x, kind, cache_entry, pos, cfg):
         positions = _positions_2d(pos, B)
         q = layers.rope(q, positions, theta)
         k = layers.rope(k, positions, theta)
+    if is_paged_entry(cache_entry):
+        from repro.kernels import ops as _ops   # deferred: keep import light
+        assert block_table is not None, "paged cache entry needs a block table"
+        pool_k, pool_v = cache_entry["pk"], cache_entry["pv"]
+        P, ps = pool_k.shape[:2]
+        pos = jnp.asarray(pos)
+        posv = jnp.broadcast_to(pos, (B,)).astype(jnp.int32)
+        page = jnp.take_along_axis(block_table, (posv // ps)[:, None],
+                                   axis=1)[:, 0]
+        page = jnp.where(page >= 0, page, P)       # unallocated -> dropped
+        k_pool = pool_k.at[page, posv % ps].set(
+            k[:, 0].astype(pool_k.dtype), mode="drop")
+        v_pool = pool_v.at[page, posv % ps].set(
+            v[:, 0].astype(pool_v.dtype), mode="drop")
+        ctx = _ops.paged_attention(q, k_pool, v_pool, block_table, posv + 1,
+                                   softcap=cfg.attn_logit_softcap)
+        return (layers.attn_out(p, ctx.astype(layers.COMPUTE_DTYPE)),
+                {"pk": k_pool, "pv": v_pool})
     cap = cache_entry["k"].shape[1]
     pos = jnp.asarray(pos)
     if pos.ndim == 0:
@@ -132,10 +216,12 @@ def _attn_decode(p, x, kind, cache_entry, pos, cfg):
     return layers.attn_out(p, ctx), {"k": k_cache, "v": v_cache}
 
 
-def apply_block_decode(p, x, cond, kind, is_moe, cfg, cache_entry, pos):
+def apply_block_decode(p, x, cond, kind, is_moe, cfg, cache_entry, pos,
+                       block_table=None):
     h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
     if kind in ("global", "local", "chunked"):
-        y, new_entry = _attn_decode(p["attn"], h, kind, cache_entry, pos, cfg)
+        y, new_entry = _attn_decode(p["attn"], h, kind, cache_entry, pos, cfg,
+                                    block_table)
     elif kind == "ssm":
         y, new_entry = ssm_lib.ssm_block_decode(p["ssm"], h, cache_entry, cfg)
     elif kind == "rglru":
@@ -158,10 +244,13 @@ def apply_block_decode(p, x, cond, kind, is_moe, cfg, cache_entry, pos):
     return x, new_entry
 
 
-def serve_step(params, cache, tokens, pos, cfg, cond=None, hints=None):
+def serve_step(params, cache, tokens, pos, cfg, cond=None, hints=None,
+               block_table=None):
     """One decode step. tokens (B,1) or (B,K,1); pos scalar int32 (shared
     across the batch) or (B,) int32 (per-slot positions — the continuous
-    batching engine's device-resident loop). Returns (logits fp32, new_cache)."""
+    batching engine's device-resident loop). ``block_table`` (B, max_pages)
+    int32 routes paged cache entries (init_paged_cache) through the paged
+    attention kernel. Returns (logits fp32, new_cache)."""
     x = tfm.embed_tokens(params, tokens, cfg)
     if hints is not None:
         x = hints.constrain_act(x)
@@ -180,7 +269,7 @@ def serve_step(params, cache, tokens, pos, cfg, cond=None, hints=None):
             for j in range(period):
                 x, npc[f"slot{j}"] = apply_block_decode(
                     pp[f"slot{j}"], x, cond, *kinds[j], cfg,
-                    pc[f"slot{j}"], pos)
+                    pc[f"slot{j}"], pos, block_table)
                 if hints is not None:
                     x = hints.constrain_act(x)
             return x, npc
@@ -191,7 +280,7 @@ def serve_step(params, cache, tokens, pos, cfg, cond=None, hints=None):
         for j in range(tfm.num_remainder(cfg)):
             x, new_cache["rem"][f"rem{j}"] = apply_block_decode(
                 params["rem"][f"rem{j}"], x, cond, *kinds[j], cfg,
-                cache["rem"][f"rem{j}"], pos)
+                cache["rem"][f"rem{j}"], pos, block_table)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = tfm.lm_logits(params, x, cfg)
     return logits, new_cache

@@ -154,8 +154,15 @@ def _gqa_scores(q, k, cap):
 
 
 def _gqa_ctx(p, v):
-    """p (B,KV,R,S,T) fp32, v (B,T,KV,D) -> (B,S,KV,R,D)."""
-    return jnp.einsum("bgrst,btgd->bsgrd", p.astype(COMPUTE_DTYPE), v,
+    """p (B,KV,R,S,T) fp32, v (B,T,KV,D) -> (B,S,KV,R,D).
+
+    p stays fp32: decode carries a single query row, so the PV product is
+    tiny and fp32 probabilities keep this jnp fallback numerically aligned
+    with the paged decode kernel's fp32 online-softmax accumulator
+    (kernels/paged_attention.py) — the dispatch can switch paths per batch
+    without shifting logits by a bf16 quantization step.
+    """
+    return jnp.einsum("bgrst,btgd->bsgrd", p, v.astype(jnp.float32),
                       preferred_element_type=jnp.float32)
 
 

@@ -1,3 +1,3 @@
-from repro.serve import engine, kvcache, sparse
+from repro.serve import engine, kvcache, paging, scheduler, sparse
 
-__all__ = ["engine", "kvcache", "sparse"]
+__all__ = ["engine", "kvcache", "paging", "scheduler", "sparse"]

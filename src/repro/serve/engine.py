@@ -89,6 +89,68 @@ class Request:
     done: bool = False
 
 
+def length_tier(plen: int, recurrent: bool, cache_len: int = 0) -> int:
+    """Length bucket for batched prefill: next power of two (attention archs
+    — causality makes right-padding exact); exact length for recurrent archs
+    (pads would pollute ssm/rglru carried state). Clamped to ``cache_len``
+    when given: the padded tier must fit the cache rows prefill builds
+    (plen itself is validated ≤ cache_len by the callers, and right-padding
+    stays exact at any tier ≥ plen). Shared by DecodeEngine and
+    serve.scheduler."""
+    if recurrent:
+        return plen
+    tier = 1 << max(plen - 1, 0).bit_length()
+    return min(tier, cache_len) if cache_len else tier
+
+
+def make_decode_step(cfg, temperature: float, eos_id: int) -> Callable:
+    """One fused decode step: sample → EOS/budget masks → serve_step.
+
+    The single source of the sampling/EOS/budget semantics, shared by
+    DecodeEngine's chunk and the scheduler's paged chunk (which passes a
+    ``block_table``) — the two loops cannot drift apart.
+    """
+    K = cfg.num_codebooks
+
+    def step(params, carry, rng_i, block_table=None):
+        cache, last, pos, live, budget = carry
+        # ``last`` is (B,V) for LMs, (B,K,V) for multi-codebook (musicgen) —
+        # sample_temperature reduces the trailing axis either way; the first
+        # codebook carries EOS.
+        nxt = sample_temperature(rng_i, last, temperature)
+        head = nxt[:, 0] if K > 1 else nxt
+        emit = live                          # emitted this step
+        budget = budget - emit.astype(jnp.int32)
+        live = live & (head != eos_id) & (budget > 0)
+        tok = nxt[..., None]                 # (B,1) or (B,K,1)
+        logits, cache = decoding.serve_step(params, cache, tok, pos, cfg,
+                                            block_table=block_table)
+        last = logits[:, -1]                 # (B,V) or (B,K,V)
+        return (cache, last, pos + 1, live, budget), (nxt, emit)
+
+    return step
+
+
+def build_tier_batch(group, tier: int, prompt_of: Callable,
+                     budget_of: Callable):
+    """Host-side arrays for one admission tier: (toks, lengths, slots,
+    budgets). ``group`` is [(slot, request), ...]; ``prompt_of``/``budget_of``
+    extract the (possibly resume-extended) prompt and remaining budget.
+    Shared by DecodeEngine.run and the scheduler's admission."""
+    B = len(group)
+    toks = np.zeros((B, tier), np.int32)
+    lengths = np.empty((B,), np.int32)
+    slot_ids = np.empty((B,), np.int32)
+    budgets = np.empty((B,), np.int32)
+    for i, (slot, r) in enumerate(group):
+        p = prompt_of(r)
+        toks[i, :len(p)] = p
+        lengths[i] = len(p)
+        slot_ids[i] = slot
+        budgets[i] = budget_of(r)
+    return toks, lengths, slot_ids, budgets
+
+
 class DecodeEngine:
     """Continuous batching over a fixed slot count, device-resident decode.
 
@@ -116,6 +178,15 @@ class DecodeEngine:
     def __init__(self, cfg, params, slots: int, cache_len: int,
                  eos_id: int = 1, temperature: float = 0.0,
                  sync_every: int = 8):
+        if slots < 1:
+            # kvcache.max_slots returns 0 when one slot alone exceeds the HBM
+            # budget — refuse here instead of letting the zero-row cache OOM
+            # or produce empty batches downstream
+            raise ValueError(
+                f"slots must be >= 1, got {slots}: a (1, {cache_len}) cache "
+                "slot does not fit the HBM budget (kvcache.max_slots == 0) — "
+                "shrink cache_len, shard over more chips, or raise the "
+                "budget fraction")
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -166,38 +237,17 @@ class DecodeEngine:
         return refill
 
     def _tier(self, plen: int) -> int:
-        """Length bucket for batched prefill: next power of two (attention
-        archs — causality makes right-padding exact); exact length for
-        recurrent archs (pads would pollute ssm/rglru carried state)."""
-        if self._recurrent:
-            return plen
-        return 1 << max(plen - 1, 0).bit_length()
+        return length_tier(plen, self._recurrent, self.cache_len)
 
     def _make_chunk_fn(self) -> Callable:
         """sync_every fused decode steps: sample → track EOS/budget → step."""
-        cfg, T = self.cfg, self.sync_every
-        temperature, eos_id = self.temperature, self.eos_id
-        K = cfg.num_codebooks
+        T = self.sync_every
+        step = make_decode_step(self.cfg, self.temperature, self.eos_id)
 
         def chunk(params, state, rng):
-            def step(carry, rng_i):
-                cache, last, pos, live, budget = carry
-                # ``last`` is (B,V) for LMs, (B,K,V) for multi-codebook
-                # (musicgen) — sample_temperature reduces the trailing axis
-                # either way; the first codebook carries EOS.
-                nxt = sample_temperature(rng_i, last, temperature)
-                head = nxt[:, 0] if K > 1 else nxt
-                emit = live                          # emitted this step
-                budget = budget - emit.astype(jnp.int32)
-                live = live & (head != eos_id) & (budget > 0)
-                tok = nxt[..., None]                 # (B,1) or (B,K,1)
-                logits, cache = decoding.serve_step(params, cache, tok, pos,
-                                                    cfg)
-                last = logits[:, -1]                 # (B,V) or (B,K,V)
-                return (cache, last, pos + 1, live, budget), (nxt, emit)
-
             rngs = jax.random.split(rng, T)
-            state, (toks, emits) = jax.lax.scan(step, state, rngs)
+            state, (toks, emits) = jax.lax.scan(
+                lambda carry, rng_i: step(params, carry, rng_i), state, rngs)
             return state, toks, emits
 
         return chunk
@@ -255,15 +305,10 @@ class DecodeEngine:
                 t0 = time.perf_counter()
                 for tier, group in sorted(buckets.items()):
                     B = len(group)
-                    toks = np.zeros((B, tier), np.int32)
-                    lengths = np.empty((B,), np.int32)
-                    slot_ids = np.empty((B,), np.int32)
-                    max_news = np.empty((B,), np.int32)
-                    for i, (slot, r) in enumerate(group):
-                        toks[i, :len(r.prompt)] = r.prompt
-                        lengths[i] = len(r.prompt)
-                        slot_ids[i] = slot
-                        max_news[i] = r.max_new
+                    toks, lengths, slot_ids, max_news = build_tier_batch(
+                        group, tier, lambda r: r.prompt,
+                        lambda r: r.max_new)
+                    for slot, r in group:
                         active[slot] = r
                     state = self._refill(self.params, state,
                                          jnp.asarray(toks),

@@ -20,6 +20,16 @@ def cache_bytes(cfg, batch: int, cache_len: int) -> int:
     return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
 
 
+def paged_cache_bytes(cfg, rows: int, cache_len: int, num_pages: int,
+                      page_size: int) -> int:
+    """Bytes of the paged cache layout (global layers paged into a
+    ``num_pages`` pool; ring/recurrent rows unchanged) — the HBM side of the
+    dataflow.attn_path tradeoff the perf guard checks."""
+    tree = jax.eval_shape(lambda: decoding.init_paged_cache(
+        cfg, rows, cache_len, num_pages, page_size))
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
 def cache_bytes_per_chip(cfg, batch: int, cache_len: int, chips: int,
                          sharded: bool = True) -> float:
     total = cache_bytes(cfg, batch, cache_len)
@@ -28,9 +38,13 @@ def cache_bytes_per_chip(cfg, batch: int, cache_len: int, chips: int,
 
 def max_slots(cfg, cache_len: int, chips: int,
               hbm_budget_fraction: float = 0.5) -> int:
+    """Slots fitting the HBM budget. Returns 0 — not 1 — when even a single
+    slot exceeds the budget: the old ``max(..., 1)`` floor masked a
+    guaranteed OOM as a servable configuration (callers such as
+    DecodeEngine now refuse loudly on 0)."""
     per_slot = cache_bytes(cfg, 1, cache_len) / chips
     budget = eyexam.HBM_CAP * hbm_budget_fraction
-    return max(int(budget // max(per_slot, 1)), 1)
+    return int(budget // max(per_slot, 1))
 
 
 class SlotAllocator:
@@ -61,6 +75,18 @@ class SlotAllocator:
         self._live.add(s)
         return s
 
+    def alloc_many(self, n: int):
+        """Allocate n slots atomically (all-or-nothing): the scheduler admits
+        a whole prefill tier at once and must not half-admit under pressure."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"requested {n} slots, only {len(self._free)} free")
+        return [self.alloc() for _ in range(n)]
+
+    def free_many(self, slots) -> None:
+        for s in slots:
+            self.free(s)
+
     def free(self, slot: int) -> None:
         if slot not in self._live:
             raise ValueError(f"slot {slot} is not live")
@@ -71,11 +97,18 @@ class SlotAllocator:
         return sorted(self._live)
 
 
-def report(cfg, batch: int, cache_len: int, chips: int) -> Dict[str, float]:
+def report(cfg, batch: int, cache_len: int, chips: int,
+           pager=None) -> Dict[str, float]:
+    """Capacity report; pass a serve.paging.PageAllocator as ``pager`` to
+    include live paged-occupancy stats (pages total/free, fragmentation)
+    alongside the dense-slot accounting it replaces."""
     total = cache_bytes(cfg, batch, cache_len)
-    return {
+    out = {
         "total_gb": total / 1e9,
         "per_chip_gb": total / chips / 1e9,
         "fits": total / chips < eyexam.HBM_CAP,
         "max_slots_half_hbm": max_slots(cfg, cache_len, chips),
     }
+    if pager is not None:
+        out["paged"] = pager.stats()
+    return out

@@ -1,0 +1,129 @@
+"""Paged KV accounting: fixed-size pages, per-request block tables.
+
+The host-side half of the paged-cache contract (device side:
+``models.decoding.init_paged_cache`` + ``kernels.paged_attention``). A
+``PageAllocator`` owns a pool of ``num_pages`` fixed-size pages and, per
+request, a **block table** — the ordered list of physical page ids holding
+that request's KV history. This is the paper's CSC address vector applied to
+activations-over-time: the dense ``(rows, cache_len)`` slot provisioned for
+the worst case (the v1 mistake Eyeriss v2's flexible allocation fixes)
+becomes exactly ``ceil(len / page_size)`` pages per live sequence, growing
+on demand during decode and returned the moment the sequence finishes.
+
+Allocation is all-or-nothing (``ensure`` either covers the requested length
+or changes nothing), so the scheduler can probe for page pressure and decide
+preemption *before* touching device state. The allocator itself is
+policy-free: it reports per-request page holdings (``pages_of``) and the
+scheduler picks victims (serve/scheduler.py evicts the latest-admitted
+request and requeues it for recompute).
+
+Pop order is deterministic (lowest free page id first) so block tables — and
+therefore device scatter/gather patterns — are reproducible run to run.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import dataflow
+
+
+class PageAllocator:
+    """Fixed-pool page allocator with per-request (rid-keyed) block tables."""
+
+    def __init__(self, num_pages: int, page_size: int = dataflow.PAGE_SIZE):
+        assert num_pages >= 1 and page_size >= 1, (num_pages, page_size)
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free = list(range(num_pages - 1, -1, -1))  # pop() -> page 0 first
+        self._tables: Dict[int, List[int]] = {}          # rid -> physical ids
+        self._lengths: Dict[int, int] = {}               # rid -> token count
+
+    # ------------------------------------------------------------- queries
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def pages_of(self, rid: int) -> int:
+        return len(self._tables.get(rid, ()))
+
+    def table(self, rid: int) -> List[int]:
+        return list(self._tables[rid])
+
+    def live_requests(self) -> List[int]:
+        return sorted(self._tables)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return dataflow.pages_for(n_tokens, self.page_size)
+
+    # ----------------------------------------------------------- mutation
+    def ensure(self, rid: int, n_tokens: int) -> bool:
+        """Grow rid's block table to cover ``n_tokens``. All-or-nothing:
+        returns False (and allocates nothing) under page pressure — the
+        scheduler's preemption probe. Never shrinks. Capacity only: the
+        *actual* token count (occupancy stats) is set_length's, so reserving
+        headroom never inflates used_tokens."""
+        table = self._tables.setdefault(rid, [])
+        need = self.pages_for(n_tokens) - len(table)
+        if need > len(self._free):
+            if not table:
+                del self._tables[rid]
+            return False
+        for _ in range(need):
+            table.append(self._free.pop())
+        return True
+
+    def set_length(self, rid: int, n_tokens: int) -> None:
+        """Record rid's actual token count (occupancy/fragmentation stats);
+        pages must already cover it (``ensure`` first)."""
+        assert self.pages_for(n_tokens) <= self.pages_of(rid), (
+            rid, n_tokens, self.pages_of(rid))
+        self._lengths[rid] = int(n_tokens)
+
+    def free(self, rid: int) -> int:
+        """Return all of rid's pages to the pool. Returns the page count."""
+        if rid not in self._tables:
+            raise ValueError(f"request {rid} holds no pages")
+        pages = self._tables.pop(rid)
+        self._lengths.pop(rid, None)
+        # keep pop order deterministic after churn: lowest ids come back first
+        self._free.extend(pages)
+        self._free.sort(reverse=True)
+        return len(pages)
+
+    # -------------------------------------------------------- device view
+    def block_table_rows(self, rids: List[int], max_pages: int) -> np.ndarray:
+        """(len(rids), max_pages) int32 physical-page table, -1 unallocated.
+
+        Row order follows ``rids``; a rid without pages yields an all -1 row
+        (a freed/never-admitted device row — every write drops, every read
+        is skipped by the kernel's occupancy bound).
+        """
+        bt = np.full((len(rids), max_pages), -1, np.int32)
+        for i, rid in enumerate(rids):
+            pages = self._tables.get(rid, ())
+            assert len(pages) <= max_pages, (rid, len(pages), max_pages)
+            bt[i, :len(pages)] = pages
+        return bt
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, float]:
+        used_pages = self.in_use
+        used_tokens = sum(self._lengths.values())
+        cap_tokens = used_pages * self.page_size
+        return {
+            "page_size": self.page_size,
+            "pages_total": self.num_pages,
+            "pages_free": len(self._free),
+            "pages_used": used_pages,
+            "live_requests": len(self._tables),
+            "used_tokens": used_tokens,
+            # internal fragmentation: allocated-but-unoccupied share of the
+            # live pages (tail-of-last-page waste); 0 when nothing is live
+            "fragmentation": (1.0 - used_tokens / cap_tokens) if cap_tokens
+            else 0.0,
+        }

@@ -1,0 +1,450 @@
+"""Continuous-batching scheduler over a paged KV cache (streaming serving).
+
+``DecodeEngine`` (serve/engine.py) provisions a dense ``(slots, cache_len)``
+cache — the worst-case allocation Eyeriss v2's flexible hierarchy exists to
+avoid — and drains a fixed request list with no notion of arrival time. This
+scheduler replaces that model end to end:
+
+* **Paged KV** — global-attention layers store KV in fixed-size pages
+  addressed through per-request block tables (serve/paging.py ↔
+  models.decoding.init_paged_cache ↔ kernels/paged_attention.py): pages are
+  allocated on demand as sequences grow, returned the moment a request
+  finishes, and under page pressure the latest-admitted request is
+  **preempted** (pages freed, request requeued for recompute) so the oldest
+  work always completes. ``core.dataflow.attn_path`` decides paged vs. the
+  contiguous-ring fallback from the expected occupancy.
+* **Continuous batching** — admission runs every ``sync_every`` decode steps:
+  arrived requests are bucketed into length tiers and batch-prefilled into
+  freed rows (``decoding.prefill_batched``, the engine's amortized-admission
+  path), EOS rows are evicted and their pages returned at the same boundary.
+* **Streaming** — each request may carry an ``on_token`` callback, invoked
+  per generated token at every sync (per-chunk host transfer, never
+  per-token — the device-residency contract is unchanged from the engine).
+* **Arrival accounting** — requests carry an ``arrival`` stamp on a virtual
+  clock that advances ``sync_every`` per decode chunk (deterministic,
+  CI-stable; wall-clock is recorded alongside). Admission never runs ahead
+  of arrival, and per-request admitted/first-token/finished stamps feed the
+  goodput/latency numbers in benchmarks/sparse_decode.py --arrivals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dataflow
+from repro.models import decoding, transformer as tfm
+from repro.serve import kvcache, paging
+from repro.serve.engine import build_tier_batch, length_tier, make_decode_step
+
+
+@dataclasses.dataclass
+class StreamRequest:
+    """A request with arrival/latency accounting and optional streaming.
+
+    ``arrival`` is in virtual decode steps (the scheduler's clock unit).
+    ``on_token`` — if set — is called as ``on_token(request, token)`` for
+    every generated token, in order, at each sync boundary. ``out`` always
+    accumulates regardless. Latency stamps (``admitted_at``,
+    ``first_token_at``, ``finished_at``) are on the same virtual clock;
+    ``finished_wall_s`` is wall-clock seconds from run start.
+    """
+    rid: int
+    prompt: List[int]
+    max_new: int
+    arrival: float = 0.0
+    out: List = dataclasses.field(default_factory=list)
+    done: bool = False
+    on_token: Optional[Callable] = None
+    admitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    finished_wall_s: Optional[float] = None
+    preemptions: int = 0
+
+
+class ContinuousBatchingScheduler:
+    """Streaming continuous-batching loop over paged (or contiguous) KV.
+
+    ``rows`` is the decode batch width (the engine's ``slots``);
+    ``num_pages`` sizes the shared page pool — provisioning fewer pages than
+    ``rows × ceil(cache_len/page_size)`` is the point of paging (short
+    requests stop stranding worst-case HBM), with preemption as the safety
+    valve. ``attn_path`` overrides the dataflow dispatch ('paged' |
+    'contiguous'); default asks ``core.dataflow.attn_path`` at the expected
+    occupancy (mean request length ≈ half the slot) and falls back to
+    contiguous for archs with no global-attention layers (ring/recurrent
+    state is already bounded — nothing to page).
+    """
+
+    def __init__(self, cfg, params, rows: int, cache_len: int, *,
+                 page_size: int = 0, num_pages: int = 0, eos_id: int = 1,
+                 temperature: float = 0.0, sync_every: int = 8,
+                 attn_path: Optional[str] = None):
+        if rows < 1:
+            raise ValueError(
+                f"rows must be >= 1, got {rows}: a (1, {cache_len}) cache "
+                "row does not fit the HBM budget (kvcache.max_slots == 0)")
+        self.cfg = cfg
+        self.params = params
+        self.rows = rows
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.sync_every = max(1, sync_every)
+        self.page_size = page_size or min(dataflow.PAGE_SIZE, cache_len)
+        kinds = {k for k, _ in tfm.slot_kinds(cfg)}
+        self._recurrent = bool(kinds & {"ssm", "rglru"})
+        has_global = "global" in kinds
+        if attn_path is None:
+            attn_path = dataflow.attn_path(cache_len, cache_len / 2,
+                                           self.page_size) \
+                if has_global else "contiguous"
+        assert attn_path in ("paged", "contiguous"), attn_path
+        self.paged = has_global and attn_path == "paged"
+        self.max_pages = dataflow.pages_for(cache_len, self.page_size)
+        if self.paged:
+            # default: full provisioning (every row can hold cache_len);
+            # passing fewer pages is the point of paging — admission checks
+            # per request that pages_for(prompt + max_new) fits the pool
+            self.num_pages = num_pages or rows * self.max_pages
+            self.pager = paging.PageAllocator(self.num_pages, self.page_size)
+        else:
+            self.num_pages = 0
+            self.pager = None
+        self.host_syncs = 0
+        self.phase_stats: Dict = {}
+        self._chunk = jax.jit(self._make_chunk_fn(), donate_argnums=(1,))
+        self._refill = jax.jit(self._make_refill_fn(), donate_argnums=(1,))
+
+    # ------------------------------------------------------ device programs
+    def _init_state(self):
+        cfg = self.cfg
+        if self.paged:
+            cache = decoding.init_paged_cache(cfg, self.rows, self.cache_len,
+                                              self.num_pages, self.page_size)
+        else:
+            cache = decoding.init_cache(cfg, self.rows, self.cache_len)
+        vshape = (self.rows, cfg.num_codebooks, cfg.vocab_padded) \
+            if cfg.num_codebooks > 1 else (self.rows, cfg.vocab_padded)
+        last = jnp.zeros(vshape, jnp.float32)
+        pos = jnp.zeros((self.rows,), jnp.int32)
+        live = jnp.zeros((self.rows,), jnp.bool_)
+        budget = jnp.zeros((self.rows,), jnp.int32)
+        return (cache, last, pos, live, budget)
+
+    def _make_refill_fn(self) -> Callable:
+        """Batched prefill of one length tier into freed rows.
+
+        Same contract as DecodeEngine's refill, except global-attention
+        entries scatter each row's prefill KV into its block-table pages
+        (decoding.scatter_rows_to_pages) instead of a dense slot row.
+        """
+        cfg, cache_len, paged = self.cfg, self.cache_len, self.paged
+
+        def merge_entry(c_entry, row_entry, slots, bt_rows, lengths,
+                        stacked: bool):
+            if decoding.is_paged_entry(c_entry):
+                def scat(pool, rows_kv):
+                    return decoding.scatter_rows_to_pages(
+                        pool, rows_kv, bt_rows, lengths)
+                f = jax.vmap(scat) if stacked else scat
+                return {"pk": f(c_entry["pk"], row_entry["k"]),
+                        "pv": f(c_entry["pv"], row_entry["v"])}
+            if stacked:     # stacked entries: (nper, B, ...) — axis 1
+                return jax.tree.map(
+                    lambda c, s: c.at[:, slots].set(s.astype(c.dtype)),
+                    c_entry, row_entry)
+            return jax.tree.map(
+                lambda c, s: c.at[slots].set(s.astype(c.dtype)),
+                c_entry, row_entry)
+
+        def refill(params, state, toks, lengths, slots, max_new, block_table):
+            cache, last, pos, live, budget = state
+            logits, row_cache = decoding.prefill_batched(
+                params, toks, lengths, cfg, cache_len)
+            bt_rows = block_table[slots] if paged else None
+            new_cache = {}
+            for part in ("blocks", "rem"):
+                if part in cache:
+                    new_cache[part] = {
+                        k: merge_entry(cache[part][k], row_cache[part][k],
+                                       slots, bt_rows, lengths,
+                                       stacked=(part == "blocks"))
+                        for k in cache[part]}
+            last = last.at[slots].set(logits[:, -1].astype(last.dtype))
+            pos = pos.at[slots].set(lengths)
+            live = live.at[slots].set(True)
+            budget = budget.at[slots].set(max_new)
+            return (new_cache, last, pos, live, budget)
+
+        return refill
+
+    def _make_chunk_fn(self) -> Callable:
+        """sync_every fused decode steps — the engine's shared step
+        (engine.make_decode_step), with serve_step routing paged entries
+        through the block table."""
+        T, paged = self.sync_every, self.paged
+        step = make_decode_step(self.cfg, self.temperature, self.eos_id)
+
+        def chunk(params, state, rng, block_table):
+            bt = block_table if paged else None
+            rngs = jax.random.split(rng, T)
+            state, (toks, emits) = jax.lax.scan(
+                lambda carry, rng_i: step(params, carry, rng_i,
+                                          block_table=bt), state, rngs)
+            return state, toks, emits
+
+        return chunk
+
+    # -------------------------------------------------------------- host loop
+    def _plen(self, r: StreamRequest) -> int:
+        """Effective prompt length at (re-)admission: original prompt plus
+        any tokens generated before a preemption (recompute resume)."""
+        return len(r.prompt) + len(r.out)
+
+    def _resume_prompt(self, r: StreamRequest) -> List[int]:
+        if not r.out:
+            return list(r.prompt)
+        if self.cfg.num_codebooks > 1:
+            raise RuntimeError(
+                "recompute preemption requires num_codebooks == 1")
+        return list(r.prompt) + [int(t) for t in r.out]
+
+    def _final_len(self, r: StreamRequest) -> int:
+        """Upper bound on tokens this request ever holds (page cap)."""
+        return len(r.prompt) + r.max_new
+
+    def _block_table(self, row_rids: List[int]):
+        return jnp.asarray(self.pager.block_table_rows(row_rids,
+                                                       self.max_pages))
+
+    def run(self, requests: List[StreamRequest], rng=None
+            ) -> List[StreamRequest]:
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            # block tables are keyed by rid — duplicates would silently share
+            # pages and corrupt each other's KV history
+            raise ValueError(f"request rids must be unique, got {rids}")
+        # feasibility is arrival-independent (resume totals equal originals):
+        # validate everything up front so a late infeasible request cannot
+        # abort the run after other requests already finished
+        for r in requests:
+            total = len(r.prompt) + r.max_new
+            if r.max_new > 0 and total > self.cache_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt ({len(r.prompt)}) + max_new "
+                    f"({r.max_new}) exceeds cache_len ({self.cache_len})")
+            if self.paged and r.max_new > 0 and dataflow.pages_for(
+                    total, self.page_size) > self.num_pages:
+                raise ValueError(
+                    f"request {r.rid} needs "
+                    f"{dataflow.pages_for(total, self.page_size)} pages, "
+                    f"pool has {self.num_pages}: it can never run")
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        waiting: List[StreamRequest] = []
+        done: List[StreamRequest] = []
+        if self.paged:
+            # fresh pool per run (like the SlotAllocator below): an aborted
+            # previous run must not leak its block tables into this one;
+            # self.pager stays inspectable after the run (kvcache.report)
+            self.pager = paging.PageAllocator(self.num_pages, self.page_size)
+        for r in [r for r in pending if r.max_new <= 0]:
+            pending.remove(r)
+            r.done = True
+            r.finished_at = r.arrival
+            done.append(r)
+        alloc = kvcache.SlotAllocator(self.rows)
+        active: Dict[int, StreamRequest] = {}        # row -> request
+        row_pos: Dict[int, int] = {}                 # row -> device pos mirror
+        admit_order: List[int] = []                  # rows, oldest first
+        row_rids = [-1] * self.rows
+        state = self._init_state()
+        K = self.cfg.num_codebooks
+        T = self.sync_every
+        clock = 0.0
+        t0 = time.perf_counter()
+        st = self.phase_stats = {
+            "prefill_s": 0.0, "decode_s": 0.0, "prefill_batches": 0,
+            "prefill_prompts": 0, "prefill_real_tokens": 0,
+            "prefill_padded_tokens": 0, "decode_chunks": 0,
+            "decode_steps": 0, "idle_steps": 0.0, "preemptions": 0,
+            "attn_path": "paged" if self.paged else "contiguous",
+        }
+
+        preempted_rows: List[int] = []
+        just_preempted: set = set()           # rids evicted this boundary
+        peak_pages: Optional[Dict] = None     # busiest-boundary pool snapshot
+
+        def preempt_latest() -> bool:
+            """Free the latest-admitted row; requeue its request (recompute).
+            Returns False when there is nothing to preempt."""
+            if len(admit_order) <= 1:
+                return False
+            row = admit_order.pop()               # latest admitted
+            r = active.pop(row)
+            self._resume_prompt(r)                # raises early for K > 1
+            self.pager.free(r.rid)
+            alloc.free(row)
+            row_rids[row] = -1
+            row_pos.pop(row, None)
+            r.preemptions += 1
+            st["preemptions"] += 1
+            preempted_rows.append(row)
+            just_preempted.add(r.rid)
+            waiting.insert(0, r)                  # keeps its queue priority
+            return True
+
+        while pending or waiting or active:
+            # ---- arrivals (virtual clock; idle-jump when nothing to do) ----
+            while pending and pending[0].arrival <= clock + 1e-9:
+                waiting.append(pending.pop(0))
+            if not active and not waiting:
+                st["idle_steps"] += pending[0].arrival - clock
+                clock = pending[0].arrival
+                continue
+
+            # ---- page headroom for the active rows' next chunk ------------
+            # runs BEFORE admission: live rows reserve their chunk pages
+            # first, so a new request is never admitted (and batch-prefilled)
+            # only to be preempted at the same boundary — that would throw
+            # the prefill away and thrash under sustained pressure
+            if self.paged:
+                for row in list(admit_order):         # oldest first
+                    if row not in active:
+                        continue
+                    r = active[row]
+                    need = min(row_pos[row] + T, self._final_len(r))
+                    while row in active and not self.pager.ensure(r.rid,
+                                                                  need):
+                        if not preempt_latest():
+                            raise RuntimeError(
+                                "page pool exhausted with nothing left to "
+                                "preempt — num_pages is too small")
+                    if row in active:
+                        self.pager.set_length(r.rid, row_pos[row])
+            if preempted_rows:
+                # clear the device live flags of preempted rows: otherwise
+                # they keep running full forward+sampling as zombies (and in
+                # paged mode DMA-ing clamped pages) until the row is reused
+                cache, last, pos, live, budget = state
+                live = live.at[jnp.asarray(preempted_rows)].set(False)
+                state = (cache, last, pos, live, budget)
+                preempted_rows.clear()
+
+            # ---- admission: arrived requests into freed rows --------------
+            to_admit: List[StreamRequest] = []
+            while waiting and len(to_admit) < alloc.available():
+                r = waiting[0]
+                if r.rid in just_preempted:
+                    # evicted THIS boundary to relieve pressure — re-admitting
+                    # into the pages it just freed would re-run its (growing)
+                    # prefill only to preempt it again: wait one boundary.
+                    # break, not skip: it keeps queue priority
+                    break
+                plen = self._plen(r)
+                if self.paged and not self.pager.ensure(
+                        r.rid, min(plen + T, self._final_len(r))):
+                    break                      # page pressure: wait for frees
+                waiting.pop(0)
+                to_admit.append(r)
+            just_preempted.clear()
+            admits: List[Tuple[int, StreamRequest]] = list(
+                zip(alloc.alloc_many(len(to_admit)), to_admit))
+            for row, r in admits:
+                admit_order.append(row)
+                row_rids[row] = r.rid
+                row_pos[row] = self._plen(r)
+                if self.paged:
+                    self.pager.set_length(r.rid, row_pos[row])
+                if r.admitted_at is None:
+                    r.admitted_at = clock
+            if admits:
+                buckets: Dict[int, List[Tuple[int, StreamRequest]]] = {}
+                for row, r in admits:
+                    buckets.setdefault(
+                        length_tier(self._plen(r), self._recurrent,
+                                    self.cache_len),
+                        []).append((row, r))
+                bt = self._block_table(row_rids) if self.paged else \
+                    jnp.zeros((self.rows, 1), jnp.int32)
+                tp0 = time.perf_counter()
+                for tier, group in sorted(buckets.items()):
+                    B = len(group)
+                    toks, lengths, row_ids, budgets = build_tier_batch(
+                        group, tier, self._resume_prompt,
+                        lambda r: r.max_new - len(r.out))
+                    for row, r in group:
+                        active[row] = r
+                    state = self._refill(self.params, state,
+                                         jnp.asarray(toks),
+                                         jnp.asarray(lengths),
+                                         jnp.asarray(row_ids),
+                                         jnp.asarray(budgets), bt)
+                    st["prefill_batches"] += 1
+                    st["prefill_prompts"] += B
+                    st["prefill_real_tokens"] += int(lengths.sum())
+                    st["prefill_padded_tokens"] += B * tier
+                jax.block_until_ready(state[1])
+                st["prefill_s"] += time.perf_counter() - tp0
+
+            if not active:
+                continue
+
+            if self.paged:
+                # sample occupancy at the busiest point of the boundary —
+                # the end-of-run snapshot is always fully drained
+                s = self.pager.stats()
+                if peak_pages is None or \
+                        s["pages_used"] > peak_pages["pages_used"]:
+                    peak_pages = s
+
+            # ---------------------- device-resident decode chunk ----------
+            td0 = time.perf_counter()
+            rng, k = jax.random.split(rng)
+            bt = self._block_table(row_rids) if self.paged else \
+                jnp.zeros((self.rows, 1), jnp.int32)
+            state, toks, emits = self._chunk(self.params, state, k, bt)
+            toks_h, emits_h, live_h = jax.device_get((toks, emits, state[3]))
+            self.host_syncs += 1
+            st["decode_chunks"] += 1
+            st["decode_steps"] += T
+            st["decode_s"] += time.perf_counter() - td0
+            clock += T
+            for t in range(emits_h.shape[0]):
+                for row, r in active.items():
+                    if emits_h[t, row]:
+                        tok = [int(v) for v in toks_h[t, row]] if K > 1 \
+                            else int(toks_h[t, row])
+                        r.out.append(tok)
+                        if r.first_token_at is None:
+                            r.first_token_at = clock - T + t + 1
+                        if r.on_token is not None:
+                            r.on_token(r, tok)
+            freed_rows: List[int] = []
+            for row in list(active):
+                row_pos[row] += T
+                if not live_h[row]:
+                    r = active.pop(row)
+                    r.done = True
+                    r.finished_at = clock
+                    r.finished_wall_s = time.perf_counter() - t0
+                    done.append(r)
+                    freed_rows.append(row)
+                    admit_order.remove(row)
+                    row_rids[row] = -1
+                    row_pos.pop(row, None)
+                    if self.paged:
+                        self.pager.free(r.rid)   # pages return immediately
+            alloc.free_many(freed_rows)
+        st["total_wall_s"] = time.perf_counter() - t0
+        st["clock_steps"] = clock
+        if self.paged:
+            st["pages"] = self.pager.stats()       # drained end state
+            st["pages_peak"] = peak_pages          # busiest boundary
+        return done

@@ -44,6 +44,27 @@ MLP_WEIGHTS = ("wg", "wu", "wd", "w1", "w2")
 is_packed = _ops.is_packed
 
 
+def packed_bytes(params) -> int:
+    """Resident HBM bytes of every BCSC-packed weight in a params tree
+    (payload blocks + row/col index vectors + nnzb scalars). The
+    weight-stream half of the serving-memory report: decode_benchmark
+    records it next to the cache-side numbers (kvcache.paged_cache_bytes).
+    Returns 0 for an unpacked tree."""
+    total = 0
+
+    def walk(tree):
+        nonlocal total
+        if is_packed(tree):
+            total += sum(v.size * v.dtype.itemsize for v in tree.values())
+            return
+        if isinstance(tree, dict):
+            for v in tree.values():
+                walk(v)
+
+    walk(params)
+    return total
+
+
 def pack_weight(w, bk: int, bn: int,
                 store_dtype=None) -> Dict[str, jnp.ndarray]:
     """Host-side prune-free encode+prepare of one (K,N) weight.
