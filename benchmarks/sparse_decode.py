@@ -184,13 +184,23 @@ def mlp_proxy(arch: str = "qwen2.5-3b-reduced", sparsity: float = 0.75,
              "hbm_bytes": 0, "kernel_launches": 0}
     weights = stats["weights"]
     names = list(weights)
-    n_layers = len(weights[names[0]]["real"])
+    # mixed-density guard (ROADMAP latent bug): sparsify_mlp_params routes a
+    # weight dense in one layer group and packed in another, so the per-name
+    # "real"/"padded" lists can have UNEQUAL lengths — indexing them
+    # uniformly was an IndexError. Layers where a projection is missing
+    # count only the projections that were actually packed there.
+    n_layers = max((len(weights[nm]["real"]) for nm in names), default=0)
+    mixed_density = len({len(weights[nm]["real"]) for nm in names}) > 1
     for li in range(n_layers):
         seg = []                        # (real, padded, C) per projection
         for nm in names:
             w = weights[nm]
+            if li >= len(w["real"]):
+                continue                # dense in this layer group: no pack
             P = w["padded"][li]
             seg.append((w["real"][li], P, bmlp._pick_chunk(P)))
+        if not seg:
+            continue
         n_chunks = sum(p // c for _, p, c in seg)
         unrolled = n_chunks <= bmlp.UNROLL_CHUNKS_MAX
 
@@ -227,6 +237,7 @@ def mlp_proxy(arch: str = "qwen2.5-3b-reduced", sparsity: float = 0.75,
 
     return {
         "arch": arch, "sparsity": sparsity, "bm": bm,
+        "mixed_density": mixed_density,
         "block_density": stats.get("block_density"),
         "packing_efficiency": stats.get("packing_efficiency"),
         "per_weight_packing": {
@@ -476,6 +487,126 @@ def arrival_benchmark(arch: str = "qwen2.5-3b-reduced", rows: int = 3,
     return out
 
 
+# -------------------------------- ISSUE 4: shared-prefix arrival sweep
+def shared_prefix_benchmark(arch: str = "qwen2.5-3b-reduced", rows: int = 3,
+                            n_requests: int = 6, cache_len: int = 48,
+                            page_size: int = 8, sync_every: int = 4,
+                            prefix_len: int = 16, max_new: int = 6,
+                            mean_gap: float = 2.0, seed: int = 0) -> Dict:
+    """CoW prefix sharing under Poisson arrivals: the same request stream
+    served with sharing ON vs OFF at a page pool deliberately too small for
+    unshared admission to keep every row busy.
+
+    Gated claims (scripts/perf_guard.py):
+    * sharing admits strictly MORE concurrent requests at the same pool size
+      (peak_live_rows) and peaks at strictly fewer distinct pages;
+    * outputs are identical — sharing is a pure memory win;
+    * the page-native prefill path allocates no dense (B, cache_len)
+      KV transient: its per-layer buffer is the (B, tier) projection output
+      itself (byte accounting below, tier << cache_len);
+    * int8 KV pages record their quantized-vs-fp byte ratio.
+    """
+    import jax
+    from repro.core import dataflow
+    from repro.models import transformer as tfm
+    from repro.serve import kvcache
+    from repro.serve.engine import length_tier
+    from repro.serve.scheduler import (ContinuousBatchingScheduler,
+                                       StreamRequest)
+
+    cfg = get_config(arch)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    arrivals = _poisson_arrivals(n_requests, mean_gap, rng)
+    prefix = [5 + (i % 90) for i in range(prefix_len)]
+    prompts = [prefix + [2 + i, 3 + i] for i in range(n_requests)]
+    plen = len(prompts[0])
+    # pool sized so unshared admission cannot hold `rows` concurrent
+    # requests at their final lengths, but shared admission can
+    per_req = dataflow.pages_for(plen + max_new, page_size)
+    shared_pages = dataflow.pages_for(prefix_len, page_size)
+    num_pages = per_req + (rows - 1) * (per_req - shared_pages) \
+        + shared_pages // 2
+
+    def run(share: bool) -> Dict:
+        sch = ContinuousBatchingScheduler(
+            cfg, params, rows=rows, cache_len=cache_len,
+            page_size=page_size, num_pages=num_pages, eos_id=-1,
+            sync_every=sync_every, attn_path="paged", share_prefix=share)
+        reqs = [StreamRequest(i, prompts[i], max_new, arrival=arrivals[i])
+                for i in range(n_requests)]
+        t0 = time.perf_counter()
+        done = sch.run(reqs)
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out) for r in done)
+        lat = [r.finished_at - r.arrival for r in done]
+        makespan = sch.phase_stats["clock_steps"]
+        return {
+            "outputs": {r.rid: r.out for r in done},
+            "tokens": toks,
+            "makespan_steps": makespan,
+            "goodput_tokens_per_step": toks / max(makespan, 1e-9),
+            "latency_p50_steps": float(np.percentile(lat, 50)),
+            "latency_p99_steps": float(np.percentile(lat, 99)),
+            "peak_live_rows": sch.phase_stats["peak_live_rows"],
+            "preemptions": sch.phase_stats["preemptions"],
+            "cow_copies": sch.phase_stats["cow_copies"],
+            "shared_tokens_admitted":
+                sch.phase_stats["shared_tokens_admitted"],
+            "pages_peak": sch.phase_stats["pages_peak"],
+            "admission_wait_p99_steps": float(np.percentile(
+                [r.admitted_at - r.arrival for r in done], 99)),
+            "wall_s": wall,
+        }
+
+    shared = run(True)
+    unshared = run(False)
+    outputs_identical = shared.pop("outputs") == unshared.pop("outputs")
+
+    # ---- prefill transient accounting: scatter path vs page-native ----
+    tier = length_tier(plen, False, cache_len)
+    n_glob = kvcache.num_global_layers(cfg)
+    t_scatter = dataflow.prefill_kv_transient_bytes(
+        rows, cache_len, cfg.num_kv_heads, cfg.head_dim, n_glob)
+    t_paged = dataflow.prefill_kv_transient_bytes(
+        rows, tier, cfg.num_kv_heads, cfg.head_dim, n_glob)
+
+    return {
+        "arch": arch, "rows": rows, "n_requests": n_requests,
+        "cache_len": cache_len, "page_size": page_size,
+        "prefix_len": prefix_len, "max_new": max_new,
+        "num_pages": num_pages,
+        "arrivals": [round(a, 2) for a in arrivals],
+        "shared": shared,
+        "unshared": unshared,
+        "outputs_identical": outputs_identical,
+        "concurrency_gain": (shared["peak_live_rows"]
+                             - unshared["peak_live_rows"]),
+        "goodput_ratio": (shared["goodput_tokens_per_step"] /
+                          max(unshared["goodput_tokens_per_step"], 1e-9)),
+        "prefill_transient": {
+            "tier": tier,
+            "scatter_path_bytes": t_scatter,       # PR 3: (B, cache_len) KV
+            "paged_path_bytes": t_paged,           # now: the (B, tier) proj
+            "bytes_saved": t_scatter - t_paged,
+        },
+        "kv_quant": _kv_quant_ratio(cfg, rows, cache_len, num_pages,
+                                    page_size),
+    }
+
+
+def _kv_quant_ratio(cfg, rows, cache_len, num_pages, page_size) -> Dict:
+    """Quantized-vs-fp byte accounting for the paged cache (int8 payload +
+    per-page scale tables vs bf16) — the recorded ratio the guard checks."""
+    from repro.serve import kvcache
+    fp_b = kvcache.paged_cache_bytes(cfg, rows, cache_len, num_pages,
+                                     page_size, "fp")
+    i8_b = kvcache.paged_cache_bytes(cfg, rows, cache_len, num_pages,
+                                     page_size, "int8")
+    return {"fp_cache_bytes": fp_b, "int8_cache_bytes": i8_b,
+            "int8_vs_fp_ratio": i8_b / max(fp_b, 1)}
+
+
 # --------------------------------------------------------- engine benchmark
 def decode_benchmark(batches=(1, 4, 8), max_new: int = 8,
                      arch: str = "qwen2.5-3b-reduced",
@@ -552,6 +683,30 @@ def decode_benchmark(batches=(1, 4, 8), max_new: int = 8,
     return out
 
 
+def _print_shared_prefix(sp: Dict) -> None:
+    s, u = sp["shared"], sp["unshared"]
+    print(f"=== Shared-prefix arrivals: CoW sharing vs unshared "
+          f"({sp['rows']} rows, {sp['n_requests']} reqs, "
+          f"{sp['prefix_len']}-token prefix, {sp['num_pages']} pages) ===")
+    print(f"  shared  : peak {s['peak_live_rows']} rows, "
+          f"{s['pages_peak']['pages_used']} pages, "
+          f"{s['goodput_tokens_per_step']:.3f} tok/step, "
+          f"admit-wait p99 {s['admission_wait_p99_steps']:.0f}, "
+          f"{s['cow_copies']} CoW copies")
+    print(f"  unshared: peak {u['peak_live_rows']} rows, "
+          f"{u['pages_peak']['pages_used']} pages, "
+          f"{u['goodput_tokens_per_step']:.3f} tok/step, "
+          f"admit-wait p99 {u['admission_wait_p99_steps']:.0f}")
+    pt = sp["prefill_transient"]
+    print(f"  prefill KV transient: paged {pt['paged_path_bytes']} B "
+          f"(tier {pt['tier']}) vs scatter {pt['scatter_path_bytes']} B "
+          f"(dense cache_len rows)")
+    kq = sp["kv_quant"]
+    print(f"  int8 KV pages: {kq['int8_cache_bytes']} B vs fp "
+          f"{kq['fp_cache_bytes']} B ({kq['int8_vs_fp_ratio']:.2f}x), "
+          f"outputs identical: {sp['outputs_identical']}")
+
+
 def main(smoke: bool = False, engine: bool = True, repeats: int = None,
          arrivals: bool = True) -> Dict:
     sparsity = 0.75
@@ -577,6 +732,8 @@ def main(smoke: bool = False, engine: bool = True, repeats: int = None,
     if engine and arrivals:
         res["arrivals"] = arrival_benchmark(
             n_requests=6 if smoke else 9)
+        res["shared_prefix"] = shared_prefix_benchmark(
+            n_requests=4 if smoke else 6)
 
     kp = res["kernel_proxy"]
     print("=== Batch-1 BCSC GEMV vs dense RS grid steps "
@@ -650,6 +807,9 @@ def main(smoke: bool = False, engine: bool = True, repeats: int = None,
         print(f"  continuous batching {verdict} drain-the-chunk at high "
               f"length variance")
 
+    if "shared_prefix" in res:
+        _print_shared_prefix(res["shared_prefix"])
+
     with open(BENCH_JSON, "w") as f:
         json.dump(res, f, indent=2, default=float)
     print(f"wrote {BENCH_JSON}")
@@ -676,6 +836,7 @@ if __name__ == "__main__":
             res = json.load(open(BENCH_JSON))
         res["paged"] = paged_proxy()
         res["arrivals"] = arrival_benchmark()
+        res["shared_prefix"] = shared_prefix_benchmark()
         with open(BENCH_JSON, "w") as f:
             json.dump(res, f, indent=2, default=float)
         ar = res["arrivals"]
@@ -683,6 +844,7 @@ if __name__ == "__main__":
             print(f"{name}: goodput ratio x{c['goodput_ratio']:.2f} "
                   f"(sched p99 {c['scheduler']['latency_p99_steps']:.0f} vs "
                   f"drain p99 {c['drain']['latency_p99_steps']:.0f} steps)")
+        _print_shared_prefix(res["shared_prefix"])
         print(f"wrote {BENCH_JSON}")
     else:
         main(smoke=args.smoke, engine=not args.no_engine,

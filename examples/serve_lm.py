@@ -28,6 +28,11 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--mean-gap", type=float, default=4.0,
                     help="mean Poisson inter-arrival gap, in decode steps")
+    ap.add_argument("--prefix-len", type=int, default=16,
+                    help="shared system-prompt prefix length (0 disables); "
+                         "CoW prefix sharing stores it once across requests")
+    ap.add_argument("--kv-quant", choices=["fp", "int8"], default=None,
+                    help="page payload format (default: dataflow rule)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch + "-reduced")
@@ -40,9 +45,11 @@ def main():
         args.cache_len, args.page_size) // 2, 1)
     sch = ContinuousBatchingScheduler(
         cfg, params, rows=args.rows, cache_len=args.cache_len,
-        page_size=args.page_size, num_pages=num_pages, eos_id=1)
+        page_size=args.page_size, num_pages=num_pages, eos_id=1,
+        kv_quant=args.kv_quant)
     print(f"attn path: {'paged' if sch.paged else 'contiguous'} "
-          f"({num_pages} pages x {sch.page_size} tokens vs dense "
+          f"({num_pages} pages x {sch.page_size} tokens, kv {sch.kv_quant}, "
+          f"prefix sharing {'on' if sch.share_prefix else 'off'} vs dense "
           f"{args.rows} x {args.cache_len})")
 
     rng = np.random.default_rng(0)
@@ -55,9 +62,13 @@ def main():
             print(f"  req {req.rid} (arrived t={req.arrival:.0f}, admitted "
                   f"t={req.admitted_at:.0f}) first token: {tok}")
 
+    # shared system-prompt prefix: CoW sharing stores its pages once,
+    # refcounted across every live request
+    prefix = list(rng.integers(2, cfg.vocab_size, args.prefix_len))
     reqs = [StreamRequest(rid=i,
-                          prompt=list(rng.integers(2, cfg.vocab_size,
-                                                   rng.integers(4, 12))),
+                          prompt=prefix + list(
+                              rng.integers(2, cfg.vocab_size,
+                                           rng.integers(4, 12))),
                           max_new=int(rng.integers(4, args.max_new + 1)),
                           arrival=float(arrivals[i]),
                           on_token=stream)
@@ -79,7 +90,12 @@ def main():
     if pg:
         print(f"pages at peak: {pg['pages_used']}/{pg['pages_total']} in "
               f"use ({pg['used_tokens']} tokens), "
-              f"fragmentation {pg['fragmentation']:.2f}")
+              f"fragmentation {pg['fragmentation']:.2f}, "
+              f"{pg['shared_pages']} shared "
+              f"(saved {pg['pages_saved_sharing']} pages)")
+        print(f"sharing: {st['shared_tokens_admitted']} prompt tokens "
+              f"admitted from adopted pages, {st['cow_copies']} CoW copies, "
+              f"peak concurrency {st['peak_live_rows']} rows")
 
 
 if __name__ == "__main__":

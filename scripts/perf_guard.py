@@ -20,6 +20,13 @@ Checks:
   7. arrivals (ISSUE 3): continuous batching beats the drain-the-chunk
      baseline on goodput at high length variance — gated because both sides
      run on the deterministic virtual step clock, not wall time
+  8. page-native KV (ISSUE 4): the paged prefill path's per-layer KV buffer
+     is strictly smaller than the scatter path's dense (B, cache_len)
+     transient (byte accounting — the allocation the refactor deleted);
+     shared-prefix workloads admit strictly MORE concurrent requests than
+     unshared admission at the same pool size, peak at fewer pages, and
+     produce identical outputs; int8 KV pages record a quantized-vs-fp
+     byte ratio strictly below 1
 
     PYTHONPATH=src python scripts/perf_guard.py [BENCH_sparse_decode.json]
 """
@@ -101,6 +108,34 @@ def main(path: str = "BENCH_sparse_decode.json") -> int:
     else:
         print("  [--] arrivals section absent (--no-arrivals run); "
               "goodput gate skipped")
+
+    sp = data.get("shared_prefix", {})
+    if sp:
+        pt = sp["prefill_transient"]
+        check("paged-prefill-transient",
+              pt["paged_path_bytes"] < pt["scatter_path_bytes"],
+              f"page-native {pt['paged_path_bytes']} B (tier {pt['tier']}) "
+              f"< scatter-path dense transient {pt['scatter_path_bytes']} B")
+        sh, un = sp["shared"], sp["unshared"]
+        check("shared-prefix-concurrency",
+              sh["peak_live_rows"] > un["peak_live_rows"],
+              f"shared admits {sh['peak_live_rows']} concurrent > unshared "
+              f"{un['peak_live_rows']} at {sp['num_pages']} pages")
+        check("shared-prefix-pages",
+              sh["pages_peak"]["pages_used"] < un["pages_peak"]["pages_used"],
+              f"shared peaks at {sh['pages_peak']['pages_used']} pages < "
+              f"unshared {un['pages_peak']['pages_used']}")
+        check("shared-prefix-outputs-identical",
+              sp["outputs_identical"],
+              "CoW sharing is output-transparent")
+        kq = sp["kv_quant"]
+        check("kv-quant-bytes-ratio",
+              0.0 < kq["int8_vs_fp_ratio"] < 1.0,
+              f"int8 pages {kq['int8_cache_bytes']} B / fp "
+              f"{kq['fp_cache_bytes']} B = {kq['int8_vs_fp_ratio']:.2f}")
+    else:
+        print("  [--] shared_prefix section absent; page-native gates "
+              "skipped")
 
     dec = data.get("decode", {})
     if dec:

@@ -179,6 +179,68 @@ def attn_path(cache_len: int, mean_len: float,
     return "contiguous"
 
 
+# ------------------------------------------------- page-granular KV quant
+# decode_regimes (benchmarks/sparse_decode.py) measured the large-batch
+# decode bound to be KV-cache streaming — the whole resident cache crosses
+# HBM every step while weights amortize over the rows. int8 KV pages halve
+# that stream (the paper's keep-it-compressed move applied to activations-
+# over-time); at small batch the cache share is tiny and the dequant +
+# per-page-scale bookkeeping buys nothing, so the rule mirrors mlp_path:
+# quantize only in the regime the measurement says is cache-bound.
+KV_QUANT_MIN_ROWS = 16          # >= this many decode rows, cache stream wins
+KV_QUANT_DTYPES = ("fp", "int8")
+
+
+def kv_quant_path(rows: int, cache_len: int,
+                  page_size: int = PAGE_SIZE) -> str:
+    """Dispatch rule for the paged KV store dtype: 'int8' | 'fp'.
+
+    'int8' when the decode batch is wide enough that the KV stream dominates
+    the step (KV_QUANT_MIN_ROWS, the decode_regimes finding) AND the cache is
+    long enough to page at all (a sub-two-page cache never pages, so it never
+    quantizes either — the scale tables would outweigh the payload win).
+    """
+    if cache_len < 2 * page_size:
+        return "fp"
+    return "int8" if rows >= KV_QUANT_MIN_ROWS else "fp"
+
+
+def kv_dtype_bytes(kv_quant: str) -> int:
+    """Payload bytes per KV element under a quant mode ('fp' = bf16)."""
+    assert kv_quant in KV_QUANT_DTYPES, kv_quant
+    return 1 if kv_quant == "int8" else 2
+
+
+def paged_kv_bytes(n_pages: int, page_size: int, kv_heads: int,
+                   head_dim: int, n_layers: int, kv_quant: str = "fp") -> int:
+    """HBM bytes of an ``n_pages`` K+V pool across ``n_layers`` global
+    layers, including the per-(page, kv-head) fp32 scale tables the int8
+    format adds (they ride the block table: 2 scales × 4 B per page per
+    kv-head per layer)."""
+    payload = 2 * n_pages * page_size * kv_heads * head_dim \
+        * kv_dtype_bytes(kv_quant) * n_layers
+    scales = 2 * n_pages * kv_heads * 4 * n_layers if kv_quant == "int8" \
+        else 0
+    return payload + scales
+
+
+def prefill_kv_transient_bytes(batch: int, seq: int, kv_heads: int,
+                               head_dim: int, n_global_layers: int,
+                               dtype_bytes: int = 2) -> int:
+    """Largest global-attention K+V buffer a batched prefill materializes
+    per layer-scan step, summed over global layers: (batch, seq, KV, D) × 2.
+
+    With ``seq = cache_len`` this is the PR 3 scatter path's dense transient
+    (every row padded to the worst case before the page scatter); with
+    ``seq = tier`` it is the page-native path's only buffer — the projection
+    output itself, which exists in either path. The difference is the
+    allocation the paged prefill-write refactor deletes, and the byte gate
+    scripts/perf_guard.py enforces.
+    """
+    return 2 * batch * seq * kv_heads * head_dim * dtype_bytes \
+        * n_global_layers
+
+
 def spad_fit_report(weight_count: int, sparsity: float,
                     tiling: MatmulTiling) -> dict:
     """Table-III analogue: do the (compressed) resident weights fit the budget?"""

@@ -203,7 +203,8 @@ def bcsc_mlp_packed(x, gate_packed, up_packed, down_packed, *, d_ff: int,
 
 # ------------------------------------------------------- paged attention
 def paged_attention(q, k_pool, v_pool, block_table, lengths, *,
-                    softcap: float = 0.0, interpret: Optional[bool] = None):
+                    k_scale=None, v_scale=None, softcap: float = 0.0,
+                    interpret: Optional[bool] = None):
     """Decode attention against a paged KV pool through a block table.
 
     q (B,1,H,D) — the decode-step query layout of layers.decode_attention;
@@ -211,6 +212,10 @@ def paged_attention(q, k_pool, v_pool, block_table, lengths, *,
     (-1 = unallocated); lengths (B,) int32 valid tokens per row. Returns
     (B,1,H,D) fp32. Dispatch between this and the contiguous-ring path is
     core.dataflow.attn_path's call (occupancy rule).
+
+    int8 pools (core.dataflow.kv_quant_path) pass their per-(page, kv-head)
+    amax scales as ``k_scale``/``v_scale`` (P, KV) fp32; the kernel
+    dequantizes each page inside its online-softmax loop.
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     B, _, H, D = q.shape
@@ -218,7 +223,8 @@ def paged_attention(q, k_pool, v_pool, block_table, lengths, *,
     R = H // KV
     out = _paged.paged_attention_raw(
         q.reshape(B, KV, R, D), k_pool, v_pool, block_table, lengths,
-        softcap=softcap, interpret=interpret)
+        k_scale=k_scale, v_scale=v_scale, softcap=softcap,
+        interpret=interpret)
     return out.reshape(B, 1, H, D)
 
 

@@ -64,9 +64,13 @@ def work_steps(lengths, page_size: int) -> int:
     return sum(int(row_work_steps(int(n), page_size)) for n in lengths)
 
 
-def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, page_size: int, max_pages: int,
-                  softcap: float):
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                  page_size: int, max_pages: int, softcap: float,
+                  quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -84,6 +88,14 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0].astype(jnp.float32)                 # (KV, R, D)
         k = k_ref[0].astype(jnp.float32)                 # (ps, KV, D)
         v = v_ref[0].astype(jnp.float32)
+        if quantized:
+            # per-page dequant inside the online-softmax loop: the page's
+            # (KV,) amax scales ride the same block-table index map as the
+            # payload, so int8 pages never round-trip through a dense fp
+            # buffer — the compressed-domain contract of the BCSC kernels
+            # applied to KV-over-time
+            k = k * (ks_ref[0] * (1.0 / 127.0))[None, :, None]
+            v = v * (vs_ref[0] * (1.0 / 127.0))[None, :, None]
         s = jnp.einsum("grd,tgd->grt", q, k,
                        preferred_element_type=jnp.float32)
         s = s * (1.0 / math.sqrt(q.shape[-1]))
@@ -111,8 +123,8 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_attention_raw(q, k_pool, v_pool, block_table, lengths, *,
-                        softcap: float = 0.0, out_dtype=jnp.float32,
-                        interpret: bool = False):
+                        k_scale=None, v_scale=None, softcap: float = 0.0,
+                        out_dtype=jnp.float32, interpret: bool = False):
     """q (B,KV,R,D); k_pool/v_pool (P,ps,KV,D); block_table (B,MP) int32
     (physical page id, or -1 for unallocated); lengths (B,) int32 ≥ 1.
 
@@ -120,28 +132,47 @@ def paged_attention_raw(q, k_pool, v_pool, block_table, lengths, *,
     (block_table[b, t // ps], t % ps) for t < lengths[b]; the kernel never
     reads past a row's occupancy, so unallocated table entries only need to
     be out of the ``pages_for(length)`` prefix.
+
+    ``k_scale``/``v_scale`` (P, KV) fp32 switch on the int8 page format:
+    pools hold symmetric int8 payloads and each page is dequantized by its
+    own per-kv-head amax scale inside the page loop (scales are fetched
+    through the same block-table index map as the payload).
     """
     B, KV, R, D = q.shape
     P, ps, KVp, Dp = k_pool.shape
     MP = block_table.shape[1]
     assert (KV, D) == (KVp, Dp), (q.shape, k_pool.shape)
     assert block_table.shape == (B, MP) and lengths.shape == (B,)
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), "need both or neither scale"
+    if quantized:
+        assert k_scale.shape == (P, KV) and v_scale.shape == (P, KV), \
+            (k_scale.shape, v_scale.shape, (P, KV))
 
     def kv_map(b, j, bt, lens):
         # physical page through the prefetched block table; clamp keeps the
         # DMA in range on skipped (unallocated / past-occupancy) steps
         return (jnp.clip(bt[b * MP + j], 0, P - 1), 0, 0, 0)
 
+    def scale_map(b, j, bt, lens):
+        return (jnp.clip(bt[b * MP + j], 0, P - 1), 0)
+
     kernel = functools.partial(_paged_kernel, page_size=ps, max_pages=MP,
-                               softcap=softcap)
+                               softcap=softcap, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, KV, R, D), lambda b, j, *s: (b, 0, 0, 0)),
+        pl.BlockSpec((1, ps, KV, D), kv_map),
+        pl.BlockSpec((1, ps, KV, D), kv_map),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, KV), scale_map),
+                     pl.BlockSpec((1, KV), scale_map)]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, MP),
-        in_specs=[
-            pl.BlockSpec((1, KV, R, D), lambda b, j, *s: (b, 0, 0, 0)),
-            pl.BlockSpec((1, ps, KV, D), kv_map),
-            pl.BlockSpec((1, ps, KV, D), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, KV, R, D), lambda b, j, *s: (b, 0, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((KV, R), jnp.float32),
@@ -157,4 +188,4 @@ def paged_attention_raw(q, k_pool, v_pool, block_table, lengths, *,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(block_table.reshape(-1).astype(jnp.int32),
-      lengths.astype(jnp.int32), q, k_pool, v_pool)
+      lengths.astype(jnp.int32), *operands)

@@ -59,13 +59,15 @@ def flash_attention_ref(q, k, v, softcap: float = 0.0, causal: bool = True):
 
 
 def paged_attention_ref(q, k_pool, v_pool, block_table, lengths,
-                        softcap: float = 0.0):
+                        softcap: float = 0.0, k_scale=None, v_scale=None):
     """Gather-then-softmax oracle for the paged decode-attention kernel.
 
     q (B,KV,R,D); k_pool/v_pool (P,ps,KV,D); block_table (B,MP) int32;
     lengths (B,). Gathers each row's pages into a dense (MP·ps) history and
     runs one exact masked softmax — the semantics paged_attention_raw must
     reproduce through block-table indirection and online-softmax merging.
+    ``k_scale``/``v_scale`` (P, KV) fp32 dequantize int8 pools per page
+    (symmetric amax format, value = q · scale / 127).
     """
     B, KV, R, D = q.shape
     P, ps = k_pool.shape[:2]
@@ -73,6 +75,11 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, lengths,
     bt = jnp.clip(block_table, 0, P - 1)
     kd = k_pool[bt].reshape(B, MP * ps, KV, D).astype(jnp.float32)
     vd = v_pool[bt].reshape(B, MP * ps, KV, D).astype(jnp.float32)
+    if k_scale is not None:
+        ksd = jnp.repeat(k_scale[bt], ps, axis=1) * (1.0 / 127.0)
+        vsd = jnp.repeat(v_scale[bt], ps, axis=1) * (1.0 / 127.0)
+        kd = kd * ksd[..., None]
+        vd = vd * vsd[..., None]
     s = jnp.einsum("bgrd,btgd->bgrt", q.astype(jnp.float32), kd) / math.sqrt(D)
     if softcap and softcap > 0.0:
         s = jnp.tanh(s / softcap) * softcap

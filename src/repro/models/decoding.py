@@ -11,6 +11,7 @@ Ring invariant: slot ``i`` holds the token at the largest position ``p ≡ i
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Dict, Optional, Tuple
 
@@ -73,8 +74,23 @@ def abstract_cache(cfg, batch: int, cache_len: int):
 # (local/chunked) and recurrent (ssm/rglru) entries keep their bounded
 # per-row state: their memory never scales with context, so paging them
 # would add indirection with nothing to reclaim.
-def _init_paged_entry(cfg, num_pages: int, page_size: int):
+#
+# kv_quant='int8' stores page payloads as symmetric int8 with per-(page,
+# kv-head) fp32 amax scales riding the block table ({pk,pv}_scale): the
+# whole-page granularity keeps the dequant inside the kernel's page loop
+# (one scale broadcast per DMA'd page) and the scale tables negligible
+# next to the payload halving.
+def _init_paged_entry(cfg, num_pages: int, page_size: int,
+                      kv_quant: str = "fp"):
+    from repro.core import dataflow as _df
+    assert kv_quant in _df.KV_QUANT_DTYPES, kv_quant
     shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    if kv_quant == "int8":
+        sshape = (num_pages, cfg.num_kv_heads)
+        return {"pk": jnp.zeros(shape, jnp.int8),
+                "pv": jnp.zeros(shape, jnp.int8),
+                "pk_scale": jnp.zeros(sshape, jnp.float32),
+                "pv_scale": jnp.zeros(sshape, jnp.float32)}
     return {"pk": jnp.zeros(shape, COMPUTE_DTYPE),
             "pv": jnp.zeros(shape, COMPUTE_DTYPE)}
 
@@ -83,10 +99,15 @@ def is_paged_entry(entry) -> bool:
     return isinstance(entry, dict) and "pk" in entry
 
 
+def is_quantized_entry(entry) -> bool:
+    return isinstance(entry, dict) and "pk_scale" in entry
+
+
 def init_paged_cache(cfg, rows: int, cache_len: int, num_pages: int,
-                     page_size: int):
+                     page_size: int, kv_quant: str = "fp"):
     """Like init_cache, but 'global' entries become (num_pages, page_size,
-    KV, D) pools; every other kind keeps its (rows, ...) per-row state."""
+    KV, D) pools; every other kind keeps its (rows, ...) per-row state.
+    ``kv_quant='int8'`` stores pool payloads int8 with per-page scales."""
     kinds = tfm.slot_kinds(cfg)
     period = tfm.scan_period(cfg)
     nper = tfm.num_scan_periods(cfg)
@@ -94,7 +115,7 @@ def init_paged_cache(cfg, rows: int, cache_len: int, num_pages: int,
 
     def entry(kind):
         if kind == "global":
-            return _init_paged_entry(cfg, num_pages, page_size)
+            return _init_paged_entry(cfg, num_pages, page_size, kv_quant)
         return _init_entry(cfg, kind, rows, cache_len)
 
     cache: Dict = {}
@@ -107,14 +128,30 @@ def init_paged_cache(cfg, rows: int, cache_len: int, num_pages: int,
     return cache
 
 
-def scatter_rows_to_pages(pool, rows_kv, block_table_rows, lengths):
+# ------------------------------------------------- page quantization helpers
+def quantize_to_i8(x, scale):
+    """Symmetric int8: q = round(x / scale * 127), scale an amax broadcastable
+    to x. A zero scale (empty page / all-zero token) quantizes to zeros."""
+    s = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.round(x.astype(jnp.float32) / s * 127.0)
+    return jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+
+
+def dequantize_i8(q, scale):
+    return q.astype(jnp.float32) * (scale * (1.0 / 127.0))
+
+
+def scatter_rows_to_pages(pool, rows_kv, block_table_rows, lengths,
+                          start=None):
     """Write per-row contiguous KV (B,S,KV,D) into a page pool (P,ps,KV,D).
 
     Token t of row b lands at (block_table_rows[b, t // ps], t % ps) for
-    t < lengths[b]; pad positions and unallocated (-1) table entries are
-    routed out of range and dropped. Used by the scheduler's refill to move
-    prefill_batched's dense cache rows into pages, and symmetric with the
-    paged kernel's read addressing.
+    start[b] <= t < lengths[b]; positions before ``start`` (pages adopted
+    read-only from a shared prefix chain), pad positions, and unallocated
+    (-1) table entries are routed out of range and dropped. This is the
+    page-native prefill write (prefill_batched's paged mode scatters each
+    layer's (B, tier) K/V straight into pages during the scan) and is
+    symmetric with the paged kernel's read addressing.
     """
     P, ps = pool.shape[:2]
     B, S = rows_kv.shape[:2]
@@ -122,9 +159,121 @@ def scatter_rows_to_pages(pool, rows_kv, block_table_rows, lengths):
     page = jnp.take_along_axis(
         block_table_rows, jnp.broadcast_to(s // ps, (B, S)), axis=1)
     valid = (s[None, :] < lengths[:, None]) & (page >= 0)
+    if start is not None:
+        valid &= s[None, :] >= start[:, None]
     page = jnp.where(valid, page, P)                 # out of range -> dropped
     off = jnp.broadcast_to(s % ps, (B, S))
     return pool.at[page, off].set(rows_kv.astype(pool.dtype), mode="drop")
+
+
+def quantize_rows_to_pages(pool, scales, rows_kv, block_table_rows, lengths,
+                           start=None):
+    """int8 variant of scatter_rows_to_pages: (pool, scales) -> updated.
+
+    Per written (row, logical page, kv-head) the amax over the page's tokens
+    becomes that physical page's scale (plain .set — prefill writes every
+    page it touches from offset 0, pages are row-exclusive, and overwriting
+    resets any stale scale a previous holder left). ``start`` must be
+    page-aligned or equal to the row's length (the adoption contract:
+    shared prefixes cover whole pages or the whole prompt).
+    """
+    P, ps, KV, D = pool.shape
+    B, S = rows_kv.shape[:2]
+    s = jnp.arange(S, dtype=jnp.int32)
+    bt = block_table_rows
+    page = jnp.take_along_axis(bt, jnp.broadcast_to(s // ps, (B, S)), axis=1)
+    valid = (s[None, :] < lengths[:, None]) & (page >= 0)
+    if start is not None:
+        valid &= s[None, :] >= start[:, None]
+    # per-(row, logical page, kv) amax over the tokens actually written
+    nlp = -(-S // ps)
+    a = jnp.abs(jnp.where(valid[..., None, None],
+                          rows_kv.astype(jnp.float32), 0.0))
+    a = jnp.pad(a, ((0, 0), (0, nlp * ps - S), (0, 0), (0, 0)))
+    a = a.reshape(B, nlp, ps, KV, D).max(axis=(2, 4))        # (B, nlp, KV)
+    wrote = jnp.pad(valid, ((0, 0), (0, nlp * ps - S))
+                    ).reshape(B, nlp, ps).any(axis=2)        # (B, nlp)
+    phys = jnp.where(wrote & (bt[:, :nlp] >= 0), bt[:, :nlp], P)
+    new_scales = scales.at[phys.reshape(-1)].set(
+        a.reshape(-1, KV), mode="drop")
+    # quantize each token with its destination page's (fresh) scale
+    tok_scale = jnp.take_along_axis(
+        a, jnp.broadcast_to((s // ps)[None, :, None], (B, S, KV)), axis=1)
+    q = quantize_to_i8(rows_kv, tok_scale[..., None])
+    page = jnp.where(valid, page, P)
+    off = jnp.broadcast_to(s % ps, (B, S))
+    return pool.at[page, off].set(q, mode="drop"), new_scales
+
+
+def paged_prefill_write(entry, k, v, block_table_rows, lengths, start=None):
+    """Write a prefill layer's (B, S, KV, D) K/V straight into its page pool
+    entry (fp or int8+scales), honoring the shared-prefix ``start`` mask."""
+    if is_quantized_entry(entry):
+        pk, ks = quantize_rows_to_pages(entry["pk"], entry["pk_scale"], k,
+                                        block_table_rows, lengths, start)
+        pv, vs = quantize_rows_to_pages(entry["pv"], entry["pv_scale"], v,
+                                        block_table_rows, lengths, start)
+        return {"pk": pk, "pv": pv, "pk_scale": ks, "pv_scale": vs}
+    return {"pk": scatter_rows_to_pages(entry["pk"], k, block_table_rows,
+                                        lengths, start),
+            "pv": scatter_rows_to_pages(entry["pv"], v, block_table_rows,
+                                        lengths, start)}
+
+
+def _append_token_i8(pool, scales, tok, page, off):
+    """Append one (B, KV, D) fp token per row into int8 pages at (page, off).
+
+    Per-page amax scales must cover every token in the page, so a token
+    louder than the page's current scale triggers an in-place **requant** of
+    that page (q' = round(q · s_old/s_new) — bounded, monotone error; the
+    common quiet-token case is an exact no-op since ratio == 1). A page's
+    first token (off == 0) ignores whatever stale scale a previous holder
+    left — pages come back from the pool content-dirty but are always
+    re-scaled before anything in them is readable.
+    """
+    P, ps, KV, D = pool.shape
+    B = tok.shape[0]
+    valid = page >= 0
+    pidx = jnp.clip(page, 0, P - 1)
+    s_old = scales[pidx]                                       # (B, KV)
+    s_old = jnp.where((off == 0)[:, None], 0.0, s_old)
+    amax = jnp.abs(tok.astype(jnp.float32)).max(axis=-1)       # (B, KV)
+    s_new = jnp.maximum(s_old, amax)
+    ratio = jnp.where(s_new > 0, s_old / jnp.where(s_new > 0, s_new, 1.0),
+                      1.0)                                     # <= 1
+    pg = pool[pidx].astype(jnp.float32)                        # (B, ps, KV, D)
+    pg = jnp.round(pg * ratio[:, None, :, None])
+    q_tok = quantize_to_i8(tok, s_new[..., None]).astype(jnp.float32)
+    sel = (jnp.arange(ps)[None, :] == off[:, None])[..., None, None]
+    pg = jnp.where(sel, q_tok[:, None], pg)
+    drop = jnp.where(valid, pidx, P)
+    pool = pool.at[drop].set(
+        jnp.clip(pg, -127.0, 127.0).astype(jnp.int8), mode="drop")
+    scales = scales.at[drop].set(s_new, mode="drop")
+    return pool, scales
+
+
+def _paged_append(entry, k_tok, v_tok, block_table, posv):
+    """Decode-time single-token append into a paged entry (fp or int8).
+
+    The caller (scheduler CoW guard) guarantees the destination page is
+    private (refcount 1) — shared pages are materialized before the chunk.
+    """
+    P, ps = entry["pk"].shape[:2]
+    page = jnp.take_along_axis(block_table, (posv // ps)[:, None],
+                               axis=1)[:, 0]
+    off = posv % ps
+    if is_quantized_entry(entry):
+        pk, ks = _append_token_i8(entry["pk"], entry["pk_scale"], k_tok,
+                                  page, off)
+        pv, vs = _append_token_i8(entry["pv"], entry["pv_scale"], v_tok,
+                                  page, off)
+        return {"pk": pk, "pv": pv, "pk_scale": ks, "pv_scale": vs}
+    dropped = jnp.where(page >= 0, page, P)        # unallocated -> dropped
+    return {"pk": entry["pk"].at[dropped, off].set(
+                k_tok.astype(entry["pk"].dtype), mode="drop"),
+            "pv": entry["pv"].at[dropped, off].set(
+                v_tok.astype(entry["pv"].dtype), mode="drop")}
 
 
 # -------------------------------------------------------------- ring helpers
@@ -180,21 +329,19 @@ def _attn_decode(p, x, kind, cache_entry, pos, cfg, block_table=None):
     if is_paged_entry(cache_entry):
         from repro.kernels import ops as _ops   # deferred: keep import light
         assert block_table is not None, "paged cache entry needs a block table"
-        pool_k, pool_v = cache_entry["pk"], cache_entry["pv"]
-        P, ps = pool_k.shape[:2]
         pos = jnp.asarray(pos)
         posv = jnp.broadcast_to(pos, (B,)).astype(jnp.int32)
-        page = jnp.take_along_axis(block_table, (posv // ps)[:, None],
-                                   axis=1)[:, 0]
-        page = jnp.where(page >= 0, page, P)       # unallocated -> dropped
-        k_pool = pool_k.at[page, posv % ps].set(
-            k[:, 0].astype(pool_k.dtype), mode="drop")
-        v_pool = pool_v.at[page, posv % ps].set(
-            v[:, 0].astype(pool_v.dtype), mode="drop")
-        ctx = _ops.paged_attention(q, k_pool, v_pool, block_table, posv + 1,
-                                   softcap=cfg.attn_logit_softcap)
+        new_entry = _paged_append(cache_entry, k[:, 0], v[:, 0], block_table,
+                                  posv)
+        scales = {}
+        if is_quantized_entry(new_entry):
+            scales = dict(k_scale=new_entry["pk_scale"],
+                          v_scale=new_entry["pv_scale"])
+        ctx = _ops.paged_attention(q, new_entry["pk"], new_entry["pv"],
+                                   block_table, posv + 1,
+                                   softcap=cfg.attn_logit_softcap, **scales)
         return (layers.attn_out(p, ctx.astype(layers.COMPUTE_DTYPE)),
-                {"pk": k_pool, "pv": v_pool})
+                new_entry)
     cap = cache_entry["k"].shape[1]
     pos = jnp.asarray(pos)
     if pos.ndim == 0:
@@ -314,7 +461,35 @@ def _gather_ring_ragged(full, m: int, lengths):
     return jnp.take_along_axis(full, idx, axis=1)
 
 
-def _attn_prefill(p, x, kind, positions, cfg, cache_len: int, lengths=None):
+@dataclasses.dataclass
+class PagedPrefill:
+    """Page-native prefill-write routing (the paged output mode of
+    prefill_batched). When present, global-attention K/V is scattered
+    straight into the page pools of ``cache`` through per-row block tables
+    *during the layer scan* — the dense (B, cache_len, ...) slot-shaped
+    transient of the scatter-after-prefill path never exists — and every
+    per-row entry (ring, recurrent) is merged into its device row at
+    ``slots``. The returned cache is the full-width cache, refill-complete.
+
+    ``write_start`` (B,) masks writes before each row's shared-prefix
+    boundary (copy-on-write prefix sharing: adopted pages are read-only and
+    already hold identical content). None writes from token 0.
+    """
+    cache: Dict
+    block_table_rows: "jnp.ndarray"      # (B, max_pages) physical page ids
+    slots: "jnp.ndarray"                 # (B,) device rows being refilled
+    write_start: Optional["jnp.ndarray"] = None
+
+
+def _merge_rows(cache_entry, row_entry, slots):
+    """Merge B-row prefill state into its full-width per-row cache entry."""
+    return jax.tree.map(
+        lambda c, s: c.at[slots].set(s.astype(c.dtype)),
+        cache_entry, row_entry)
+
+
+def _attn_prefill(p, x, kind, positions, cfg, cache_len: int, lengths=None,
+                  cache_entry=None, paged: Optional[PagedPrefill] = None):
     q, k, v = layers.attn_qkv(p, x, cfg)
     if cfg.qk_norm:
         q = layers.head_rms_norm(q, p["q_norm"], cfg.norm_eps)
@@ -331,7 +506,13 @@ def _attn_prefill(p, x, kind, positions, cfg, cache_len: int, lengths=None):
         ctx = layers.full_causal_attention(q, k, v, cfg)
     cap = _attn_cache_capacity(cfg, kind, cache_len)
     S = k.shape[1]
-    if kind == "global":
+    if paged is not None and is_paged_entry(cache_entry):
+        # page-native write: (B, tier) K/V lands in pool pages as it is
+        # produced — no (B, cache_len) padding, no post-prefill scatter
+        entry = paged_prefill_write(cache_entry, k, v,
+                                    paged.block_table_rows, lengths,
+                                    paged.write_start)
+    elif kind == "global":
         # pad rows of a right-padded batch leave pad-KV at positions >= that
         # row's length; decode's _valid_mask (i <= pos) never exposes them and
         # the serve loop overwrites them in order as pos advances.
@@ -343,19 +524,26 @@ def _attn_prefill(p, x, kind, positions, cfg, cache_len: int, lengths=None):
     else:
         entry = {"k": _gather_ring_ragged(k, cap, lengths),
                  "v": _gather_ring_ragged(v, cap, lengths)}
+    if paged is not None and not is_paged_entry(cache_entry):
+        entry = _merge_rows(cache_entry, entry, paged.slots)
     return layers.attn_out(p, ctx), entry
 
 
 def apply_block_prefill(p, x, cond, kind, is_moe, cfg, positions, cache_len,
-                        lengths=None):
+                        lengths=None, cache_entry=None,
+                        paged: Optional[PagedPrefill] = None):
     h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
     if kind in ("global", "local", "chunked"):
         y, entry = _attn_prefill(p["attn"], h, kind, positions, cfg, cache_len,
-                                 lengths)
+                                 lengths, cache_entry, paged)
     elif kind == "ssm":
         y, entry = ssm_lib.ssm_block(p["ssm"], h, cfg, return_state=True)
+        if paged is not None:
+            entry = _merge_rows(cache_entry, entry, paged.slots)
     elif kind == "rglru":
         y, entry = rglru_lib.rglru_block(p["rglru"], h, cfg, return_state=True)
+        if paged is not None:
+            entry = _merge_rows(cache_entry, entry, paged.slots)
     if cfg.use_post_norm:
         y = rms_norm(y, p["post_norm"], cfg.norm_eps)
     x = x + y
@@ -375,7 +563,8 @@ def apply_block_prefill(p, x, cond, kind, is_moe, cfg, positions, cache_len,
 
 
 def _prefill_impl(params, tokens, cfg, cache_len: int, lengths=None, *,
-                  patch_embeds=None, cond=None, hints=None):
+                  patch_embeds=None, cond=None, hints=None,
+                  paged: Optional[PagedPrefill] = None):
     x = tfm.embed_tokens(params, tokens, cfg)
     if cfg.frontend == "vision" and patch_embeds is not None:
         x = jnp.concatenate([patch_embeds.astype(COMPUTE_DTYPE), x], axis=1)
@@ -390,22 +579,41 @@ def _prefill_impl(params, tokens, cfg, cache_len: int, lengths=None, *,
 
     cache: Dict = {}
     if "blocks" in params:
-        def body(x, pp):
-            entries = {}
-            for j in range(period):
-                x, entries[f"slot{j}"] = apply_block_prefill(
-                    pp[f"slot{j}"], x, cond, *kinds[j], cfg, positions,
-                    cache_len, lengths)
-                if hints is not None:
-                    x = hints.constrain_act(x)
-            return x, entries
-        x, cache["blocks"] = jax.lax.scan(body, x, params["blocks"])
+        if paged is not None:
+            # paged output mode: scan over (params, cache) pairs so each
+            # layer writes its K/V into the period's page pool (or merges
+            # its per-row state at ``slots``) as the scan visits it
+            def body(x, inp):
+                pp, pc = inp
+                entries = {}
+                for j in range(period):
+                    x, entries[f"slot{j}"] = apply_block_prefill(
+                        pp[f"slot{j}"], x, cond, *kinds[j], cfg, positions,
+                        cache_len, lengths, pc[f"slot{j}"], paged)
+                    if hints is not None:
+                        x = hints.constrain_act(x)
+                return x, entries
+            x, cache["blocks"] = jax.lax.scan(
+                body, x, (params["blocks"], paged.cache["blocks"]))
+        else:
+            def body(x, pp):
+                entries = {}
+                for j in range(period):
+                    x, entries[f"slot{j}"] = apply_block_prefill(
+                        pp[f"slot{j}"], x, cond, *kinds[j], cfg, positions,
+                        cache_len, lengths)
+                    if hints is not None:
+                        x = hints.constrain_act(x)
+                return x, entries
+            x, cache["blocks"] = jax.lax.scan(body, x, params["blocks"])
     if "rem" in params:
         cache["rem"] = {}
         for j in range(tfm.num_remainder(cfg)):
             x, cache["rem"][f"rem{j}"] = apply_block_prefill(
                 params["rem"][f"rem{j}"], x, cond, *kinds[j], cfg, positions,
-                cache_len, lengths)
+                cache_len, lengths,
+                paged.cache["rem"][f"rem{j}"] if paged is not None else None,
+                paged)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     if lengths is None:
         x_last = x[:, -1:]
@@ -427,7 +635,8 @@ def prefill(params, tokens, cfg, cache_len: int, *, patch_embeds=None,
 
 
 def prefill_batched(params, tokens, lengths, cfg, cache_len: int, *,
-                    cond=None, hints=None):
+                    cond=None, hints=None,
+                    paged: Optional[PagedPrefill] = None):
     """Batched prefill over right-padded prompts of unequal length.
 
     tokens (B, S) right-padded to a common tier length S; lengths (B,) int32
@@ -435,6 +644,13 @@ def prefill_batched(params, tokens, lengths, cfg, cache_len: int, *,
     (B,1,...), cache) where every cache entry honors each row's own length:
     ring entries gather per-row (``_gather_ring_ragged``), global entries
     rely on decode's pos-derived validity mask to hide pad positions.
+
+    ``paged`` (PagedPrefill) switches on the page-native output mode: the
+    returned cache is ``paged.cache`` with global K/V written straight into
+    its page pools through per-row block tables during the layer scan and
+    per-row entries merged at ``paged.slots`` — no (B, cache_len) dense
+    transient, no post-prefill scatter, bit-identical pool contents to the
+    scatter-after-prefill path (asserted in tests/test_paged_prefill_cow.py).
 
     Causality makes the padded forward exact for the real prefix of every
     attention row. NOT valid for recurrent kinds (ssm/rglru) when any
@@ -448,4 +664,4 @@ def prefill_batched(params, tokens, lengths, cfg, cache_len: int, *,
         "prefill_batched does not support vision patch offsets"
     return _prefill_impl(params, tokens, cfg, cache_len,
                          jnp.asarray(lengths, jnp.int32),
-                         cond=cond, hints=hints)
+                         cond=cond, hints=hints, paged=paged)

@@ -132,23 +132,29 @@ def make_decode_step(cfg, temperature: float, eos_id: int) -> Callable:
 
 
 def build_tier_batch(group, tier: int, prompt_of: Callable,
-                     budget_of: Callable):
+                     budget_of: Callable, start_of: Callable = None):
     """Host-side arrays for one admission tier: (toks, lengths, slots,
-    budgets). ``group`` is [(slot, request), ...]; ``prompt_of``/``budget_of``
-    extract the (possibly resume-extended) prompt and remaining budget.
-    Shared by DecodeEngine.run and the scheduler's admission."""
+    budgets, starts). ``group`` is [(slot, request), ...];
+    ``prompt_of``/``budget_of`` extract the (possibly resume-extended)
+    prompt and remaining budget; ``start_of`` the first prompt token the
+    prefill actually writes (> 0 when a shared-prefix chain already holds
+    the leading pages — the scheduler's CoW admission; default 0, write
+    everything). Shared by DecodeEngine.run and the scheduler's admission."""
     B = len(group)
     toks = np.zeros((B, tier), np.int32)
     lengths = np.empty((B,), np.int32)
     slot_ids = np.empty((B,), np.int32)
     budgets = np.empty((B,), np.int32)
+    starts = np.zeros((B,), np.int32)
     for i, (slot, r) in enumerate(group):
         p = prompt_of(r)
         toks[i, :len(p)] = p
         lengths[i] = len(p)
         slot_ids[i] = slot
         budgets[i] = budget_of(r)
-    return toks, lengths, slot_ids, budgets
+        if start_of is not None:
+            starts[i] = start_of(r)
+    return toks, lengths, slot_ids, budgets, starts
 
 
 class DecodeEngine:
@@ -305,7 +311,7 @@ class DecodeEngine:
                 t0 = time.perf_counter()
                 for tier, group in sorted(buckets.items()):
                     B = len(group)
-                    toks, lengths, slot_ids, max_news = build_tier_batch(
+                    toks, lengths, slot_ids, max_news, _ = build_tier_batch(
                         group, tier, lambda r: r.prompt,
                         lambda r: r.max_new)
                     for slot, r in group:

@@ -21,13 +21,35 @@ def cache_bytes(cfg, batch: int, cache_len: int) -> int:
 
 
 def paged_cache_bytes(cfg, rows: int, cache_len: int, num_pages: int,
-                      page_size: int) -> int:
+                      page_size: int, kv_quant: str = "fp") -> int:
     """Bytes of the paged cache layout (global layers paged into a
     ``num_pages`` pool; ring/recurrent rows unchanged) — the HBM side of the
-    dataflow.attn_path tradeoff the perf guard checks."""
+    dataflow.attn_path tradeoff the perf guard checks. ``kv_quant='int8'``
+    accounts the int8 payload + per-page scale tables."""
     tree = jax.eval_shape(lambda: decoding.init_paged_cache(
-        cfg, rows, cache_len, num_pages, page_size))
+        cfg, rows, cache_len, num_pages, page_size, kv_quant))
     return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def num_global_layers(cfg) -> int:
+    """Global-attention layers — the ones the paged pool actually holds."""
+    from repro.models import transformer as tfm
+    kinds = tfm.slot_kinds(cfg)
+    per_period = sum(1 for k, _ in kinds if k == "global")
+    rem_global = sum(1 for k, _ in kinds[:tfm.num_remainder(cfg)]
+                     if k == "global")
+    return per_period * tfm.num_scan_periods(cfg) + rem_global
+
+
+def kv_page_bytes(cfg, page_size: int, kv_quant: str = "fp") -> int:
+    """HBM bytes one physical page costs across every global layer's K+V
+    pool (plus its int8 scale entries) — the unit the sharing metrics are
+    denominated in: each refcount above 1 is one page of this size NOT
+    allocated."""
+    from repro.core import dataflow
+    return dataflow.paged_kv_bytes(1, page_size, cfg.num_kv_heads,
+                                   cfg.head_dim, num_global_layers(cfg),
+                                   kv_quant)
 
 
 def cache_bytes_per_chip(cfg, batch: int, cache_len: int, chips: int,
@@ -98,10 +120,12 @@ class SlotAllocator:
 
 
 def report(cfg, batch: int, cache_len: int, chips: int,
-           pager=None) -> Dict[str, float]:
+           pager=None, kv_quant: str = "fp") -> Dict[str, float]:
     """Capacity report; pass a serve.paging.PageAllocator as ``pager`` to
-    include live paged-occupancy stats (pages total/free, fragmentation)
-    alongside the dense-slot accounting it replaces."""
+    include live paged-occupancy stats (pages total/free, fragmentation,
+    prefix-sharing savings) alongside the dense-slot accounting it
+    replaces. ``kv_quant`` denominates the byte-valued paged metrics in the
+    pool's actual page format (int8 pages halve the payload)."""
     total = cache_bytes(cfg, batch, cache_len)
     out = {
         "total_gb": total / 1e9,
@@ -110,5 +134,12 @@ def report(cfg, batch: int, cache_len: int, chips: int,
         "max_slots_half_hbm": max_slots(cfg, cache_len, chips),
     }
     if pager is not None:
-        out["paged"] = pager.stats()
+        st = pager.stats()
+        page_b = kv_page_bytes(cfg, pager.page_size, kv_quant)
+        st["kv_quant"] = kv_quant
+        st["page_bytes"] = page_b
+        # multicast saving in bytes: pages other requests reference instead
+        # of allocating (Σ (refcount − 1) over shared pages)
+        st["bytes_saved_sharing"] = st["pages_saved_sharing"] * page_b
+        out["paged"] = st
     return out

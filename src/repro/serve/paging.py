@@ -1,4 +1,5 @@
-"""Paged KV accounting: fixed-size pages, per-request block tables.
+"""Paged KV accounting: fixed-size pages, per-request block tables,
+copy-on-write prefix sharing.
 
 The host-side half of the paged-cache contract (device side:
 ``models.decoding.init_paged_cache`` + ``kernels.paged_attention``). A
@@ -9,6 +10,20 @@ activations-over-time: the dense ``(rows, cache_len)`` slot provisioned for
 the worst case (the v1 mistake Eyeriss v2's flexible allocation fixes)
 becomes exactly ``ceil(len / page_size)`` pages per live sequence, growing
 on demand during decode and returned the moment the sequence finishes.
+
+**Prefix sharing (multicast reuse).** Every page carries a refcount, and a
+prefix index maps token prefixes to the physical page holding that slice of
+history — the paged analogue of the paper's multicast of shared operands.
+Admission walks the index (``adopt_prefix``): leading full pages whose
+content matches an already-resident chain are adopted by reference
+(refcount++, zero prefill writes), fresh pages are allocated only from the
+first divergent token, and completed prompts register their pages for later
+arrivals (``register_prefix``). Shared pages are **immutable**: the decode
+write path must ask ``shared_pages_in`` before appending and materialize a
+private copy (``cow_page`` — copy-on-write) for any page whose refcount
+exceeds one. Pages return to the free pool only when their refcount reaches
+zero, and index entries pointing at them are purged at that moment — the
+refcount is the double-free guard.
 
 Allocation is all-or-nothing (``ensure`` either covers the requested length
 or changes nothing), so the scheduler can probe for page pressure and decide
@@ -22,7 +37,7 @@ therefore device scatter/gather patterns — are reproducible run to run.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -30,7 +45,8 @@ from repro.core import dataflow
 
 
 class PageAllocator:
-    """Fixed-pool page allocator with per-request (rid-keyed) block tables."""
+    """Fixed-pool page allocator with per-request (rid-keyed) block tables,
+    per-page refcounts, and a prefix-hash → page-chain index (CoW sharing)."""
 
     def __init__(self, num_pages: int, page_size: int = dataflow.PAGE_SIZE):
         assert num_pages >= 1 and page_size >= 1, (num_pages, page_size)
@@ -39,6 +55,16 @@ class PageAllocator:
         self._free = list(range(num_pages - 1, -1, -1))  # pop() -> page 0 first
         self._tables: Dict[int, List[int]] = {}          # rid -> physical ids
         self._lengths: Dict[int, int] = {}               # rid -> token count
+        self._refs = [0] * num_pages                     # per-page refcount
+        # chained prefix index: (parent physical page, this page's token
+        # slice) -> physical page. The parent id pins the whole preceding
+        # prefix inductively (every page is indexed under exactly one chain
+        # position), so lookup/registration stay exact AND O(len/page_size)
+        # per prompt — no whole-prefix key copies. -1 is the root parent; a
+        # partial-tail key carries the (< page_size) remainder slice.
+        # Entries are purged when their page's refcount hits 0.
+        self._prefix_index: Dict[Tuple[int, Tuple[int, ...]], int] = {}
+        self._page_keys: Dict[int, List[Tuple]] = {}
 
     # ------------------------------------------------------------- queries
     def available(self) -> int:
@@ -60,7 +86,29 @@ class PageAllocator:
     def pages_for(self, n_tokens: int) -> int:
         return dataflow.pages_for(n_tokens, self.page_size)
 
+    def refcount(self, page: int) -> int:
+        return self._refs[page]
+
     # ----------------------------------------------------------- mutation
+    def _pop_free(self) -> int:
+        page = self._free.pop()
+        assert self._refs[page] == 0, (page, self._refs[page])
+        self._refs[page] = 1
+        return page
+
+    def _release(self, page: int) -> bool:
+        """Drop one reference; return the page to the pool at refcount 0.
+        Returns True when the page actually went back to the free list."""
+        assert self._refs[page] >= 1, f"page {page} released at refcount 0"
+        self._refs[page] -= 1
+        if self._refs[page]:
+            return False
+        for key in self._page_keys.pop(page, ()):    # purge dangling prefixes
+            if self._prefix_index.get(key) == page:
+                del self._prefix_index[key]
+        self._free.append(page)
+        return True
+
     def ensure(self, rid: int, n_tokens: int) -> bool:
         """Grow rid's block table to cover ``n_tokens``. All-or-nothing:
         returns False (and allocates nothing) under page pressure — the
@@ -74,7 +122,7 @@ class PageAllocator:
                 del self._tables[rid]
             return False
         for _ in range(need):
-            table.append(self._free.pop())
+            table.append(self._pop_free())
         return True
 
     def set_length(self, rid: int, n_tokens: int) -> None:
@@ -85,15 +133,118 @@ class PageAllocator:
         self._lengths[rid] = int(n_tokens)
 
     def free(self, rid: int) -> int:
-        """Return all of rid's pages to the pool. Returns the page count."""
+        """Drop rid's reference on all of its pages. Shared pages survive
+        with their other holders; pages reaching refcount 0 return to the
+        pool (deterministic lowest-first pop order after churn). Returns the
+        number of pages actually returned."""
         if rid not in self._tables:
             raise ValueError(f"request {rid} holds no pages")
         pages = self._tables.pop(rid)
         self._lengths.pop(rid, None)
-        # keep pop order deterministic after churn: lowest ids come back first
-        self._free.extend(pages)
+        returned = sum(self._release(p) for p in pages)
         self._free.sort(reverse=True)
-        return len(pages)
+        return returned
+
+    # ------------------------------------------------------ prefix sharing
+    def match_prefix(self, tokens: Sequence[int]) -> Tuple[int, List[int]]:
+        """Longest indexed chain covering ``tokens``: (n_covered, pages).
+
+        Walks full-page keys in order; a chain hole (purged page) ends the
+        match. When every full page matched AND the *whole* prompt is
+        registered as a partial tail page, that page joins the chain too —
+        the request then writes nothing during prefill and its first decode
+        append copy-on-writes the shared tail.
+        """
+        ps = self.page_size
+        toks = tuple(tokens)
+        pages: List[int] = []
+        covered, parent = 0, -1
+        for j in range(1, len(toks) // ps + 1):
+            page = self._prefix_index.get(
+                (parent, toks[(j - 1) * ps:j * ps]))
+            if page is None:
+                break
+            pages.append(page)
+            covered = j * ps
+            parent = page
+        rem = len(toks) - covered
+        if 0 < rem < ps and covered == (len(toks) // ps) * ps:
+            page = self._prefix_index.get((parent, toks[covered:]))
+            if page is not None:
+                pages.append(page)
+                covered = len(toks)
+        return covered, pages
+
+    def adopt_prefix(self, rid: int, tokens: Sequence[int]) -> int:
+        """Point rid's leading block-table entries at the resident pages
+        already holding ``tokens``' longest indexed prefix (refcount++ each).
+        Must run at admission, before ``ensure`` (the table must be empty).
+        Returns the number of prompt tokens covered — the prefill write
+        path starts there. Roll back with ``free(rid)``.
+        """
+        assert not self._tables.get(rid), \
+            f"adopt_prefix on a non-empty table for rid {rid}"
+        covered, pages = self.match_prefix(tokens)
+        if not pages:
+            return 0
+        for p in pages:
+            self._refs[p] += 1
+        self._tables[rid] = pages
+        return covered
+
+    def register_prefix(self, rid: int, tokens: Sequence[int]) -> int:
+        """Index rid's prompt pages for later arrivals. Keys chain exact
+        token slices through parent page ids (full pages, plus the whole
+        remainder for a partial tail), so divergence at any offset simply
+        stops matching — no hash collisions. First registration wins;
+        re-registering an adopted chain is a no-op. Returns the number of
+        new index entries."""
+        ps = self.page_size
+        toks = tuple(tokens)
+        table = self._tables.get(rid, ())
+        added, parent = 0, -1
+        for j in range(1, len(toks) // ps + 1):
+            added += self._index((parent, toks[(j - 1) * ps:j * ps]),
+                                 table[j - 1])
+            parent = table[j - 1]
+        if len(toks) % ps and len(toks) // ps < len(table):
+            added += self._index((parent, toks[(len(toks) // ps) * ps:]),
+                                 table[len(toks) // ps])
+        return added
+
+    def _index(self, key: Tuple, page: int) -> int:
+        if key in self._prefix_index:
+            return 0
+        self._prefix_index[key] = page
+        self._page_keys.setdefault(page, []).append(key)
+        return 1
+
+    def shared_pages_in(self, rid: int, lo_token: int,
+                        hi_token: int) -> List[int]:
+        """Logical page indices of rid's table in [lo_token, hi_token) whose
+        physical page is shared (refcount > 1) — the pages the decode write
+        path must copy-on-write before appending."""
+        table = self._tables.get(rid, ())
+        lo = max(lo_token // self.page_size, 0)
+        hi = min(self.pages_for(hi_token), len(table))
+        return [j for j in range(lo, hi) if self._refs[table[j]] > 1]
+
+    def cow_page(self, rid: int, logical: int) -> Optional[Tuple[int, int]]:
+        """Materialize a private copy of rid's shared logical page: allocate
+        a fresh page, repoint the table, drop one reference on the shared
+        original. Returns (src_physical, dst_physical) for the device-side
+        content copy, or None under page pressure (nothing changed — the
+        scheduler's preemption probe, same contract as ``ensure``)."""
+        table = self._tables[rid]
+        src = table[logical]
+        assert self._refs[src] > 1, \
+            f"cow_page on unshared page {src} (rid {rid})"
+        if not self._free:
+            return None
+        dst = self._pop_free()
+        table[logical] = dst
+        self._release(src)
+        return src, dst
 
     # -------------------------------------------------------- device view
     def block_table_rows(self, rids: List[int], max_pages: int) -> np.ndarray:
@@ -114,7 +265,21 @@ class PageAllocator:
     def stats(self) -> Dict[str, float]:
         used_pages = self.in_use
         used_tokens = sum(self._lengths.values())
-        cap_tokens = used_pages * self.page_size
+        # fragmentation is denominated in LOGICAL page-slots (Σ block-table
+        # lengths): shared pages store their tokens once physically but are
+        # provisioned per holder, so the physical capacity can be smaller
+        # than used_tokens under sharing — the logical view keeps the stat
+        # the per-request tail-waste share in [0, 1] either way (identical
+        # to the physical view when nothing is shared)
+        logical_pages = sum(len(t) for t in self._tables.values())
+        cap_tokens = logical_pages * self.page_size
+        hist: Dict[int, int] = {}
+        for r in self._refs:
+            if r:
+                hist[r] = hist.get(r, 0) + 1
+        # multicast saving: each extra reference is one page NOT allocated
+        # relative to unshared admission of the same requests
+        pages_saved = sum((r - 1) for r in self._refs if r > 1)
         return {
             "page_size": self.page_size,
             "pages_total": self.num_pages,
@@ -126,4 +291,10 @@ class PageAllocator:
             # live pages (tail-of-last-page waste); 0 when nothing is live
             "fragmentation": (1.0 - used_tokens / cap_tokens) if cap_tokens
             else 0.0,
+            # ---- sharing metrics (ISSUE 4 satellite) ----
+            "shared_pages": sum(1 for r in self._refs if r > 1),
+            "pages_saved_sharing": pages_saved,
+            "tokens_saved_sharing": pages_saved * self.page_size,
+            "refcount_histogram": hist,
+            "prefix_index_entries": len(self._prefix_index),
         }

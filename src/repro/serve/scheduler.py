@@ -12,7 +12,19 @@ scheduler replaces that model end to end:
   finishes, and under page pressure the latest-admitted request is
   **preempted** (pages freed, request requeued for recompute) so the oldest
   work always completes. ``core.dataflow.attn_path`` decides paged vs. the
-  contiguous-ring fallback from the expected occupancy.
+  contiguous-ring fallback from the expected occupancy. Prefill is
+  **page-native**: ``decoding.prefill_batched``'s paged output mode writes
+  each layer's K/V straight into pool pages during the layer scan — no
+  dense (B, cache_len) transient, no post-prefill scatter.
+* **Copy-on-write prefix sharing** — admission walks the allocator's prefix
+  index and points a request's leading block-table entries at pages already
+  holding the same prompt prefix (refcount++, prefill skips those tokens'
+  writes); fresh pages start at the first divergent token. Shared pages are
+  read-only: before each decode chunk the scheduler materializes a private
+  copy of any shared page the chunk will append to (``PageAllocator.cow_page``
+  + a device-side page copy). ``core.dataflow.kv_quant_path`` additionally
+  picks the page payload format — int8 with per-page scales at cache-bound
+  batch widths, bf16 otherwise.
 * **Continuous batching** — admission runs every ``sync_every`` decode steps:
   arrived requests are bucketed into length tiers and batch-prefilled into
   freed rows (``decoding.prefill_batched``, the engine's amortized-admission
@@ -65,6 +77,8 @@ class StreamRequest:
     finished_at: Optional[float] = None
     finished_wall_s: Optional[float] = None
     preemptions: int = 0
+    shared_tokens: int = 0       # prompt tokens served from adopted pages
+                                 # at the most recent admission (CoW sharing)
 
 
 class ContinuousBatchingScheduler:
@@ -84,7 +98,9 @@ class ContinuousBatchingScheduler:
     def __init__(self, cfg, params, rows: int, cache_len: int, *,
                  page_size: int = 0, num_pages: int = 0, eos_id: int = 1,
                  temperature: float = 0.0, sync_every: int = 8,
-                 attn_path: Optional[str] = None):
+                 attn_path: Optional[str] = None,
+                 share_prefix: Optional[bool] = None,
+                 kv_quant: Optional[str] = None):
         if rows < 1:
             raise ValueError(
                 f"rows must be >= 1, got {rows}: a (1, {cache_len}) cache "
@@ -116,17 +132,34 @@ class ContinuousBatchingScheduler:
         else:
             self.num_pages = 0
             self.pager = None
+        # CoW prefix sharing rides the prefix index keyed by token lists —
+        # multi-codebook prompts have no flat token key, so sharing is
+        # LM-only (same restriction as recompute preemption)
+        if share_prefix is None:
+            share_prefix = cfg.num_codebooks == 1
+        self.share_prefix = self.paged and share_prefix \
+            and cfg.num_codebooks == 1
+        # page payload format: int8 with per-page scales in the cache-bound
+        # wide-batch regime (the decode_regimes measurement), bf16 otherwise
+        if kv_quant is None:
+            kv_quant = dataflow.kv_quant_path(rows, cache_len,
+                                              self.page_size) \
+                if self.paged else "fp"
+        assert kv_quant in dataflow.KV_QUANT_DTYPES, kv_quant
+        self.kv_quant = kv_quant if self.paged else "fp"
         self.host_syncs = 0
         self.phase_stats: Dict = {}
         self._chunk = jax.jit(self._make_chunk_fn(), donate_argnums=(1,))
         self._refill = jax.jit(self._make_refill_fn(), donate_argnums=(1,))
+        self._cow = jax.jit(self._make_cow_fn(), donate_argnums=(0,))
 
     # ------------------------------------------------------ device programs
     def _init_state(self):
         cfg = self.cfg
         if self.paged:
             cache = decoding.init_paged_cache(cfg, self.rows, self.cache_len,
-                                              self.num_pages, self.page_size)
+                                              self.num_pages, self.page_size,
+                                              self.kv_quant)
         else:
             cache = decoding.init_cache(cfg, self.rows, self.cache_len)
         vshape = (self.rows, cfg.num_codebooks, cfg.vocab_padded) \
@@ -140,42 +173,39 @@ class ContinuousBatchingScheduler:
     def _make_refill_fn(self) -> Callable:
         """Batched prefill of one length tier into freed rows.
 
-        Same contract as DecodeEngine's refill, except global-attention
-        entries scatter each row's prefill KV into its block-table pages
-        (decoding.scatter_rows_to_pages) instead of a dense slot row.
+        Same contract as DecodeEngine's refill, except in paged mode the
+        prefill itself is page-native (decoding.PagedPrefill): every
+        global-attention layer's K/V is written into its block-table pages
+        *during* the layer scan, per-row entries are merged at ``slots``
+        inside the same program, and tokens before each row's shared-prefix
+        boundary (``write_start``) are skipped — adopted pages stay
+        read-only. The dense (B, cache_len) slot-shaped transient of the old
+        scatter-after-prefill path never exists.
         """
         cfg, cache_len, paged = self.cfg, self.cache_len, self.paged
 
-        def merge_entry(c_entry, row_entry, slots, bt_rows, lengths,
-                        stacked: bool):
-            if decoding.is_paged_entry(c_entry):
-                def scat(pool, rows_kv):
-                    return decoding.scatter_rows_to_pages(
-                        pool, rows_kv, bt_rows, lengths)
-                f = jax.vmap(scat) if stacked else scat
-                return {"pk": f(c_entry["pk"], row_entry["k"]),
-                        "pv": f(c_entry["pv"], row_entry["v"])}
-            if stacked:     # stacked entries: (nper, B, ...) — axis 1
-                return jax.tree.map(
-                    lambda c, s: c.at[:, slots].set(s.astype(c.dtype)),
-                    c_entry, row_entry)
-            return jax.tree.map(
-                lambda c, s: c.at[slots].set(s.astype(c.dtype)),
-                c_entry, row_entry)
-
-        def refill(params, state, toks, lengths, slots, max_new, block_table):
+        def refill(params, state, toks, lengths, slots, max_new, block_table,
+                   write_start):
             cache, last, pos, live, budget = state
-            logits, row_cache = decoding.prefill_batched(
-                params, toks, lengths, cfg, cache_len)
-            bt_rows = block_table[slots] if paged else None
-            new_cache = {}
-            for part in ("blocks", "rem"):
-                if part in cache:
-                    new_cache[part] = {
-                        k: merge_entry(cache[part][k], row_cache[part][k],
-                                       slots, bt_rows, lengths,
-                                       stacked=(part == "blocks"))
-                        for k in cache[part]}
+            if paged:
+                pp = decoding.PagedPrefill(
+                    cache=cache, block_table_rows=block_table[slots],
+                    slots=slots, write_start=write_start)
+                logits, new_cache = decoding.prefill_batched(
+                    params, toks, lengths, cfg, cache_len, paged=pp)
+            else:
+                logits, row_cache = decoding.prefill_batched(
+                    params, toks, lengths, cfg, cache_len)
+                new_cache = {}
+                for part in ("blocks", "rem"):
+                    if part in cache:
+                        ax = (lambda c, s: c.at[:, slots].set(
+                            s.astype(c.dtype))) if part == "blocks" else \
+                            (lambda c, s: c.at[slots].set(s.astype(c.dtype)))
+                        new_cache[part] = {
+                            k: jax.tree.map(ax, cache[part][k],
+                                            row_cache[part][k])
+                            for k in cache[part]}
             last = last.at[slots].set(logits[:, -1].astype(last.dtype))
             pos = pos.at[slots].set(lengths)
             live = live.at[slots].set(True)
@@ -183,6 +213,35 @@ class ContinuousBatchingScheduler:
             return (new_cache, last, pos, live, budget)
 
         return refill
+
+    def _make_cow_fn(self) -> Callable:
+        """Device-side page materialization for copy-on-write: content (and
+        int8 scales) of physical pages ``src`` copied onto ``dst`` across
+        every paged pool entry. Pairs are host-deduplicated; pad pairs
+        repeat a real pair, so duplicate destinations carry identical
+        values (order-independent scatter)."""
+        def cow(state, src, dst):
+            cache, last, pos, live, budget = state
+            new_cache = {}
+            for part in ("blocks", "rem"):
+                if part not in cache:
+                    continue
+                stacked = part == "blocks"
+                out = {}
+                for name, e in cache[part].items():
+                    if decoding.is_paged_entry(e):
+                        if stacked:   # (nper, P, ...) — page axis 1
+                            out[name] = {k: v.at[:, dst].set(v[:, src])
+                                         for k, v in e.items()}
+                        else:
+                            out[name] = {k: v.at[dst].set(v[src])
+                                         for k, v in e.items()}
+                    else:
+                        out[name] = e
+                new_cache[part] = out
+            return (new_cache, last, pos, live, budget)
+
+        return cow
 
     def _make_chunk_fn(self) -> Callable:
         """sync_every fused decode steps — the engine's shared step
@@ -275,11 +334,32 @@ class ContinuousBatchingScheduler:
             "prefill_padded_tokens": 0, "decode_chunks": 0,
             "decode_steps": 0, "idle_steps": 0.0, "preemptions": 0,
             "attn_path": "paged" if self.paged else "contiguous",
+            "kv_quant": self.kv_quant,
+            "share_prefix": self.share_prefix,
+            "shared_tokens_admitted": 0,   # prompt tokens served from
+                                           # adopted (refcounted) pages
+            "cow_copies": 0,               # shared pages materialized for
+                                           # a decode append
+            "peak_live_rows": 0,           # max concurrent admitted requests
         }
 
         preempted_rows: List[int] = []
         just_preempted: set = set()           # rids evicted this boundary
         peak_pages: Optional[Dict] = None     # busiest-boundary pool snapshot
+
+        def clear_preempted_flags():
+            """Drop the device live flags of rows preempted since the last
+            clear: zombies would keep running full forward+sampling (and in
+            paged mode DMA-ing clamped/freed pages) until the row is reused.
+            Must run before any admission reuses a freed row AND before
+            every decode chunk."""
+            nonlocal state
+            if not preempted_rows:
+                return
+            cache, last, pos, live, budget = state
+            live = live.at[jnp.asarray(preempted_rows)].set(False)
+            state = (cache, last, pos, live, budget)
+            preempted_rows.clear()
 
         def preempt_latest() -> bool:
             """Free the latest-admitted row; requeue its request (recompute).
@@ -328,14 +408,7 @@ class ContinuousBatchingScheduler:
                                 "preempt — num_pages is too small")
                     if row in active:
                         self.pager.set_length(r.rid, row_pos[row])
-            if preempted_rows:
-                # clear the device live flags of preempted rows: otherwise
-                # they keep running full forward+sampling as zombies (and in
-                # paged mode DMA-ing clamped pages) until the row is reused
-                cache, last, pos, live, budget = state
-                live = live.at[jnp.asarray(preempted_rows)].set(False)
-                state = (cache, last, pos, live, budget)
-                preempted_rows.clear()
+            clear_preempted_flags()
 
             # ---- admission: arrived requests into freed rows --------------
             to_admit: List[StreamRequest] = []
@@ -348,9 +421,27 @@ class ContinuousBatchingScheduler:
                     # break, not skip: it keeps queue priority
                     break
                 plen = self._plen(r)
-                if self.paged and not self.pager.ensure(
-                        r.rid, min(plen + T, self._final_len(r))):
-                    break                      # page pressure: wait for frees
+                if self.paged:
+                    # CoW prefix sharing: point leading table entries at
+                    # resident pages already holding this prompt's prefix
+                    # (refcount++); prefill will skip writes before the
+                    # boundary. Roll the adoption back if the fresh-page
+                    # remainder doesn't fit — all-or-nothing, like ensure.
+                    r.shared_tokens = self.pager.adopt_prefix(
+                        r.rid, self._resume_prompt(r)) \
+                        if self.share_prefix else 0
+                    if not self.pager.ensure(
+                            r.rid, min(plen + T, self._final_len(r))):
+                        if self.pager.pages_of(r.rid):
+                            self.pager.free(r.rid)   # roll back adoption
+                        r.shared_tokens = 0
+                        break                  # page pressure: wait for frees
+                    if self.share_prefix:
+                        # publish this prompt's pages immediately — their
+                        # content lands in this same boundary's refill, so a
+                        # same-boundary arrival can already adopt the chain
+                        self.pager.register_prefix(r.rid,
+                                                   self._resume_prompt(r))
                 waiting.pop(0)
                 to_admit.append(r)
             just_preempted.clear()
@@ -362,6 +453,7 @@ class ContinuousBatchingScheduler:
                 row_pos[row] = self._plen(r)
                 if self.paged:
                     self.pager.set_length(r.rid, row_pos[row])
+                    st["shared_tokens_admitted"] += r.shared_tokens
                 if r.admitted_at is None:
                     r.admitted_at = clock
             if admits:
@@ -376,16 +468,19 @@ class ContinuousBatchingScheduler:
                 tp0 = time.perf_counter()
                 for tier, group in sorted(buckets.items()):
                     B = len(group)
-                    toks, lengths, row_ids, budgets = build_tier_batch(
-                        group, tier, self._resume_prompt,
-                        lambda r: r.max_new - len(r.out))
+                    toks, lengths, row_ids, budgets, starts = \
+                        build_tier_batch(
+                            group, tier, self._resume_prompt,
+                            lambda r: r.max_new - len(r.out),
+                            lambda r: r.shared_tokens)
                     for row, r in group:
                         active[row] = r
                     state = self._refill(self.params, state,
                                          jnp.asarray(toks),
                                          jnp.asarray(lengths),
                                          jnp.asarray(row_ids),
-                                         jnp.asarray(budgets), bt)
+                                         jnp.asarray(budgets), bt,
+                                         jnp.asarray(starts))
                     st["prefill_batches"] += 1
                     st["prefill_prompts"] += B
                     st["prefill_real_tokens"] += int(lengths.sum())
@@ -395,6 +490,44 @@ class ContinuousBatchingScheduler:
 
             if not active:
                 continue
+            st["peak_live_rows"] = max(st["peak_live_rows"], len(active))
+
+            # ---- CoW guard: materialize shared pages this chunk appends to
+            # (runs after admission so freshly adopted whole-prompt tails are
+            # covered too; shared pages are read-only by contract)
+            if self.paged and self.share_prefix:
+                pairs: List[Tuple[int, int]] = []
+                for row in list(admit_order):         # oldest first
+                    if row not in active:
+                        continue
+                    r = active[row]
+                    lo = row_pos[row]
+                    hi = min(lo + T, self._final_len(r))
+                    # re-probe after every mutation: a preemption can drop a
+                    # refcount to 1 mid-loop (page no longer needs a copy)
+                    while row in active:
+                        shared = self.pager.shared_pages_in(r.rid, lo, hi)
+                        if not shared:
+                            break
+                        pair = self.pager.cow_page(r.rid, shared[0])
+                        if pair is None:              # no free page: pressure
+                            if not preempt_latest():
+                                raise RuntimeError(
+                                    "page pool exhausted during CoW "
+                                    "materialization with nothing left to "
+                                    "preempt — num_pages is too small")
+                            continue
+                        pairs.append(pair)
+                if pairs:
+                    st["cow_copies"] += len(pairs)
+                    # pad to a power of two (bounded retraces); pads repeat a
+                    # real pair so duplicate dsts carry identical content
+                    n = 1 << (len(pairs) - 1).bit_length()
+                    pairs = pairs + [pairs[0]] * (n - len(pairs))
+                    src = jnp.asarray([s for s, _ in pairs], jnp.int32)
+                    dst = jnp.asarray([d for _, d in pairs], jnp.int32)
+                    state = self._cow(state, src, dst)
+            clear_preempted_flags()       # CoW-guard preemptions, pre-chunk
 
             if self.paged:
                 # sample occupancy at the busiest point of the boundary —

@@ -211,10 +211,7 @@ def test_packing_efficiency_stats():
 
 
 # -------------------------------------------- wall-clock-free perf guards
-def test_fused_proxies_beat_two_call_at_075():
-    """Acceptance (ISSUE 2): fused grid steps <= two-call grid steps and the
-    HBM-bytes-moved proxy strictly decreases, at 0.75 sparsity — enforceable
-    in interpret mode on CPU (no wall clock)."""
+def _load_bench():
     import importlib.util
     import os
     bench_path = os.path.join(os.path.dirname(__file__), os.pardir,
@@ -223,11 +220,44 @@ def test_fused_proxies_beat_two_call_at_075():
         "sparse_decode_bench", bench_path)
     bench = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(bench)
+    return bench
+
+
+def test_fused_proxies_beat_two_call_at_075():
+    """Acceptance (ISSUE 2): fused grid steps <= two-call grid steps and the
+    HBM-bytes-moved proxy strictly decreases, at 0.75 sparsity — enforceable
+    in interpret mode on CPU (no wall clock)."""
+    bench = _load_bench()
     _, _, _, stats = _pruned_packed_cfg(0.75)
     mp = bench.mlp_proxy(sparsity=0.75, stats=stats)
     assert mp["fused"]["grid_steps"] <= mp["two_call"]["grid_steps"]
     assert mp["fused"]["hbm_bytes"] < mp["two_call"]["hbm_bytes"]
     assert mp["fused"]["kernel_launches"] < mp["two_call"]["kernel_launches"]
+    assert mp["fused"]["block_visits"] <= mp["two_call"]["block_visits"]
+    assert mp["mixed_density"] is False       # bench config packs uniformly
+
+
+def test_mlp_proxy_guards_mixed_density_archs():
+    """ROADMAP latent bug (from PR 2): sparsify_mlp_params can route a
+    weight dense in one layer group and packed in another, leaving
+    stats["weights"][name] lists of UNEQUAL lengths. mlp_proxy must count
+    only the projections packed in each layer instead of IndexError-ing."""
+    bench = _load_bench()
+    stats = {
+        "block_density": 0.4, "packing_efficiency": 0.9,
+        "weights": {
+            "wg": {"real": [4, 4], "padded": [8, 8],
+                   "packing_efficiency": 0.5, "dense_blocks": 16},
+            "wu": {"real": [4, 4], "padded": [8, 8],
+                   "packing_efficiency": 0.5, "dense_blocks": 16},
+            # left dense in the second layer group: one entry only
+            "wd": {"real": [4], "padded": [8],
+                   "packing_efficiency": 0.5, "dense_blocks": 16},
+        },
+    }
+    mp = bench.mlp_proxy(stats=stats)         # must not raise
+    assert mp["mixed_density"] is True
+    assert mp["two_call"]["grid_steps"] > 0
     assert mp["fused"]["block_visits"] <= mp["two_call"]["block_visits"]
 
 
