@@ -42,13 +42,16 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import eyexam
+from repro.core import plan as plan_lib
 from repro.models import decoding
 
 SPARSITIES = (0.5, 0.75, 0.9)
-BCSC_OVERHEAD = 1.02     # index-vector bytes per payload byte
+# analytic constants live with the ServePlan roofline (core.plan) so the
+# plan's MLP rationale and this benchmark are the same numbers
+BCSC_OVERHEAD = plan_lib.BCSC_OVERHEAD
+KERNEL_LAUNCH_S = plan_lib.KERNEL_LAUNCH_S
 BENCH_JSON = "BENCH_sparse_decode.json"
 PR1_E2E_RATIO_B1 = 0.87  # PR 1's recorded batch-1 sparse/dense tokens/sec
-KERNEL_LAUNCH_S = 2e-6   # per-kernel dispatch overhead (TPU-class estimate)
 ID_BYTES = 8             # row_id + col_id int32 per payload block
 
 
@@ -272,46 +275,16 @@ def mlp_bound_analysis(arch: str = "qwen2.5-3b", sparsity: float = 0.75,
     a TPU launch) it dominated, which is exactly the 0.87 ratio recorded in
     PR 1. The megakernel removes both added terms, so the bound returns to
     the weight stream — the only term sparsity can shrink.
+
+    The model itself lives in ``core.plan.mlp_roofline`` — it is the MLP
+    decision's rationale inside every resolved ServePlan, and delegating
+    keeps this benchmark and ``plan.explain()`` the same numbers by
+    construction (tests/test_plan.py asserts it). This wrapper keeps the
+    benchmark-JSON schema.
     """
-    cfg = get_config(arch)
-    d, ff = cfg.d_model, cfg.d_ff
-    bm, L = 8, cfg.num_layers
-    ups = 2 if cfg.mlp_gated else 1
-    w_dense = (ups * d * ff + ff * d) * 2            # bf16
-    w_real = w_dense * (1 - sparsity) * BCSC_OVERHEAD
-    w_padded = w_real / max(packing_efficiency, 1e-6)
-    hidden_rt = bm * ff * (ups * 4 + (2 * 4 if ups == 2 else 0) + 2 + 2)
-    xio = bm * d * (2 + 4)
-
-    def t(bytes_, launches):
-        return bytes_ / eyexam.HBM_BW + launches * KERNEL_LAUNCH_S
-
-    t_dense = t(w_dense + hidden_rt + xio, ups + 1)
-    t_two = t(w_padded + hidden_rt + xio, ups + 1)
-    t_fused = t(w_real + xio, 1)
-    return {
-        "arch": arch, "sparsity": sparsity, "layers": L,
-        "per_layer_bytes": {
-            "weights_dense": w_dense,
-            "weights_sparse_real": w_real,
-            "weights_sparse_padded": w_padded,
-            "hidden_roundtrip": hidden_rt,
-            "act_in_out": xio,
-        },
-        "per_layer_time_s": {
-            "dense": t_dense,
-            "two_call_sparse": t_two,
-            "fused_sparse": t_fused,
-        },
-        "speedup": {
-            "two_call_vs_dense": t_dense / t_two,
-            "fused_vs_dense": t_dense / t_fused,
-            "fused_vs_two_call": t_two / t_fused,
-        },
-        "bound": "weight-stream (the term sparsity shrinks) once the hidden "
-                 "round-trip and extra launches are fused away",
-        "kernel_launch_s": KERNEL_LAUNCH_S,
-    }
+    out = plan_lib.mlp_roofline(get_config(arch), sparsity=sparsity,
+                                packing_efficiency=packing_efficiency)
+    return {"arch": arch, **out}
 
 
 # ---------------------------------- ISSUE 3: paged KV + continuous batching
@@ -429,10 +402,13 @@ def arrival_benchmark(arch: str = "qwen2.5-3b-reduced", rows: int = 3,
                      "length_variance": float(np.var(max_news))}
 
         # ---- continuous batching: paged scheduler on the virtual clock ----
+        # engines run plan-driven: dispatch is resolved once by core.plan
         sch = ContinuousBatchingScheduler(
-            cfg, params, rows=rows, cache_len=cache_len,
-            page_size=page_size, num_pages=num_pages, eos_id=-1,
-            sync_every=sync_every, attn_path="paged")
+            cfg, params, plan_lib.plan_for_scheduler(
+                cfg, rows=rows, cache_len=cache_len, page_size=page_size,
+                num_pages=num_pages, attn_path="paged",
+                sync_every=sync_every),
+            eos_id=-1)
         reqs = [StreamRequest(i, prompt, mn, arrival=arrivals[i])
                 for i, mn in enumerate(max_news)]
         t0 = time.perf_counter()
@@ -453,8 +429,9 @@ def arrival_benchmark(arch: str = "qwen2.5-3b-reduced", rows: int = 3,
         }
 
         # ---- drain-the-chunk baseline: static cohorts of `rows` ----------
-        eng = DecodeEngine(cfg, params, slots=rows, cache_len=cache_len,
-                           eos_id=-1, sync_every=sync_every)
+        eng = DecodeEngine(cfg, params, plan_lib.plan_for_engine(
+            cfg, slots=rows, cache_len=cache_len, sync_every=sync_every),
+            eos_id=-1)
         clock, lat_d, toks_d, wall_d = 0.0, [], 0, 0.0
         order = sorted(range(n_requests), key=lambda i: arrivals[i])
         for c0 in range(0, n_requests, rows):
@@ -530,9 +507,11 @@ def shared_prefix_benchmark(arch: str = "qwen2.5-3b-reduced", rows: int = 3,
 
     def run(share: bool) -> Dict:
         sch = ContinuousBatchingScheduler(
-            cfg, params, rows=rows, cache_len=cache_len,
-            page_size=page_size, num_pages=num_pages, eos_id=-1,
-            sync_every=sync_every, attn_path="paged", share_prefix=share)
+            cfg, params, plan_lib.plan_for_scheduler(
+                cfg, rows=rows, cache_len=cache_len, page_size=page_size,
+                num_pages=num_pages, attn_path="paged", share_prefix=share,
+                sync_every=sync_every),
+            eos_id=-1)
         reqs = [StreamRequest(i, prompts[i], max_new, arrival=arrivals[i])
                 for i in range(n_requests)]
         t0 = time.perf_counter()
@@ -642,8 +621,9 @@ def decode_benchmark(batches=(1, 4, 8), max_new: int = 8,
         row: Dict = {}
         engines = {}
         for name, p in (("dense", params), ("sparse", packed)):
-            eng = DecodeEngine(cfg, p, slots=b, cache_len=32,
-                               eos_id=-1, sync_every=sync_every)
+            eng = DecodeEngine(cfg, p, plan_lib.plan_for_engine(
+                cfg, slots=b, cache_len=32, sync_every=sync_every),
+                eos_id=-1)
             eng.run([Request(rid=99, prompt=[5, 6, 7, 8], max_new=max_new)
                      for _ in range(b)])          # warmup / compile
             engines[name] = eng
@@ -721,6 +701,11 @@ def main(smoke: bool = False, engine: bool = True, repeats: int = None,
         "kernel_proxy": kernel_proxy(),
         "mlp_proxy": mlp_proxy(sparsity=sparsity, stats=stats),
         "paged": paged_proxy(),
+        # resolved ServePlans for the seed configs at the canonical snapshot
+        # inputs — perf_guard's `plan-snapshot-stable` gate compares these
+        # against scripts/golden_plans.json (silent dispatch drift fails CI)
+        "plans": {arch: plan_lib.snapshot_plan(arch).as_dict()
+                  for arch in plan_lib.SNAPSHOT_CONFIGS},
     }
     if engine:
         res["decode"] = decode_benchmark(

@@ -42,8 +42,11 @@ def main():
         if i % 2 == 0:
             print(f"step {i}: loss={float(metrics['loss']):.3f}")
 
-    # 4. serve greedily from the trained weights
-    eng = DecodeEngine(cfg, params, slots=2, cache_len=48, eos_id=-1)
+    # 4. serve greedily from the trained weights (plan-driven dispatch)
+    from repro.core import plan as plan_lib
+    eng = DecodeEngine(cfg, params,
+                       plan_lib.plan_for_engine(cfg, slots=2, cache_len=48),
+                       eos_id=-1)
     done = eng.run([Request(0, [5, 6, 7], max_new=8)])
     print("decoded:", done[0].out)
 

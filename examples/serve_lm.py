@@ -1,9 +1,11 @@
-"""Streaming serving on the paged continuous-batching scheduler (ISSUE 3).
+"""Streaming LM serving through the `repro.serve.LLM` facade (ISSUE 5).
 
-Requests arrive on a Poisson process, stream tokens through per-request
-callbacks as they are generated, and share a page pool provisioned *below*
-the dense worst case — the block-table indirection is what turns short
-requests' stranded HBM into extra batch rows.
+The canonical serving entry point: resolve a ServePlan ONCE from the model
+config and the serving budget (`core.plan.plan_serve` — every dispatch
+decision with its Eyexam-style bound rationale), hand it to `LLM`, and
+stream. Requests arrive on a Poisson process, share a page pool provisioned
+*below* the dense worst case, and stream tokens through per-request
+callbacks as they are generated.
 
     PYTHONPATH=src python examples/serve_lm.py --requests 12 --rows 4
 """
@@ -14,8 +16,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import dataflow, plan as plan_lib
 from repro.models import transformer as tfm
-from repro.serve.scheduler import ContinuousBatchingScheduler, StreamRequest
+from repro.serve import LLM
+from repro.serve.scheduler import StreamRequest
 
 
 def main():
@@ -32,25 +36,28 @@ def main():
                     help="shared system-prompt prefix length (0 disables); "
                          "CoW prefix sharing stores it once across requests")
     ap.add_argument("--kv-quant", choices=["fp", "int8"], default=None,
-                    help="page payload format (default: dataflow rule)")
+                    help="page payload format (default: plan rule)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch + "-reduced")
     params = tfm.init_params(jax.random.PRNGKey(0), cfg)
 
-    # pool provisioned at half the dense (rows x cache_len) worst case —
-    # paging + preemption make that safe
-    from repro.core import dataflow
-    num_pages = max(args.rows * dataflow.pages_for(
-        args.cache_len, args.page_size) // 2, 1)
-    sch = ContinuousBatchingScheduler(
-        cfg, params, rows=args.rows, cache_len=args.cache_len,
-        page_size=args.page_size, num_pages=num_pages, eos_id=1,
+    # resolve every dispatch decision once: pool provisioned for ~half-slot
+    # expected occupancy (paging + preemption make under-provisioning safe)
+    plan = plan_lib.plan_serve(
+        cfg,
+        hbm_budget_bytes=args.rows * 2 ** 30,     # demo-scale budget
+        expected_batch=args.rows,
+        expected_len_dist={"mean": args.cache_len // 2,
+                           "max": args.cache_len},
+        page_size=args.page_size,
+        num_pages=max(args.rows * dataflow.pages_for(
+            args.cache_len, args.page_size) // 2, 1),
         kv_quant=args.kv_quant)
-    print(f"attn path: {'paged' if sch.paged else 'contiguous'} "
-          f"({num_pages} pages x {sch.page_size} tokens, kv {sch.kv_quant}, "
-          f"prefix sharing {'on' if sch.share_prefix else 'off'} vs dense "
-          f"{args.rows} x {args.cache_len})")
+    print(plan.explain())
+    print()
+
+    llm = LLM(cfg, params, plan, eos_id=1)
 
     rng = np.random.default_rng(0)
     arrivals = np.cumsum(rng.exponential(args.mean_gap, args.requests))
@@ -75,10 +82,10 @@ def main():
             for i in range(args.requests)]
 
     t0 = time.time()
-    done = sch.run(reqs)
+    done = llm.stream(reqs)
     dt = time.time() - t0
     new_toks = sum(len(r.out) for r in done)
-    st = sch.phase_stats
+    st = llm.phase_stats
     lat = [r.finished_at - r.arrival for r in done]
     print(f"{len(done)} requests, {new_toks} tokens in {dt:.1f}s "
           f"({new_toks / dt:.1f} tok/s wall; "
@@ -86,7 +93,7 @@ def main():
     print(f"latency p50 {np.percentile(lat, 50):.0f} / "
           f"p99 {np.percentile(lat, 99):.0f} steps; "
           f"preemptions {st['preemptions']}")
-    pg = sch.phase_stats.get("pages_peak")
+    pg = st.get("pages_peak")
     if pg:
         print(f"pages at peak: {pg['pages_used']}/{pg['pages_total']} in "
               f"use ({pg['used_tokens']} tokens), "

@@ -27,12 +27,22 @@ Checks:
      unshared admission at the same pool size, peak at fewer pages, and
      produce identical outputs; int8 KV pages record a quantized-vs-fp
      byte ratio strictly below 1
+  9. plan snapshot (ISSUE 5): the resolved ServePlans for the seed configs
+     (core.plan.snapshot_plan — fixed budget/shape inputs) match
+     scripts/golden_plans.json exactly. Any drift in a dispatch decision,
+     threshold, pool size, or bound rationale fails CI until the golden
+     file is regenerated deliberately:
+        PYTHONPATH=src python -c "import json; from repro.core import plan;
+        json.dump({a: plan.snapshot_plan(a).as_dict() for a in
+        plan.SNAPSHOT_CONFIGS}, open('scripts/golden_plans.json','w'),
+        indent=2, sort_keys=True)"
 
     PYTHONPATH=src python scripts/perf_guard.py [BENCH_sparse_decode.json]
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 # PR 1's two-call path at the benchmark config (qwen2.5-3b-reduced, 0.75
@@ -136,6 +146,34 @@ def main(path: str = "BENCH_sparse_decode.json") -> int:
     else:
         print("  [--] shared_prefix section absent; page-native gates "
               "skipped")
+
+    plans = data.get("plans", {})
+    if plans:
+        golden_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                   "golden_plans.json")
+        golden = json.load(open(golden_path))
+        # round-trip the bench side through JSON text so tuple-vs-list and
+        # int-vs-float representation can never cause a spurious diff
+        plans = json.loads(json.dumps(plans))
+        drifted = []
+        # both directions: a bench plan without a golden counterpart (new
+        # snapshot config, golden not regenerated) is drift too
+        for arch in sorted(set(golden) | set(plans)):
+            want, got = golden.get(arch), plans.get(arch)
+            if got != want:
+                if want is None or got is None:
+                    keys = "missing from golden" if want is None \
+                        else "missing from bench"
+                else:
+                    keys = ", ".join(sorted(
+                        k for k in set(want) | set(got)
+                        if got.get(k) != want.get(k)))
+                drifted.append(f"{arch}({keys})")
+        check("plan-snapshot-stable", not drifted,
+              f"{len(golden)} seed plans match scripts/golden_plans.json"
+              if not drifted else f"drifted: {'; '.join(drifted)}")
+    else:
+        print("  [--] plans section absent; plan-snapshot gate skipped")
 
     dec = data.get("decode", {})
     if dec:

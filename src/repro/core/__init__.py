@@ -4,6 +4,17 @@
 #   eyexam         — 7-step bounds + 3-term TPU roofline
 #   sparsity       — CSC / block-CSC formats + pruning
 #   dataflow       — row-stationary VMEM tiling
+#   plan           — ServePlan: every serving dispatch decision resolved once
 from repro.core import dataflow, eyexam, hmmesh, planner, reuse, sparsity
 
-__all__ = ["dataflow", "eyexam", "hmmesh", "planner", "reuse", "sparsity"]
+__all__ = ["dataflow", "eyexam", "hmmesh", "plan", "planner", "reuse",
+           "sparsity"]
+
+
+def __getattr__(name):
+    # `plan` loads lazily so `python -m repro.core.plan` (the ServePlan CLI)
+    # does not import the module twice (runpy's sys.modules warning)
+    if name == "plan":
+        import importlib
+        return importlib.import_module("repro.core.plan")
+    raise AttributeError(name)

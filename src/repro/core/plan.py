@@ -1,0 +1,722 @@
+"""ServePlan — every serving dispatch decision resolved ONCE (ISSUE 5).
+
+Eyeriss v2's flexibility argument (paper §III) is that the *configuration* of
+the array — NoC mode, dataflow, sparse vs dense path — is picked per layer
+ahead of execution from the layer's shape and sparsity, with Eyexam (Appendix
+A) as the analysis justifying each choice. The software analog had grown the
+opposite way: four independent dispatch rules in ``core.dataflow``
+(``matmul_path``, ``mlp_path``, ``attn_path``, ``kv_quant_path``) were
+consulted ad hoc at call sites, and their inputs threaded through two
+divergent serving front ends as overlapping constructor kwargs.
+
+This module is the compile step. ``plan_serve(cfg, ...)`` resolves every
+decision the serving system makes — matmul GEMV/GEMM route + tile sizes, MLP
+fused/two_call + ``BCSC_CHUNK``, attention paged/contiguous + ``PAGE_SIZE``
++ page-pool size, KV quant mode, the prefill tier schedule, and slot/row
+counts — into one frozen :class:`ServePlan`, each decision carrying its
+Eyexam-style bound rationale (``plan.explain()`` renders the per-decision
+roofline the way ``benchmarks/sparse_decode.py::mlp_bound_analysis`` does).
+
+Execution then *reads* the plan instead of re-deriving the rules:
+
+* engines (``serve.engine.DecodeEngine``, ``serve.scheduler.
+  ContinuousBatchingScheduler``) take a ``plan`` instead of kwarg piles and
+  activate it (:func:`activate`) around their jitted programs;
+* ``models.layers.mlp`` and ``kernels.ops`` consult the active plan through
+  :func:`route_mlp` / :func:`route_matmul` / :func:`tile_m`, falling back to
+  the ``core.dataflow`` rules only when no plan is active (bare
+  ``decoding.prefill``/``serve_step`` calls outside a serving engine).
+
+The dispatch thresholds stored in the plan are resolved from the SAME
+``core.dataflow`` rules, so plan-driven and legacy dispatch are bit-identical
+by construction (asserted across the config matrix in tests/test_plan.py).
+Legacy engine kwargs stay as thin shims (:func:`plan_for_engine`,
+:func:`plan_for_scheduler`) that build a single-decision plan and emit a
+``DeprecationWarning`` when reached implicitly.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.core.plan --cfg gemma2_2b --hbm 2GiB
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import json
+from typing import Dict, Optional, Tuple
+
+from repro.core import dataflow, eyexam
+
+# Bounds a decision may cite — the three-term serving roofline (Eyexam's
+# compute / memory split plus the occupancy axis paging trades on).
+BOUNDS = ("compute", "HBM", "occupancy")
+
+# Analytic-model constants shared with benchmarks/sparse_decode.py (moved
+# here so the plan's MLP rationale and mlp_bound_analysis are the same
+# numbers by construction, not by copy).
+BCSC_OVERHEAD = 1.02     # index-vector bytes per payload byte
+KERNEL_LAUNCH_S = 2e-6   # per-kernel dispatch overhead (TPU-class estimate)
+
+# Canonical snapshot inputs for the golden-plan drift gate
+# (scripts/golden_plans.json; perf_guard check `plan-snapshot-stable`).
+SNAPSHOT_CONFIGS = ("gemma2-2b", "mixtral-8x7b", "mamba2-130m")
+SNAPSHOT_BUDGET_BYTES = 2 << 30          # 2 GiB
+SNAPSHOT_BATCH = 8
+SNAPSHOT_LEN_DIST = {"mean": 1024, "max": 2048}
+SNAPSHOT_SPARSITY = {"sparsity": 0.75, "packing_efficiency": 0.93}
+
+
+# ---------------------------------------------------------------- decisions
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One resolved dispatch decision with its Eyexam-style rationale.
+
+    ``bound`` names the term of the serving roofline that justifies the
+    choice (one of :data:`BOUNDS`); ``numbers`` carries the model inputs the
+    rationale is computed from, so ``explain()`` can render the per-decision
+    roofline and the snapshot gate can detect silent drift in the *reasons*,
+    not just the choices.
+    """
+    name: str
+    choice: str
+    bound: str
+    why: str
+    numbers: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        assert self.bound in BOUNDS, (self.name, self.bound)
+
+
+# -------------------------------------------------------------- MLP roofline
+def mlp_roofline(cfg, sparsity: float = 0.75,
+                 packing_efficiency: float = 0.93, bm: int = 8) -> Dict:
+    """Eyexam-style MLP bound model (paper Appendix A; DESIGN.md §9).
+
+    The single source of the numbers behind the plan's MLP decision AND
+    ``benchmarks/sparse_decode.py::mlp_bound_analysis`` (which delegates
+    here): per decode step the MLP time is
+
+        t = t_weight_stream + t_hidden_roundtrip + n_launch · t_launch
+
+    Sparsity only shrinks the first term; the two-call path adds the second
+    (the (bm × d_ff) hidden crosses HBM four times) and triples the third,
+    while the fused megakernel removes both added terms — the bound returns
+    to the weight stream, the only term sparsity can shrink.
+    """
+    d, ff = cfg.d_model, cfg.d_ff
+    ups = 2 if cfg.mlp_gated else 1
+    w_dense = (ups * d * ff + ff * d) * 2            # bf16
+    w_real = w_dense * (1 - sparsity) * BCSC_OVERHEAD
+    w_padded = w_real / max(packing_efficiency, 1e-6)
+    hidden_rt = bm * ff * (ups * 4 + (2 * 4 if ups == 2 else 0) + 2 + 2)
+    xio = bm * d * (2 + 4)
+
+    def t(bytes_, launches):
+        return bytes_ / eyexam.HBM_BW + launches * KERNEL_LAUNCH_S
+
+    t_dense = t(w_dense + hidden_rt + xio, ups + 1)
+    t_two = t(w_padded + hidden_rt + xio, ups + 1)
+    t_fused = t(w_real + xio, 1)
+    return {
+        "sparsity": sparsity, "layers": cfg.num_layers,
+        "per_layer_bytes": {
+            "weights_dense": w_dense,
+            "weights_sparse_real": w_real,
+            "weights_sparse_padded": w_padded,
+            "hidden_roundtrip": hidden_rt,
+            "act_in_out": xio,
+        },
+        "per_layer_time_s": {
+            "dense": t_dense,
+            "two_call_sparse": t_two,
+            "fused_sparse": t_fused,
+        },
+        "speedup": {
+            "two_call_vs_dense": t_dense / t_two,
+            "fused_vs_dense": t_dense / t_fused,
+            "fused_vs_two_call": t_two / t_fused,
+        },
+        "bound": "weight-stream (the term sparsity shrinks) once the hidden "
+                 "round-trip and extra launches are fused away",
+        "kernel_launch_s": KERNEL_LAUNCH_S,
+    }
+
+
+def _fused_m_max(d_ff: int, n_out: int, gated: bool) -> Optional[int]:
+    """Largest M routed 'fused' by ``dataflow.mlp_path`` — the crossover
+    resolved once. ``bcsc_tile_m`` is monotone in M and clamps at 512, so
+    scanning the pow-2 bm ladder is exact: returns None when even bm=512
+    fits (fused at every M), 0 when even bm=8 does not (never fused)."""
+    best = 0
+    bm = dataflow.SUBLANE
+    while bm <= 512:
+        if dataflow.fused_mlp_scratch_bytes(bm, d_ff, n_out, gated) \
+                <= dataflow.FUSED_MLP_VMEM_BUDGET:
+            best = bm
+        bm *= 2
+    return None if best == 512 else best
+
+
+# ------------------------------------------------------------------ ServePlan
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    """Every serving dispatch decision, resolved once and read per call.
+
+    The threshold fields (``gemv_m_max``, ``mlp_fused_m_max`` …) are the
+    ``core.dataflow`` rules evaluated ahead of time; the route queries
+    (:meth:`matmul_route`, :meth:`mlp_route`, :meth:`tier`) are table
+    lookups against them — bit-identical to the legacy per-call dispatch.
+    """
+    arch: str
+    # capacity
+    rows: int
+    cache_len: int
+    sync_every: int
+    # matmul (GEMV/GEMM crossover + tile sizes)
+    gemv_m_max: int
+    gemv_bm: int
+    # MLP (fused/two_call crossover + payload chunking)
+    mlp_fused_m_max: Optional[int]       # None = fused at every M; 0 = never
+    mlp_pack_dense_density: float        # >= this block density: don't pack
+    bcsc_chunk: int
+    # attention (paged/contiguous + page geometry + pool size)
+    attn_path: str
+    page_size: int
+    max_pages: int
+    num_pages: int
+    share_prefix: bool
+    # KV store dtype
+    kv_quant: str
+    # prefill admission schedule
+    prefill_exact: bool                  # recurrent archs: exact-length tiers
+    prefill_tiers: Tuple[int, ...]
+    # rationale records (one per decision; not part of dispatch identity)
+    decisions: Tuple[Decision, ...] = ()
+
+    # ------------------------------------------------------- route queries
+    def matmul_route(self, M: int) -> str:
+        """'gemv' for decode-shaped (skinny) M, else 'gemm' — the resolved
+        form of ``dataflow.matmul_path``."""
+        return "gemv" if M <= self.gemv_m_max else "gemm"
+
+    def bcsc_bm(self, M: int) -> int:
+        """m-tile for the BCSC kernels at M rows (``dataflow.bcsc_tile_m``
+        against the plan's resolved GEMV crossover)."""
+        if self.matmul_route(M) == "gemv":
+            return self.gemv_bm
+        return min(512, max(dataflow.SUBLANE,
+                            1 << (max(M, 1) - 1).bit_length()))
+
+    def mlp_route(self, M: int) -> str:
+        """'fused' | 'two_call' for a packed MLP at M rows — the resolved
+        VMEM-scratch-fit crossover of ``dataflow.mlp_path``. (The 'dense'
+        arm is a pack-time decision — ``serve.sparse`` judges it per weight
+        against ``mlp_pack_dense_density`` — so it never reaches the
+        per-call route.)"""
+        if self.mlp_fused_m_max is None or M <= self.mlp_fused_m_max:
+            return "fused"
+        return "two_call"
+
+    def tier(self, plen: int) -> int:
+        """Prefill admission tier for a prompt of ``plen`` tokens — the
+        resolved form of ``serve.engine.length_tier``."""
+        if self.prefill_exact:
+            return plen
+        for t in self.prefill_tiers:
+            if t >= plen:
+                return t
+        return self.cache_len
+
+    @property
+    def paged(self) -> bool:
+        return self.attn_path == "paged"
+
+    # ------------------------------------------------------- serialization
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.as_dict(), indent=indent, sort_keys=True)
+
+    # ------------------------------------------------------------- context
+    def activate(self):
+        """Context manager making this plan the active dispatch source for
+        ``layers.mlp`` / ``kernels.ops`` tracing (see :func:`activate`)."""
+        return activate(self)
+
+    # -------------------------------------------------------------- report
+    def explain(self) -> str:
+        """Render the per-decision rationale — the Eyexam-style report.
+
+        Every decision names its bound (compute/HBM/occupancy) and prints
+        the roofline numbers it was resolved from; the MLP entry carries the
+        same per-layer time model as
+        ``benchmarks/sparse_decode.py::mlp_bound_analysis``.
+        """
+        lines = [
+            f"ServePlan — {self.arch}  "
+            f"(rows={self.rows}, cache_len={self.cache_len}, "
+            f"sync_every={self.sync_every})",
+        ]
+        for d in self.decisions:
+            lines.append(f"  {d.name:<9s}: {d.choice:<28s} [bound: {d.bound}]")
+            lines.append(f"      {d.why}")
+            if d.name == "mlp" and "per_layer_time_s" in d.numbers:
+                t = d.numbers["per_layer_time_s"]
+                s = d.numbers["speedup"]
+                lines.append(
+                    "      per-layer roofline: "
+                    f"dense {t['dense']:.3e}s / "
+                    f"two-call {t['two_call_sparse']:.3e}s / "
+                    f"fused {t['fused_sparse']:.3e}s "
+                    f"(fused x{s['fused_vs_dense']:.2f} vs dense, "
+                    f"x{s['fused_vs_two_call']:.2f} vs two-call)")
+            elif d.numbers:
+                kv = ", ".join(
+                    f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in d.numbers.items()
+                    if isinstance(v, (int, float)))
+                if kv:
+                    lines.append(f"      {kv}")
+        return "\n".join(lines)
+
+
+# ----------------------------------------------------------- active context
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar("serve_plan",
+                                                         default=None)
+
+
+def active_plan() -> Optional[ServePlan]:
+    """The plan currently activated by a serving engine, or None."""
+    return _ACTIVE.get()
+
+
+@contextlib.contextmanager
+def activate(plan: ServePlan):
+    """Make ``plan`` the dispatch source for code traced inside the block."""
+    token = _ACTIVE.set(plan)
+    try:
+        yield plan
+    finally:
+        _ACTIVE.reset(token)
+
+
+def route_matmul(M: int) -> str:
+    """Plan-first matmul dispatch: the active plan's resolved crossover, or
+    the ``core.dataflow`` rule when no plan is active."""
+    pl = active_plan()
+    return pl.matmul_route(M) if pl is not None else dataflow.matmul_path(M)
+
+
+def tile_m(M: int) -> int:
+    pl = active_plan()
+    return pl.bcsc_bm(M) if pl is not None else dataflow.bcsc_tile_m(M)
+
+
+def gemv_bm() -> int:
+    pl = active_plan()
+    return pl.gemv_bm if pl is not None else dataflow.GEMV_BM
+
+
+def route_mlp(M: int, d_ff: int, n_out: int, gated: bool = True) -> str:
+    """Plan-first MLP dispatch ('fused' | 'two_call')."""
+    pl = active_plan()
+    if pl is not None:
+        return pl.mlp_route(M)
+    return dataflow.mlp_path(M, d_ff, n_out, gated=gated)
+
+
+def bcsc_chunk() -> int:
+    """Plan-first BCSC payload chunk stride (pack-time padding unit)."""
+    pl = active_plan()
+    return pl.bcsc_chunk if pl is not None else dataflow.BCSC_CHUNK
+
+
+def page_size_default(cache_len: int) -> int:
+    """Plan-first KV page size (``dataflow.PAGE_SIZE`` clamped to the
+    cache) — the one place the constant becomes a runtime default."""
+    pl = active_plan()
+    if pl is not None:
+        return pl.page_size
+    return min(dataflow.PAGE_SIZE, cache_len)
+
+
+# ------------------------------------------------------------------ resolve
+def _normalize_len_dist(expected_len_dist) -> Tuple[float, int]:
+    """(mean, max) from a {'mean','max'} dict or an iterable of lengths."""
+    if isinstance(expected_len_dist, dict):
+        mx = int(expected_len_dist["max"])
+        mean = float(expected_len_dist.get("mean", mx / 2))
+        return mean, mx
+    lens = [int(x) for x in expected_len_dist]
+    if not lens:
+        raise ValueError("expected_len_dist must be non-empty")
+    return sum(lens) / len(lens), max(lens)
+
+
+def _pow2_tiers(cache_len: int) -> Tuple[int, ...]:
+    """The admission tier ladder: powers of two clamped at cache_len —
+    exactly the buckets ``length_tier`` produces, enumerated once."""
+    tiers = []
+    t = 1
+    while t < cache_len:
+        tiers.append(t)
+        t <<= 1
+    tiers.append(cache_len)
+    return tuple(tiers)
+
+
+def _resolve(cfg, arch: str, rows: int, cache_len: int, *, mean_len: float,
+             page_size: Optional[int], num_pages: Optional[int],
+             attn_path: Optional[str], share_prefix: Optional[bool],
+             kv_quant: Optional[str], sync_every: int,
+             sparsity_stats: Optional[Dict], drain_only: bool,
+             capacity_numbers: Optional[Dict] = None) -> ServePlan:
+    """Shared decision resolution for plan_serve and the legacy shims.
+
+    Every rule consulted here is the SAME ``core.dataflow`` rule the legacy
+    per-call dispatch used, evaluated once — which is what makes the
+    plan-vs-legacy sweep bit-exact.
+    """
+    from repro.models import transformer as tfm
+    from repro.serve import kvcache
+
+    kinds = {k for k, _ in tfm.slot_kinds(cfg)}
+    recurrent = bool(kinds & {"ssm", "rglru"})
+    has_global = "global" in kinds
+    ps = page_size or min(dataflow.PAGE_SIZE, cache_len)
+    max_pages = dataflow.pages_for(cache_len, ps)
+    decisions = []
+
+    # ---- capacity (HBM): rows × cache_len against the budget ----
+    cap_n = dict(capacity_numbers or {})
+    cap_n.setdefault("slot_bytes", kvcache.cache_bytes(cfg, 1, cache_len))
+    decisions.append(Decision(
+        "capacity", f"rows={rows} cache_len={cache_len}", "HBM",
+        f"{rows} dense slot(s) of {cap_n['slot_bytes']} B each"
+        + (f" fit the {cap_n['hbm_budget_bytes']} B budget"
+           if "hbm_budget_bytes" in cap_n else " (caller-fixed geometry)"),
+        cap_n))
+
+    # ---- matmul route (compute): GEMV crossover at the decode width ----
+    decode_route = dataflow.matmul_path(rows)
+    decode_bm = dataflow.bcsc_tile_m(rows)
+    decisions.append(Decision(
+        "matmul", f"{decode_route} (bm={decode_bm}) at M={rows}", "compute",
+        f"M={rows} {'<=' if decode_route == 'gemv' else '>'} "
+        f"GEMV_M_MAX={dataflow.GEMV_M_MAX}: "
+        + ("MXU m-rows would be padding — skip weight blocks via the "
+           "scratch-accumulator GEMV kernel"
+           if decode_route == "gemv" else
+           "enough rows to amortize the index walk per resident block — "
+           "revisit-accumulate GEMM"),
+        {"gemv_m_max": dataflow.GEMV_M_MAX, "decode_bm": decode_bm}))
+
+    # ---- MLP route (HBM): scratch-fit crossover + Eyexam roofline ----
+    stats = sparsity_stats or {}
+    d = cfg.d_model
+    ff = cfg.dense_d_ff if (cfg.moe and cfg.dense_d_ff) else cfg.d_ff
+    fused_max = _fused_m_max(ff, d, cfg.mlp_gated)
+    mlp_route_decode = "fused" if (fused_max is None or rows <= fused_max) \
+        else "two_call"
+    mlp_n = mlp_roofline(cfg,
+                         sparsity=float(stats.get("sparsity", 0.75)),
+                         packing_efficiency=float(
+                             stats.get("packing_efficiency", 0.93)),
+                         bm=decode_bm)
+    mlp_n["fused_m_max"] = fused_max
+    mlp_n["scratch_bytes_at_decode_bm"] = dataflow.fused_mlp_scratch_bytes(
+        decode_bm, ff, d, cfg.mlp_gated)
+    mlp_n["scratch_budget_bytes"] = dataflow.FUSED_MLP_VMEM_BUDGET
+    decisions.append(Decision(
+        "mlp",
+        f"{mlp_route_decode} (fused_m_max="
+        f"{'inf' if fused_max is None else fused_max}, "
+        f"chunk={dataflow.BCSC_CHUNK})", "HBM",
+        "hidden activation stays in VMEM scratch while it fits "
+        f"({mlp_n['scratch_bytes_at_decode_bm']} B <= "
+        f"{mlp_n['scratch_budget_bytes']} B at bm={decode_bm}) — the "
+        "two-call hidden round-trip and extra launches are the terms "
+        "sparsity cannot shrink",
+        mlp_n))
+
+    # ---- attention (occupancy): paged vs contiguous + pool size ----
+    rule_attn = dataflow.attn_path(cache_len, mean_len, ps) \
+        if has_global else "contiguous"
+    attn_pinned = attn_path is not None
+    if attn_path is None:
+        attn_path = rule_attn
+    assert attn_path in ("paged", "contiguous"), attn_path
+    paged = has_global and attn_path == "paged" and not drain_only
+    attn_choice = "paged" if paged else "contiguous"
+    rule_choice = "paged" if (has_global and rule_attn == "paged"
+                              and not drain_only) else "contiguous"
+    expected = dataflow.pages_for(mean_len, ps) * ps
+    if paged:
+        np_ = num_pages or rows * max_pages
+    else:
+        np_ = 0
+    attn_n = {
+        "page_size": ps, "max_pages_per_row": max_pages, "num_pages": np_,
+        "expected_resident_tokens": expected, "cache_len": cache_len,
+        "occupancy_threshold": dataflow.PAGED_OCCUPANCY_MAX,
+        "tokens_resident_paged": rows * dataflow.pages_for(mean_len, ps) * ps,
+        "tokens_resident_dense": dataflow.dense_kv_tokens(rows, cache_len),
+    }
+    attn_n["rule_choice"] = rule_choice
+    if not has_global:
+        why = ("no global-attention layers: ring/recurrent state is already "
+               "bounded — indirection would reclaim nothing")
+    elif drain_only:
+        why = ("drain engine (DecodeEngine): dense per-slot cache by "
+               "construction — paging applies to the streaming scheduler")
+    elif attn_pinned and attn_choice != rule_choice:
+        # a caller-pinned choice must not be explained with the rule's
+        # (contradicting) rationale — record the pin and the rule's verdict
+        why = (f"pinned '{attn_choice}' by caller — the occupancy rule "
+               f"would pick '{rule_choice}' (expected resident {expected} "
+               f"tokens vs {dataflow.PAGED_OCCUPANCY_MAX:.2f}·cache_len="
+               f"{dataflow.PAGED_OCCUPANCY_MAX * cache_len:.0f})")
+    elif paged:
+        why = (f"expected resident {expected} tokens <= "
+               f"{dataflow.PAGED_OCCUPANCY_MAX:.2f}·cache_len="
+               f"{dataflow.PAGED_OCCUPANCY_MAX * cache_len:.0f}: block-table "
+               "indirection converts stranded HBM into extra batch rows")
+    else:
+        why = ("occupancy too high (or cache shorter than two pages) for "
+               "page indirection to reclaim anything — contiguous ring/dense "
+               "slots")
+    decisions.append(Decision("attention", attn_choice, "occupancy", why,
+                              attn_n))
+
+    if share_prefix is None:
+        share_prefix = cfg.num_codebooks == 1
+    share_prefix = bool(paged and share_prefix and cfg.num_codebooks == 1)
+
+    # ---- KV quant (HBM): cache-stream share of the decode step ----
+    rule_kv = dataflow.kv_quant_path(rows, cache_len, ps) if paged else "fp"
+    kv_pinned = kv_quant is not None
+    if kv_quant is None:
+        kv_quant = rule_kv
+    assert kv_quant in dataflow.KV_QUANT_DTYPES, kv_quant
+    kv_quant = kv_quant if paged else "fp"
+    w_bytes = cfg.param_count(active_only=True) * 2
+    c_bytes = kvcache.cache_bytes(cfg, max(rows, 1), cache_len)
+    cache_share = c_bytes / max(w_bytes + c_bytes, 1)
+    kv_n = {
+        "kv_quant_min_rows": dataflow.KV_QUANT_MIN_ROWS, "rows": rows,
+        "weight_stream_bytes": w_bytes, "cache_stream_bytes": c_bytes,
+        "cache_share": cache_share,
+        "int8_step_speedup": (w_bytes + c_bytes) / (w_bytes + c_bytes / 2),
+        "rule_choice": rule_kv,
+    }
+    if kv_pinned and kv_quant != rule_kv:
+        kv_why = (f"pinned '{kv_quant}' by caller — the cache-bound rule "
+                  f"would pick '{rule_kv}' (cache share {cache_share:.2f} "
+                  f"at rows={rows} vs KV_QUANT_MIN_ROWS="
+                  f"{dataflow.KV_QUANT_MIN_ROWS})")
+    else:
+        kv_why = (
+            f"decode step streams the whole resident cache: cache share "
+            f"{cache_share:.2f} of HBM bytes at rows={rows} "
+            + (f">= KV_QUANT_MIN_ROWS={dataflow.KV_QUANT_MIN_ROWS} — int8 "
+               "pages halve the dominant stream" if kv_quant == "int8" else
+               "— below the cache-bound regime (or unpaged): per-page scale "
+               "bookkeeping would outweigh the payload win"))
+    decisions.append(Decision("kv_quant", kv_quant, "HBM", kv_why, kv_n))
+
+    # ---- prefill schedule (compute): pow2 tiers vs exact lengths ----
+    tiers = () if recurrent else _pow2_tiers(cache_len)
+    decisions.append(Decision(
+        "prefill",
+        "exact-length tiers" if recurrent else
+        f"pow2 tiers ({len(tiers)} buckets <= {cache_len})", "compute",
+        ("recurrent state (ssm/rglru): pad tokens would pollute the carried "
+         "state, so admission buckets by exact length" if recurrent else
+         "causality makes right-padding exact, so admission buckets to the "
+         "next power of two — trace count stays logarithmic in prompt-"
+         "length spread while batched prefill amortizes over the cohort"),
+        {"n_tiers": len(tiers), "sync_every": sync_every}))
+
+    return ServePlan(
+        arch=arch, rows=rows, cache_len=cache_len, sync_every=sync_every,
+        gemv_m_max=dataflow.GEMV_M_MAX, gemv_bm=dataflow.GEMV_BM,
+        mlp_fused_m_max=fused_max,
+        mlp_pack_dense_density=dataflow.DENSE_BLOCK_DENSITY,
+        bcsc_chunk=dataflow.BCSC_CHUNK,
+        attn_path=attn_choice, page_size=ps, max_pages=max_pages,
+        num_pages=np_, share_prefix=share_prefix, kv_quant=kv_quant,
+        prefill_exact=recurrent, prefill_tiers=tiers,
+        decisions=tuple(decisions))
+
+
+def plan_serve(cfg, *, hbm_budget_bytes: int, expected_batch: int,
+               expected_len_dist, sparsity_stats: Optional[Dict] = None,
+               page_size: Optional[int] = None,
+               num_pages: Optional[int] = None,
+               attn_path: Optional[str] = None,
+               share_prefix: Optional[bool] = None,
+               kv_quant: Optional[str] = None,
+               sync_every: int = 8, arch: Optional[str] = None) -> ServePlan:
+    """Resolve a full ServePlan from (model cfg, serving budget).
+
+    ``expected_len_dist`` is {'mean': …, 'max': …} (total tokens per request,
+    prompt + generation) or an iterable of expected lengths; ``cache_len`` is
+    its max and the expected occupancy its mean. ``expected_batch`` rows are
+    provisioned, clamped to what ``hbm_budget_bytes`` can hold (at least one
+    row must fit — mirroring the engines' refusal on a zero-slot budget).
+    ``sparsity_stats`` ({'sparsity', 'packing_efficiency', 'block_density'},
+    e.g. from ``serve.sparse.sparsify_mlp_params``) feeds the MLP roofline.
+    The keyword overrides pin individual decisions (recorded as such); by
+    default every decision comes from the ``core.dataflow`` rule it
+    centralizes.
+    """
+    from repro.serve import kvcache
+
+    mean_len, cache_len = _normalize_len_dist(expected_len_dist)
+    slot_bytes = kvcache.cache_bytes(cfg, 1, cache_len)
+    fit_rows = int(hbm_budget_bytes // max(slot_bytes, 1))
+    if fit_rows < 1:
+        raise ValueError(
+            f"hbm_budget_bytes={hbm_budget_bytes} cannot hold one "
+            f"(1, {cache_len}) cache slot ({slot_bytes} B) — shrink the "
+            "expected max length, shard over more chips, or raise the "
+            "budget")
+    rows = max(1, min(int(expected_batch), fit_rows))
+    ps = page_size or min(dataflow.PAGE_SIZE, cache_len)
+    if num_pages is None:
+        # pool sized for the expected occupancy plus one growth page per
+        # row, floored at one worst-case request and capped at full
+        # provisioning — the occupancy regime paging exists for
+        max_pages = dataflow.pages_for(cache_len, ps)
+        want = rows * (dataflow.pages_for(mean_len, ps) + 1)
+        num_pages = min(max(max_pages, want), rows * max_pages)
+    return _resolve(
+        cfg, arch or getattr(cfg, "name", type(cfg).__name__), rows,
+        cache_len, mean_len=mean_len, page_size=ps, num_pages=num_pages,
+        attn_path=attn_path, share_prefix=share_prefix, kv_quant=kv_quant,
+        sync_every=sync_every, sparsity_stats=sparsity_stats,
+        drain_only=False,
+        capacity_numbers={
+            "hbm_budget_bytes": int(hbm_budget_bytes),
+            "expected_batch": int(expected_batch),
+            "expected_mean_len": mean_len, "slot_bytes": slot_bytes,
+            "rows_fitting_budget": fit_rows,
+        })
+
+
+# ------------------------------------------------------------- legacy shims
+def plan_for_engine(cfg, *, slots: int, cache_len: int,
+                    sync_every: int = 8) -> ServePlan:
+    """Single-decision plan for the drain engine's legacy kwargs
+    (``DecodeEngine(cfg, params, slots=…, cache_len=…)``): dense per-slot
+    cache, contiguous attention, every dispatch threshold resolved from the
+    same ``core.dataflow`` rules the old per-call path consulted."""
+    return _resolve(
+        cfg, getattr(cfg, "name", type(cfg).__name__), slots, cache_len,
+        mean_len=cache_len / 2, page_size=None, num_pages=None,
+        attn_path=None, share_prefix=None, kv_quant=None,
+        sync_every=sync_every, sparsity_stats=None, drain_only=True)
+
+
+def plan_for_scheduler(cfg, *, rows: int, cache_len: int, page_size: int = 0,
+                       num_pages: int = 0, attn_path: Optional[str] = None,
+                       share_prefix: Optional[bool] = None,
+                       kv_quant: Optional[str] = None,
+                       sync_every: int = 8) -> ServePlan:
+    """Single-decision plan from the streaming scheduler's legacy kwargs —
+    exactly the resolution ``ContinuousBatchingScheduler.__init__`` used to
+    perform inline (page_size default, occupancy rule at mean = cache_len/2,
+    full pool provisioning, CoW and KV-quant rules)."""
+    return _resolve(
+        cfg, getattr(cfg, "name", type(cfg).__name__), rows, cache_len,
+        mean_len=cache_len / 2, page_size=page_size or None,
+        num_pages=num_pages or None, attn_path=attn_path,
+        share_prefix=share_prefix, kv_quant=kv_quant,
+        sync_every=sync_every, sparsity_stats=None, drain_only=False)
+
+
+# -------------------------------------------------------------- snapshotting
+def snapshot_plan(arch: str) -> ServePlan:
+    """The canonical resolved plan for a seed config — fixed budget/shape
+    inputs so the serialized plan is deterministic. scripts/golden_plans.json
+    records these; the perf-guard check ``plan-snapshot-stable`` (and
+    tests/test_plan.py) gate drift."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    return plan_serve(cfg, hbm_budget_bytes=SNAPSHOT_BUDGET_BYTES,
+                      expected_batch=SNAPSHOT_BATCH,
+                      expected_len_dist=dict(SNAPSHOT_LEN_DIST),
+                      sparsity_stats=dict(SNAPSHOT_SPARSITY), arch=arch)
+
+
+# ----------------------------------------------------------------------- CLI
+def _parse_bytes(s: str) -> int:
+    s = s.strip()
+    units = {"kib": 1 << 10, "mib": 1 << 20, "gib": 1 << 30,
+             "kb": 10 ** 3, "mb": 10 ** 6, "gb": 10 ** 9, "b": 1}
+    low = s.lower()
+    for suffix, mult in units.items():
+        if low.endswith(suffix):
+            return int(float(low[: -len(suffix)]) * mult)
+    return int(float(s))
+
+
+def _resolve_arch_name(name: str) -> str:
+    """Accept registry ids ('gemma2-2b'), module names ('gemma2_2b'), and
+    either with a '-reduced' suffix."""
+    from repro.configs import _ARCH_MODULES
+    suffix = ""
+    base = name
+    if name.endswith("-reduced") or name.endswith("_reduced"):
+        base, suffix = name[:-len("-reduced")], "-reduced"
+    if base in _ARCH_MODULES:
+        return base + suffix
+    for reg, mod in _ARCH_MODULES.items():
+        if base in (mod, reg.replace("-", "_")):
+            return reg + suffix
+    raise KeyError(f"unknown arch {name!r}; known: {list(_ARCH_MODULES)}")
+
+
+def main(argv=None) -> int:
+    import argparse
+    from repro.configs import get_config
+
+    ap = argparse.ArgumentParser(
+        description="Resolve a ServePlan and print its Eyexam-style "
+                    "per-decision rationale.")
+    ap.add_argument("--cfg", required=True,
+                    help="arch id (gemma2-2b) or module name (gemma2_2b)")
+    ap.add_argument("--hbm", default="2GiB",
+                    help="HBM budget (e.g. 2GiB, 512MiB, 16e9)")
+    ap.add_argument("--batch", type=int, default=SNAPSHOT_BATCH,
+                    help="expected decode batch width")
+    ap.add_argument("--mean-len", type=int,
+                    default=SNAPSHOT_LEN_DIST["mean"],
+                    help="expected mean total tokens per request")
+    ap.add_argument("--max-len", type=int, default=SNAPSHOT_LEN_DIST["max"],
+                    help="max total tokens per request (the cache length)")
+    ap.add_argument("--sparsity", type=float,
+                    default=SNAPSHOT_SPARSITY["sparsity"])
+    ap.add_argument("--json", action="store_true",
+                    help="print plan.to_json() instead of the report")
+    args = ap.parse_args(argv)
+
+    arch = _resolve_arch_name(args.cfg)
+    plan = plan_serve(
+        get_config(arch),
+        hbm_budget_bytes=_parse_bytes(args.hbm),
+        expected_batch=args.batch,
+        expected_len_dist={"mean": args.mean_len, "max": args.max_len},
+        sparsity_stats={"sparsity": args.sparsity,
+                        "packing_efficiency":
+                            SNAPSHOT_SPARSITY["packing_efficiency"]},
+        arch=arch)
+    print(plan.to_json() if args.json else plan.explain())
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dataflow
+from repro.core import dataflow, plan as _plan
 from repro.core.sparsity import BCSCMatrix
 from repro.kernels import bcsc_matmul as _bcsc
 from repro.kernels import bcsc_mlp as _bmlp
@@ -74,14 +74,18 @@ def prepare_bcsc(m: BCSCMatrix):
 
 def _bcsc_apply(x, blocks, row_ids, col_ids, *, n_out: int, bm: int,
                 bias, activation, out_dtype, interpret):
-    """Shared GEMV/GEMM dispatch over prepared BCSC vectors (dataflow rule)."""
+    """Shared GEMV/GEMM dispatch over prepared BCSC vectors.
+
+    The route/tile come from the active ServePlan when a serving engine has
+    one activated (core.plan.route_matmul/tile_m), else from the
+    core.dataflow rule — the same resolved crossover either way."""
     M = x.shape[0]
     if bm <= 0:
-        bm = dataflow.bcsc_tile_m(M)
+        bm = _plan.tile_m(M)
     xp = _pad_to(x, bm, 0)
     bp = None if bias is None else _pad_to(bias.reshape(1, n_out),
                                            blocks.shape[2], 1)
-    if dataflow.matmul_path(M) == "gemv" and bm == dataflow.GEMV_BM:
+    if _plan.route_matmul(M) == "gemv" and bm == _plan.gemv_bm():
         out = _bcsc.bcsc_gemv_raw(xp, blocks.astype(x.dtype), row_ids,
                                   col_ids, n_out=n_out, bm=bm, bias=bp,
                                   activation=activation, out_dtype=out_dtype,
@@ -179,7 +183,7 @@ def bcsc_mlp_packed(x, gate_packed, up_packed, down_packed, *, d_ff: int,
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     M = x.shape[0]
-    bm = dataflow.bcsc_tile_m(M)
+    bm = _plan.tile_m(M)
     xp = _pad_to(x, bm, 0)
     gated = up_packed is not None
     if counts is None:

@@ -11,6 +11,7 @@ import time
 import jax
 
 from repro.configs import ARCH_NAMES, get_config
+from repro.core import plan as plan_lib
 from repro.models import transformer as tfm
 from repro.serve.engine import DecodeEngine, Request
 
@@ -40,8 +41,9 @@ def main():
                     max_new=args.max_new)
             for i in range(args.requests)]
 
-    engine = DecodeEngine(cfg, params, slots=args.slots,
-                          cache_len=args.cache_len,
+    engine = DecodeEngine(cfg, params,
+                          plan_lib.plan_for_engine(cfg, slots=args.slots,
+                                                   cache_len=args.cache_len),
                           temperature=args.temperature)
     t0 = time.time()
     done = engine.run(reqs, rng=jax.random.PRNGKey(args.seed + 1))

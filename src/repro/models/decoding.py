@@ -104,10 +104,21 @@ def is_quantized_entry(entry) -> bool:
 
 
 def init_paged_cache(cfg, rows: int, cache_len: int, num_pages: int,
-                     page_size: int, kv_quant: str = "fp"):
+                     page_size: Optional[int] = None,
+                     kv_quant: Optional[str] = None):
     """Like init_cache, but 'global' entries become (num_pages, page_size,
     KV, D) pools; every other kind keeps its (rows, ...) per-row state.
-    ``kv_quant='int8'`` stores pool payloads int8 with per-page scales."""
+    ``kv_quant='int8'`` stores pool payloads int8 with per-page scales.
+
+    ``page_size``/``kv_quant`` default from the active ServePlan when a
+    serving engine has one activated (core.plan — the single owner of the
+    PAGE_SIZE/quant decisions), else from the core.dataflow constants."""
+    from repro.core import plan as _plan
+    if page_size is None:
+        page_size = _plan.page_size_default(cache_len)
+    if kv_quant is None:
+        pl = _plan.active_plan()
+        kv_quant = pl.kv_quant if pl is not None else "fp"
     kinds = tfm.slot_kinds(cfg)
     period = tfm.scan_period(cfg)
     nper = tfm.num_scan_periods(cfg)

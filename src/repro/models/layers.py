@@ -309,8 +309,12 @@ def mlp(params, x, cfg, d_ff: Optional[int] = None):
     projection of the layer is packed and the dataflow rule allows it, the
     whole MLP collapses into the fused bcsc_mlp megakernel — one pallas_call,
     hidden activation in VMEM scratch, per-layer actual nnzb (never the
-    padded stack count)."""
-    from repro.core import dataflow as _df
+    padded stack count).
+
+    Dispatch reads the active ServePlan (core.plan — the engines activate it
+    around their jitted programs) and falls back to the core.dataflow rule
+    when none is active; both resolve to the same crossover."""
+    from repro.core import plan as _plan
     from repro.kernels.ops import is_packed
     act_name = "silu" if cfg.mlp_act == "silu" else "gelu"
     act = jax.nn.silu if cfg.mlp_act == "silu" else \
@@ -321,7 +325,7 @@ def mlp(params, x, cfg, d_ff: Optional[int] = None):
     names = ("wg", "wu", "wd") if cfg.mlp_gated else ("w1", "w2")
     if all(is_packed(params[n]) for n in names):
         B, S, _ = x.shape
-        if _df.mlp_path(B * S, ff, d, gated=cfg.mlp_gated) == "fused":
+        if _plan.route_mlp(B * S, ff, d, gated=cfg.mlp_gated) == "fused":
             from repro.kernels import ops as _ops
             up2 = params["wu"] if cfg.mlp_gated else None
             y = _ops.bcsc_mlp_packed(

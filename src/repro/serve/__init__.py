@@ -1,3 +1,5 @@
-from repro.serve import engine, kvcache, paging, scheduler, sparse
+from repro.serve import engine, facade, kvcache, paging, scheduler, sparse
+from repro.serve.facade import LLM
 
-__all__ = ["engine", "kvcache", "paging", "scheduler", "sparse"]
+__all__ = ["LLM", "engine", "facade", "kvcache", "paging", "scheduler",
+           "sparse"]

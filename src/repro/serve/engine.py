@@ -14,13 +14,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decoding, transformer as tfm
+from repro.core import plan as plan_lib
+from repro.models import decoding
 from repro.serve import kvcache
 
 
@@ -179,30 +181,73 @@ class DecodeEngine:
     ``phase_stats`` (reset per run) reports the prefill/decode wall-clock
     split, batch counts, and real-vs-padded prefill token counts — the
     admission-amortization evidence benchmarks/sparse_decode.py records.
+
+    Construction is plan-driven (ISSUE 5): pass a ``core.plan.ServePlan``
+    (``plan_for_engine`` for explicit slots/cache_len) and the engine reads
+    slots, cache_len, sync cadence, and the prefill tier ladder from it,
+    activating the plan around its jitted programs so the MLP/matmul kernel
+    routes come from the same resolved crossovers. The legacy
+    ``slots=…, cache_len=…`` kwargs remain as a deprecated shim building
+    the identical single-decision plan.
     """
 
-    def __init__(self, cfg, params, slots: int, cache_len: int,
+    def __init__(self, cfg, params, plan: Optional[plan_lib.ServePlan] = None,
+                 *, slots: Optional[int] = None,
+                 cache_len: Optional[int] = None,
                  eos_id: int = 1, temperature: float = 0.0,
-                 sync_every: int = 8):
-        if slots < 1:
-            # kvcache.max_slots returns 0 when one slot alone exceeds the HBM
-            # budget — refuse here instead of letting the zero-row cache OOM
-            # or produce empty batches downstream
+                 sync_every: Optional[int] = None):
+        if plan is not None and not (slots is None and cache_len is None):
+            # a plan plus legacy geometry kwargs would silently lose the
+            # kwargs (the plan wins) — refuse instead of surprising the
+            # caller mid-migration; sync_every alone stays an honored
+            # per-engine override
+            raise TypeError(
+                "pass either plan= or the legacy slots=/cache_len= kwargs, "
+                "not both (the plan already fixes the geometry)")
+        if plan is None:
+            # legacy kwarg construction: build the single-decision plan the
+            # old inline dispatch amounted to (same core.dataflow rules, so
+            # behavior is bit-identical — tests/test_plan.py asserts it)
+            if slots is None or cache_len is None:
+                raise TypeError(
+                    "DecodeEngine needs a ServePlan (core.plan.plan_serve / "
+                    "plan_for_engine) or the legacy slots=/cache_len= kwargs")
+            warnings.warn(
+                "constructing DecodeEngine from slots=/cache_len= kwargs is "
+                "deprecated — pass plan=core.plan.plan_for_engine(...) or "
+                "serve through repro.serve.LLM",
+                DeprecationWarning, stacklevel=2)
+            if slots < 1:
+                # kvcache.max_slots returns 0 when one slot alone exceeds
+                # the HBM budget — refuse here instead of letting the
+                # zero-row cache OOM or produce empty batches downstream
+                raise ValueError(
+                    f"slots must be >= 1, got {slots}: a (1, {cache_len}) "
+                    "cache slot does not fit the HBM budget "
+                    "(kvcache.max_slots == 0) — shrink cache_len, shard "
+                    "over more chips, or raise the budget fraction")
+            plan = plan_lib.plan_for_engine(
+                cfg, slots=slots, cache_len=cache_len,
+                sync_every=8 if sync_every is None else sync_every)
+        if plan.rows < 1:
             raise ValueError(
-                f"slots must be >= 1, got {slots}: a (1, {cache_len}) cache "
-                "slot does not fit the HBM budget (kvcache.max_slots == 0) — "
-                "shrink cache_len, shard over more chips, or raise the "
-                "budget fraction")
+                f"slots must be >= 1, got {plan.rows}: a "
+                f"(1, {plan.cache_len}) cache slot does not fit the HBM "
+                "budget (kvcache.max_slots == 0) — shrink cache_len, shard "
+                "over more chips, or raise the budget fraction")
         self.cfg = cfg
         self.params = params
-        self.slots = slots
-        self.cache_len = cache_len
+        self.plan = plan
+        self.slots = plan.rows
+        self.cache_len = plan.cache_len
         self.eos_id = eos_id
         self.temperature = temperature
-        self.sync_every = max(1, sync_every)
+        self.sync_every = max(1, plan.sync_every if sync_every is None
+                              else sync_every)
         self.host_syncs = 0                  # device->host fetches (per chunk)
-        kinds = {k for k, _ in tfm.slot_kinds(cfg)}
-        self._recurrent = bool(kinds & {"ssm", "rglru"})
+        # mirror of plan.prefill_exact (tests introspect it; tier dispatch
+        # itself goes through plan.tier)
+        self._recurrent = plan.prefill_exact
         self.phase_stats: Dict = {}
         # the decode state (arg 1: cache + sampling state) is donated — the
         # cache buffer is updated in place step over step, never copied
@@ -243,7 +288,8 @@ class DecodeEngine:
         return refill
 
     def _tier(self, plen: int) -> int:
-        return length_tier(plen, self._recurrent, self.cache_len)
+        # the plan's resolved tier ladder (== length_tier by construction)
+        return self.plan.tier(plen)
 
     def _make_chunk_fn(self) -> Callable:
         """sync_every fused decode steps: sample → track EOS/budget → step."""
@@ -271,6 +317,12 @@ class DecodeEngine:
         return (cache, last, pos, live, budget)
 
     def run(self, requests: List[Request], rng=None) -> List[Request]:
+        # the plan is the dispatch source for everything traced below
+        # (layers.mlp / kernels.ops read it instead of re-deriving rules)
+        with plan_lib.activate(self.plan):
+            return self._run(requests, rng)
+
+    def _run(self, requests: List[Request], rng=None) -> List[Request]:
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         queue = list(requests)
         done: List[Request] = []

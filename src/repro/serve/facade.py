@@ -1,0 +1,138 @@
+"""``repro.serve.LLM`` — the single serving front door (ISSUE 5).
+
+The two serving engines grew divergent constructor kwarg piles
+(``DecodeEngine(slots=…, cache_len=…)`` vs
+``ContinuousBatchingScheduler(rows=…, page_size=…, num_pages=…,
+attn_path=…, kv_quant=…)``). The facade replaces both entry points with one
+object resolved around a :class:`repro.core.plan.ServePlan`:
+
+    plan = core.plan.plan_serve(cfg, hbm_budget_bytes=…, expected_batch=…,
+                                expected_len_dist={"mean": …, "max": …})
+    llm = repro.serve.LLM(cfg, params, plan)
+    done = llm.generate([(prompt, max_new), ...])          # drain semantics
+    done = llm.stream(requests, on_token=callback)         # continuous batch
+
+* :meth:`generate` drains a fixed request list to completion on the dense
+  slot engine (``serve.engine.DecodeEngine``) — the batch-throughput path.
+* :meth:`stream` serves arriving requests with continuous batching over the
+  plan's paged (or contiguous) KV layout
+  (``serve.scheduler.ContinuousBatchingScheduler``) and per-token callbacks
+  — the latency/goodput path.
+
+Both wrapped engines read every dispatch decision from the same plan, so
+switching between the two entry points can never flip a kernel route
+mid-deployment. ``plan=None`` resolves a conservative default plan (half
+the per-chip HBM, modest batch) — explicit plans are the production path.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+from repro.core import eyexam, plan as plan_lib
+from repro.serve.engine import DecodeEngine, Request
+from repro.serve.scheduler import ContinuousBatchingScheduler, StreamRequest
+
+DEFAULT_LEN_DIST = {"mean": 256, "max": 512}
+DEFAULT_BATCH = 8
+
+
+RequestLike = Union[Request, StreamRequest, Dict, tuple]
+
+
+class LLM:
+    """One model + one resolved ServePlan, served two ways.
+
+    ``eos_id``/``temperature`` are request-stream sampling semantics (not
+    dispatch decisions), so they stay constructor kwargs; everything that
+    picks a kernel path, a memory layout, or a capacity lives in ``plan``.
+    Engines are built lazily and reused across calls (their jitted programs
+    and donated cache buffers are warm after the first call).
+    """
+
+    def __init__(self, cfg, params, plan: Optional[plan_lib.ServePlan] = None,
+                 *, eos_id: int = 1, temperature: float = 0.0):
+        if plan is None:
+            plan = plan_lib.plan_serve(
+                cfg,
+                hbm_budget_bytes=int(eyexam.HBM_CAP // 2),
+                expected_batch=DEFAULT_BATCH,
+                expected_len_dist=dict(DEFAULT_LEN_DIST))
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self._engine: Optional[DecodeEngine] = None
+        self._scheduler: Optional[ContinuousBatchingScheduler] = None
+        self._last_run = None                # engine behind the last call
+
+    # ------------------------------------------------------------- helpers
+    def explain(self) -> str:
+        """The plan's per-decision Eyexam rationale."""
+        return self.plan.explain()
+
+    def _normalize(self, requests: Sequence[RequestLike], cls,
+                   on_token: Optional[Callable] = None) -> List:
+        """Accept engine Request/StreamRequest objects, dicts, or
+        (prompt, max_new) tuples; auto-assign rids by input position."""
+        out = []
+        for i, r in enumerate(requests):
+            if isinstance(r, cls):
+                pass
+            elif isinstance(r, (Request, StreamRequest)):
+                r = cls(rid=r.rid, prompt=list(r.prompt), max_new=r.max_new)
+            elif isinstance(r, dict):
+                r = cls(**{"rid": i, **r})
+            else:
+                prompt, max_new = r
+                r = cls(rid=i, prompt=list(prompt), max_new=int(max_new))
+            if cls is StreamRequest and on_token is not None \
+                    and r.on_token is None:
+                r.on_token = on_token
+            out.append(r)
+        if len({r.rid for r in out}) != len(out):
+            raise ValueError("request rids must be unique")
+        return out
+
+    # ------------------------------------------------------------- serving
+    def generate(self, requests: Sequence[RequestLike], rng=None
+                 ) -> List[Request]:
+        """Drain ``requests`` to completion (batch-throughput semantics).
+
+        Wraps the dense-slot ``DecodeEngine``; returns the finished request
+        objects in input order (``r.out`` holds the generated tokens).
+        """
+        if self._engine is None:
+            self._engine = DecodeEngine(
+                self.cfg, self.params, self.plan, eos_id=self.eos_id,
+                temperature=self.temperature)
+        self._last_run = self._engine
+        done = self._engine.run(self._normalize(requests, Request), rng=rng)
+        return sorted(done, key=lambda r: r.rid)
+
+    def stream(self, requests: Sequence[RequestLike],
+               on_token: Optional[Callable] = None, rng=None
+               ) -> List[StreamRequest]:
+        """Serve ``requests`` with continuous batching + streaming.
+
+        Wraps the paged ``ContinuousBatchingScheduler`` (requests may carry
+        ``arrival`` stamps and per-request ``on_token`` callbacks; a
+        call-level ``on_token(request, token)`` applies to any request
+        without its own). Returns finished requests in input order.
+        """
+        if self._scheduler is None:
+            self._scheduler = ContinuousBatchingScheduler(
+                self.cfg, self.params, self.plan, eos_id=self.eos_id,
+                temperature=self.temperature)
+        reqs = self._normalize(requests, StreamRequest, on_token=on_token)
+        self._last_run = self._scheduler
+        done = self._scheduler.run(reqs, rng=rng)
+        return sorted(done, key=lambda r: r.rid)
+
+    # ------------------------------------------------------------- reports
+    @property
+    def phase_stats(self) -> Dict:
+        """Phase stats of the most recently run entry point (prefill/decode
+        split, paging/sharing counters)."""
+        return self._last_run.phase_stats if self._last_run is not None \
+            else {}

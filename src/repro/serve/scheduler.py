@@ -42,16 +42,17 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dataflow
-from repro.models import decoding, transformer as tfm
+from repro.core import dataflow, plan as plan_lib
+from repro.models import decoding
 from repro.serve import kvcache, paging
-from repro.serve.engine import build_tier_batch, length_tier, make_decode_step
+from repro.serve.engine import build_tier_batch, make_decode_step
 
 
 @dataclasses.dataclass
@@ -84,69 +85,94 @@ class StreamRequest:
 class ContinuousBatchingScheduler:
     """Streaming continuous-batching loop over paged (or contiguous) KV.
 
-    ``rows`` is the decode batch width (the engine's ``slots``);
-    ``num_pages`` sizes the shared page pool — provisioning fewer pages than
+    Construction is plan-driven (ISSUE 5): pass a resolved
+    ``core.plan.ServePlan`` (``plan_serve`` for budget-derived plans,
+    ``plan_for_scheduler`` for explicit geometry) and every dispatch
+    decision — rows, cache_len, page_size, pool size, paged vs contiguous,
+    CoW sharing, KV quant, the prefill tier ladder — is read from it; the
+    plan is activated around the jitted programs so ``layers.mlp`` and the
+    kernels read the same resolved crossovers. The legacy kwarg pile
+    (``rows=…, cache_len=…, page_size=…, num_pages=…, attn_path=…,
+    kv_quant=…``) still works as a deprecated shim that builds the identical
+    single-decision plan. Provisioning fewer pages than
     ``rows × ceil(cache_len/page_size)`` is the point of paging (short
     requests stop stranding worst-case HBM), with preemption as the safety
-    valve. ``attn_path`` overrides the dataflow dispatch ('paged' |
-    'contiguous'); default asks ``core.dataflow.attn_path`` at the expected
-    occupancy (mean request length ≈ half the slot) and falls back to
-    contiguous for archs with no global-attention layers (ring/recurrent
-    state is already bounded — nothing to page).
+    valve; archs with no global-attention layers resolve to contiguous
+    (ring/recurrent state is already bounded — nothing to page).
     """
 
-    def __init__(self, cfg, params, rows: int, cache_len: int, *,
+    def __init__(self, cfg, params, plan: Optional[plan_lib.ServePlan] = None,
+                 *, rows: Optional[int] = None,
+                 cache_len: Optional[int] = None,
                  page_size: int = 0, num_pages: int = 0, eos_id: int = 1,
-                 temperature: float = 0.0, sync_every: int = 8,
+                 temperature: float = 0.0, sync_every: Optional[int] = None,
                  attn_path: Optional[str] = None,
                  share_prefix: Optional[bool] = None,
                  kv_quant: Optional[str] = None):
-        if rows < 1:
+        legacy_kwargs = (rows is not None or cache_len is not None
+                         or page_size or num_pages or attn_path is not None
+                         or share_prefix is not None or kv_quant is not None)
+        if plan is not None and legacy_kwargs:
+            # a plan plus legacy dispatch kwargs would silently lose the
+            # kwargs (the plan wins) — refuse instead of surprising the
+            # caller mid-migration; sync_every alone stays an honored
+            # per-engine override
+            raise TypeError(
+                "pass either plan= or the legacy rows=/cache_len=/"
+                "page_size=/num_pages=/attn_path=/share_prefix=/kv_quant= "
+                "kwargs, not both (the plan already fixes every decision)")
+        if plan is None:
+            # legacy kwarg pile: resolve it through the same shim the old
+            # inline dispatch moved to (core.plan.plan_for_scheduler applies
+            # the identical dataflow rules once) and deprecate the spelling
+            if rows is None or cache_len is None:
+                raise TypeError(
+                    "ContinuousBatchingScheduler needs a ServePlan "
+                    "(core.plan.plan_serve / plan_for_scheduler) or the "
+                    "legacy rows=/cache_len= kwargs")
+            warnings.warn(
+                "constructing ContinuousBatchingScheduler from rows=/"
+                "cache_len=/page_size=/... kwargs is deprecated — pass "
+                "plan=core.plan.plan_for_scheduler(...) or serve through "
+                "repro.serve.LLM",
+                DeprecationWarning, stacklevel=2)
+            if rows < 1:
+                raise ValueError(
+                    f"rows must be >= 1, got {rows}: a (1, {cache_len}) "
+                    "cache row does not fit the HBM budget "
+                    "(kvcache.max_slots == 0)")
+            plan = plan_lib.plan_for_scheduler(
+                cfg, rows=rows, cache_len=cache_len, page_size=page_size,
+                num_pages=num_pages, attn_path=attn_path,
+                share_prefix=share_prefix, kv_quant=kv_quant,
+                sync_every=8 if sync_every is None else sync_every)
+        if plan.rows < 1:
             raise ValueError(
-                f"rows must be >= 1, got {rows}: a (1, {cache_len}) cache "
-                "row does not fit the HBM budget (kvcache.max_slots == 0)")
+                f"rows must be >= 1, got {plan.rows}: a "
+                f"(1, {plan.cache_len}) cache row does not fit the HBM "
+                "budget (kvcache.max_slots == 0)")
         self.cfg = cfg
         self.params = params
-        self.rows = rows
-        self.cache_len = cache_len
+        self.plan = plan
+        self.rows = plan.rows
+        self.cache_len = plan.cache_len
         self.eos_id = eos_id
         self.temperature = temperature
-        self.sync_every = max(1, sync_every)
-        self.page_size = page_size or min(dataflow.PAGE_SIZE, cache_len)
-        kinds = {k for k, _ in tfm.slot_kinds(cfg)}
-        self._recurrent = bool(kinds & {"ssm", "rglru"})
-        has_global = "global" in kinds
-        if attn_path is None:
-            attn_path = dataflow.attn_path(cache_len, cache_len / 2,
-                                           self.page_size) \
-                if has_global else "contiguous"
-        assert attn_path in ("paged", "contiguous"), attn_path
-        self.paged = has_global and attn_path == "paged"
-        self.max_pages = dataflow.pages_for(cache_len, self.page_size)
+        self.sync_every = max(1, plan.sync_every if sync_every is None
+                              else sync_every)
+        # every dispatch decision below reads the plan — the PAGE_SIZE /
+        # occupancy / CoW / KV-quant rules were resolved exactly once
+        self.page_size = plan.page_size
+        self.paged = plan.paged
+        self.max_pages = plan.max_pages
         if self.paged:
-            # default: full provisioning (every row can hold cache_len);
-            # passing fewer pages is the point of paging — admission checks
-            # per request that pages_for(prompt + max_new) fits the pool
-            self.num_pages = num_pages or rows * self.max_pages
+            self.num_pages = plan.num_pages
             self.pager = paging.PageAllocator(self.num_pages, self.page_size)
         else:
             self.num_pages = 0
             self.pager = None
-        # CoW prefix sharing rides the prefix index keyed by token lists —
-        # multi-codebook prompts have no flat token key, so sharing is
-        # LM-only (same restriction as recompute preemption)
-        if share_prefix is None:
-            share_prefix = cfg.num_codebooks == 1
-        self.share_prefix = self.paged and share_prefix \
-            and cfg.num_codebooks == 1
-        # page payload format: int8 with per-page scales in the cache-bound
-        # wide-batch regime (the decode_regimes measurement), bf16 otherwise
-        if kv_quant is None:
-            kv_quant = dataflow.kv_quant_path(rows, cache_len,
-                                              self.page_size) \
-                if self.paged else "fp"
-        assert kv_quant in dataflow.KV_QUANT_DTYPES, kv_quant
-        self.kv_quant = kv_quant if self.paged else "fp"
+        self.share_prefix = plan.share_prefix
+        self.kv_quant = plan.kv_quant
         self.host_syncs = 0
         self.phase_stats: Dict = {}
         self._chunk = jax.jit(self._make_chunk_fn(), donate_argnums=(1,))
@@ -284,6 +310,12 @@ class ContinuousBatchingScheduler:
 
     def run(self, requests: List[StreamRequest], rng=None
             ) -> List[StreamRequest]:
+        # the plan is the dispatch source for everything traced below
+        with plan_lib.activate(self.plan):
+            return self._run(requests, rng)
+
+    def _run(self, requests: List[StreamRequest], rng=None
+             ) -> List[StreamRequest]:
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         rids = [r.rid for r in requests]
         if len(set(rids)) != len(rids):
@@ -459,10 +491,8 @@ class ContinuousBatchingScheduler:
             if admits:
                 buckets: Dict[int, List[Tuple[int, StreamRequest]]] = {}
                 for row, r in admits:
-                    buckets.setdefault(
-                        length_tier(self._plen(r), self._recurrent,
-                                    self.cache_len),
-                        []).append((row, r))
+                    buckets.setdefault(self.plan.tier(self._plen(r)),
+                                       []).append((row, r))
                 bt = self._block_table(row_rids) if self.paged else \
                     jnp.zeros((self.rows, 1), jnp.int32)
                 tp0 = time.perf_counter()

@@ -92,7 +92,11 @@ def pack_weight(w, bk: int, bn: int,
 
 
 def _chunk_pad(n: int) -> int:
-    c = dataflow.BCSC_CHUNK
+    # the chunk stride is a resolved ServePlan decision (core.plan owns the
+    # BCSC_CHUNK constant's runtime use; dataflow fallback when packing
+    # outside a plan — same value by construction)
+    from repro.core import plan as _plan
+    c = _plan.bcsc_chunk()
     return ((n + c - 1) // c) * c
 
 

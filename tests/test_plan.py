@@ -1,0 +1,300 @@
+"""ServePlan (ISSUE 5): resolve-once dispatch vs the legacy per-call rules.
+
+Covers the acceptance matrix — 3 seed configs × {dense, sparse params} ×
+{fp, int8 KV} — asserting that plan-driven and legacy-kwarg engines choose
+identical paths and produce bit-exact token outputs; plus plan.explain()
+bound coverage (and agreement with mlp_bound_analysis), golden-plan
+snapshot stability, to_json round-trip, the DeprecationWarning back-compat
+contract, and the repro.serve.LLM facade.
+"""
+import json
+import os
+import warnings
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import dataflow
+from repro.core import plan as plan_lib
+from repro.models import transformer as tfm
+from repro.serve import LLM, sparse as sps
+from repro.serve.engine import DecodeEngine, Request, length_tier
+from repro.serve.scheduler import ContinuousBatchingScheduler, StreamRequest
+
+SEED_ARCHS = ("gemma2-2b-reduced", "mixtral-8x7b-reduced",
+              "mamba2-130m-reduced")
+GOLDEN = os.path.join(os.path.dirname(__file__), os.pardir, "scripts",
+                      "golden_plans.json")
+
+_PARAMS = {}
+
+
+def _cfg_params(arch, packed: bool):
+    """Init (and cache) params per arch; BCSC-pack the MLPs when asked."""
+    key = (arch, packed)
+    if key not in _PARAMS:
+        cfg = get_config(arch)
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        if packed:
+            params, _ = sps.sparsify_mlp_params(params, cfg, sparsity=0.5)
+        _PARAMS[key] = (cfg, params)
+    return _PARAMS[key]
+
+
+# --------------------------------------------- resolved thresholds == rules
+@pytest.mark.parametrize("arch", SEED_ARCHS)
+def test_plan_routes_match_dataflow_rules(arch):
+    """The plan's resolved crossovers reproduce every core.dataflow rule at
+    every M — the bit-exactness of plan-driven dispatch by construction."""
+    cfg = get_config(arch)
+    plan = plan_lib.plan_for_scheduler(cfg, rows=4, cache_len=64,
+                                       page_size=8)
+    d = cfg.d_model
+    ff = cfg.dense_d_ff if (cfg.moe and cfg.dense_d_ff) else cfg.d_ff
+    for M in (1, 2, 7, 8, 9, 16, 63, 64, 65, 128, 511, 512, 513, 4096):
+        assert plan.matmul_route(M) == dataflow.matmul_path(M), M
+        assert plan.bcsc_bm(M) == dataflow.bcsc_tile_m(M), M
+        assert plan.mlp_route(M) == dataflow.mlp_path(
+            M, ff, d, gated=cfg.mlp_gated), M
+    for plen in (0, 1, 2, 3, 5, 8, 17, 33, 63, 64):
+        assert plan.tier(plen) == length_tier(plen, plan.prefill_exact, 64), \
+            plen
+
+
+def test_active_plan_context_drives_route():
+    """route_* helpers read the active plan inside the context and fall back
+    to the dataflow rules outside it."""
+    cfg = get_config("qwen2.5-3b-reduced")
+    plan = plan_lib.plan_for_engine(cfg, slots=2, cache_len=32)
+    assert plan_lib.active_plan() is None
+    assert plan_lib.route_matmul(4) == dataflow.matmul_path(4)
+    with plan_lib.activate(plan):
+        assert plan_lib.active_plan() is plan
+        assert plan_lib.route_matmul(4) == plan.matmul_route(4)
+        assert plan_lib.tile_m(100) == plan.bcsc_bm(100)
+    assert plan_lib.active_plan() is None
+
+
+# --------------------------------------- the acceptance sweep (bit-exact)
+@pytest.mark.parametrize("arch", SEED_ARCHS)
+@pytest.mark.parametrize("packed", [False, True], ids=["dense", "sparse"])
+@pytest.mark.parametrize("kv", ["fp", "int8"])
+def test_plan_vs_legacy_dispatch_bitexact(arch, packed, kv):
+    """3 seed configs × {dense, sparse} × {fp, int8 KV}: the legacy kwarg
+    scheduler (auto-built shim plan) and the explicitly plan-driven one
+    choose identical paths and emit bit-exact tokens."""
+    cfg, params = _cfg_params(arch, packed)
+    rows, cache_len, ps = 2, 32, 8
+    kw = dict(rows=rows, cache_len=cache_len, page_size=ps, kv_quant=kv,
+              sync_every=4)
+    with pytest.warns(DeprecationWarning):
+        legacy = ContinuousBatchingScheduler(cfg, params, eos_id=-1, **kw)
+    plan = plan_lib.plan_for_scheduler(cfg, **kw)
+    planned = ContinuousBatchingScheduler(cfg, params, plan, eos_id=-1)
+
+    # identical path choices, decision for decision
+    assert legacy.plan.attn_path == planned.plan.attn_path
+    assert legacy.paged == planned.paged
+    assert legacy.page_size == planned.page_size
+    assert legacy.num_pages == planned.num_pages
+    assert legacy.kv_quant == planned.kv_quant
+    assert legacy.share_prefix == planned.share_prefix
+    assert legacy.plan.as_dict() == planned.plan.as_dict()
+
+    def reqs():
+        return [StreamRequest(i, [5 + i, 6, 7], 3) for i in range(3)]
+
+    out_legacy = [r.out for r in
+                  sorted(legacy.run(reqs()), key=lambda r: r.rid)]
+    out_plan = [r.out for r in
+                sorted(planned.run(reqs()), key=lambda r: r.rid)]
+    assert out_legacy == out_plan            # bit-exact token streams
+
+
+def test_engine_legacy_kwargs_warn_and_match_plan_path():
+    """Back-compat: DecodeEngine built from the old kwargs warns and decodes
+    the exact same tokens as the plan-driven construction."""
+    cfg, params = _cfg_params("gemma2-2b-reduced", False)
+    with pytest.warns(DeprecationWarning):
+        legacy = DecodeEngine(cfg, params, slots=2, cache_len=32, eos_id=-1,
+                              sync_every=4)
+    plan = plan_lib.plan_for_engine(cfg, slots=2, cache_len=32, sync_every=4)
+    planned = DecodeEngine(cfg, params, plan, eos_id=-1)
+    assert legacy.plan.as_dict() == planned.plan.as_dict()
+
+    def reqs():
+        return [Request(0, [5, 6, 7], 4), Request(1, [9, 8], 4)]
+
+    out_legacy = [r.out for r in
+                  sorted(legacy.run(reqs()), key=lambda r: r.rid)]
+    out_plan = [r.out for r in
+                sorted(planned.run(reqs()), key=lambda r: r.rid)]
+    assert out_legacy == out_plan
+
+
+def test_plan_plus_legacy_kwargs_rejected():
+    """A plan and legacy geometry kwargs together would silently drop the
+    kwargs — both engines refuse the mix (sync_every stays an override)."""
+    cfg, params = _cfg_params("gemma2-2b-reduced", False)
+    eplan = plan_lib.plan_for_engine(cfg, slots=1, cache_len=32)
+    with pytest.raises(TypeError, match="not both"):
+        DecodeEngine(cfg, params, eplan, slots=2, cache_len=32)
+    splan = plan_lib.plan_for_scheduler(cfg, rows=1, cache_len=32)
+    with pytest.raises(TypeError, match="not both"):
+        ContinuousBatchingScheduler(cfg, params, splan, page_size=16)
+    # sync_every alone composes with a plan
+    eng = DecodeEngine(cfg, params, eplan, sync_every=2, eos_id=-1)
+    assert eng.sync_every == 2
+
+
+def test_pinned_override_rationale_is_truthful():
+    """A caller-pinned decision that contradicts the rule is explained as a
+    pin (with the rule's verdict), never with the rule's rationale."""
+    cfg = get_config("gemma2-2b-reduced")
+    # cache shorter than two pages: the occupancy rule says contiguous
+    plan = plan_lib.plan_for_scheduler(cfg, rows=2, cache_len=24,
+                                       page_size=16, attn_path="paged")
+    att = next(d for d in plan.decisions if d.name == "attention")
+    assert att.numbers["rule_choice"] == "contiguous"
+    assert "pinned" in att.why and "contiguous" in att.why
+    # int8 pinned below the cache-bound row count
+    plan = plan_lib.plan_for_scheduler(cfg, rows=2, cache_len=64,
+                                       page_size=8, kv_quant="int8")
+    kv = next(d for d in plan.decisions if d.name == "kv_quant")
+    assert kv.choice == "int8" and kv.numbers["rule_choice"] == "fp"
+    assert "pinned" in kv.why
+
+
+def test_plan_construction_emits_no_warning():
+    """The deprecation fires only on the legacy kwarg spelling."""
+    cfg, params = _cfg_params("gemma2-2b-reduced", False)
+    plan = plan_lib.plan_for_engine(cfg, slots=1, cache_len=32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        DecodeEngine(cfg, params, plan, eos_id=-1)
+        ContinuousBatchingScheduler(
+            cfg, params,
+            plan_lib.plan_for_scheduler(cfg, rows=1, cache_len=32),
+            eos_id=-1)
+
+
+# ------------------------------------------------------- explain() coverage
+def test_explain_names_every_bound():
+    """Every decision in the report names its bound (compute/HBM/occupancy)
+    and every resolved plan carries the full decision set."""
+    for arch in plan_lib.SNAPSHOT_CONFIGS:
+        plan = plan_lib.snapshot_plan(arch)
+        names = [d.name for d in plan.decisions]
+        assert names == ["capacity", "matmul", "mlp", "attention",
+                         "kv_quant", "prefill"], names
+        report = plan.explain()
+        for d in plan.decisions:
+            assert d.bound in plan_lib.BOUNDS
+            assert f"[bound: {d.bound}]" in report
+            assert d.name in report
+        # the three-term coverage: each bound kind appears at least once
+        for bound in plan_lib.BOUNDS:
+            assert f"[bound: {bound}]" in report
+
+
+def test_explain_mlp_entry_agrees_with_mlp_bound_analysis():
+    """The MLP decision's roofline is the same numbers as
+    benchmarks/sparse_decode.py::mlp_bound_analysis (which delegates to
+    core.plan.mlp_roofline) — not a diverging copy."""
+    sd = pytest.importorskip("benchmarks.sparse_decode")
+    arch = "gemma2-2b"
+    sp = plan_lib.SNAPSHOT_SPARSITY
+    plan = plan_lib.snapshot_plan(arch)
+    mlp = next(d for d in plan.decisions if d.name == "mlp")
+    ref = sd.mlp_bound_analysis(arch=arch, sparsity=sp["sparsity"],
+                                packing_efficiency=sp["packing_efficiency"])
+    assert mlp.numbers["per_layer_time_s"] == ref["per_layer_time_s"]
+    assert mlp.numbers["per_layer_bytes"] == ref["per_layer_bytes"]
+    assert mlp.numbers["speedup"] == ref["speedup"]
+    # and the rendered report shows the roofline times
+    assert "per-layer roofline" in plan.explain()
+
+
+# ----------------------------------------------------- snapshot + serialize
+def test_golden_plan_snapshot_stable():
+    """plan.to_json() of the canonical seed plans matches the checked-in
+    golden file — the same gate perf_guard enforces in CI
+    (plan-snapshot-stable). Regenerate scripts/golden_plans.json on
+    deliberate dispatch changes."""
+    golden = json.load(open(GOLDEN))
+    assert sorted(golden) == sorted(plan_lib.SNAPSHOT_CONFIGS)
+    for arch in plan_lib.SNAPSHOT_CONFIGS:
+        got = json.loads(plan_lib.snapshot_plan(arch).to_json())
+        assert got == golden[arch], f"plan drift for {arch}"
+
+
+def test_to_json_round_trip_and_schema():
+    plan = plan_lib.snapshot_plan("gemma2-2b")
+    d = json.loads(plan.to_json())
+    for key in ("rows", "cache_len", "gemv_m_max", "mlp_fused_m_max",
+                "bcsc_chunk", "attn_path", "page_size", "num_pages",
+                "kv_quant", "prefill_tiers", "decisions"):
+        assert key in d, key
+    assert d["bcsc_chunk"] == dataflow.BCSC_CHUNK
+    assert d["page_size"] == dataflow.PAGE_SIZE
+    assert all(dec["bound"] in plan_lib.BOUNDS for dec in d["decisions"])
+
+
+def test_plan_serve_budget_clamps_rows():
+    cfg = get_config("gemma2-2b")
+    dist = {"mean": 512, "max": 1024}
+    big = plan_lib.plan_serve(cfg, hbm_budget_bytes=1 << 40,
+                              expected_batch=16, expected_len_dist=dist)
+    assert big.rows == 16
+    from repro.serve import kvcache
+    slot = kvcache.cache_bytes(cfg, 1, 1024)
+    clamped = plan_lib.plan_serve(cfg, hbm_budget_bytes=3 * slot,
+                                  expected_batch=16, expected_len_dist=dist)
+    assert clamped.rows == 3
+    with pytest.raises(ValueError, match="cannot hold one"):
+        plan_lib.plan_serve(cfg, hbm_budget_bytes=slot // 2,
+                            expected_batch=1, expected_len_dist=dist)
+
+
+# ----------------------------------------------------------------- facade
+def test_llm_facade_generate_and_stream_share_one_plan():
+    cfg, params = _cfg_params("gemma2-2b-reduced", False)
+    plan = plan_lib.plan_for_scheduler(cfg, rows=2, cache_len=32,
+                                       page_size=8, sync_every=4)
+    llm = LLM(cfg, params, plan, eos_id=-1)
+
+    done = llm.generate([([5, 6, 7], 3), ([9, 8], 3)])
+    assert [r.rid for r in done] == [0, 1]
+    assert all(len(r.out) == 3 for r in done)
+
+    seen = []
+    sdone = llm.stream([([5, 6, 7], 3), ([9, 8], 3)],
+                       on_token=lambda r, t: seen.append((r.rid, t)))
+    assert [r.rid for r in sdone] == [0, 1]
+    assert all(len(r.out) == 3 for r in sdone)
+    # streaming callbacks delivered every generated token, in order per rid
+    for rid in (0, 1):
+        assert [t for i, t in seen if i == rid] == sdone[rid].out
+    # both entry points ran off the same resolved plan
+    assert llm._engine.plan is plan and llm._scheduler.plan is plan
+    # drain (dense slots) and continuous batching agree token-for-token here
+    assert [r.out for r in done] == [r.out for r in sdone]
+
+
+def test_llm_facade_explain_passthrough_and_default_plan():
+    cfg, params = _cfg_params("gemma2-2b-reduced", False)
+    llm = LLM(cfg, params, eos_id=-1)       # default plan resolution
+    assert llm.plan.rows >= 1
+    assert "[bound:" in llm.explain()
+
+
+def test_cli_arch_name_resolution():
+    assert plan_lib._resolve_arch_name("gemma2-2b") == "gemma2-2b"
+    assert plan_lib._resolve_arch_name("gemma2_2b") == "gemma2-2b"
+    assert plan_lib._resolve_arch_name("mixtral_8x7b") == "mixtral-8x7b"
+    assert plan_lib._resolve_arch_name("qwen2_5_3b") == "qwen2.5-3b"
+    assert plan_lib._resolve_arch_name("mamba2_130m-reduced") == \
+        "mamba2-130m-reduced"
+    with pytest.raises(KeyError):
+        plan_lib._resolve_arch_name("nope")
