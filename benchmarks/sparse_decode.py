@@ -574,6 +574,138 @@ def shared_prefix_benchmark(arch: str = "qwen2.5-3b-reduced", rows: int = 3,
     }
 
 
+# ------------------------------- ISSUE 6: overload + injected-fault sweep
+def chaos_overload_benchmark(arch: str = "qwen2.5-3b-reduced", rows: int = 3,
+                             n_requests: int = 12, cache_len: int = 48,
+                             page_size: int = 4, sync_every: int = 4,
+                             mean_gap: float = 0.5, seed: int = 0) -> Dict:
+    """Overloaded Poisson stream through the serving guard, three ways:
+
+    * ``shed_only`` — the degradation ladder restricted to its last rung:
+      admission control sheds arrivals above the pressure threshold.
+    * ``ladder``    — the full plan-authorized ladder (int8 pool
+      requantization -> clamp max_new -> shed): graceful degradation should
+      deliver at least the shed-only goodput while shedding no more.
+    * ``faulted``   — shed_only again under a seeded ChaosConfig (spurious
+      page-ensure failures, a transient step fault, one NaN poisoning):
+      every request must still reach a terminal outcome, the pool must audit
+      clean after every sync window (audit_every_sync raises otherwise), and
+      every request that completes ``ok`` in both the faulted and the
+      fault-free run must produce bit-identical tokens (greedy decode,
+      pre-dispatch injection).
+
+    Everything is measured on the deterministic virtual step clock, so
+    perf_guard can gate shed rate and degraded goodput without wall-clock
+    noise. Goodput counts only tokens of requests that resolved ``ok`` —
+    shed/expired/failed work is not goodput by definition.
+    """
+    import jax
+    from repro.core import dataflow
+    from repro.models import transformer as tfm
+    from repro.serve.chaos import ChaosConfig
+    from repro.serve.guard import GuardConfig
+    from repro.serve.scheduler import (ContinuousBatchingScheduler,
+                                       StreamRequest)
+
+    cfg = get_config(arch)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    prompt = [5, 6, 7, 8]
+    arrivals = _poisson_arrivals(n_requests, mean_gap, rng)
+    max_news = [8 if i % 2 else 14 for i in range(n_requests)]
+    # deliberately under-provisioned: 3 concurrent long requests need 15
+    # pages, the pool holds 8 — pressure is the point of this sweep
+    num_pages = 8
+    assert num_pages < rows * dataflow.pages_for(
+        len(prompt) + max(max_news), page_size)
+    plan = plan_lib.plan_for_scheduler(
+        cfg, rows=rows, cache_len=cache_len, page_size=page_size,
+        num_pages=num_pages, attn_path="paged", sync_every=sync_every)
+    guards = {
+        "shed_only": GuardConfig(degrade_rungs=("shed",), shed_pressure=0.6,
+                                 audit_every_sync=True),
+        "ladder": GuardConfig(int8_pressure=0.45, clamp_pressure=0.6,
+                              shed_pressure=0.8, clamp_max_new=4,
+                              audit_every_sync=True),
+    }
+    # NaN targets rid 0: the longest early request, reliably still resident
+    # at chunk 2 — its quarantine (outcome ``failed``) is part of the sweep
+    chaos = ChaosConfig(seed=seed + 1, ensure_fail_rate=0.2,
+                        ensure_fail_max=6, step_fail_chunks=(1,),
+                        step_fail_attempts=2, nan_rids={2: (0,)})
+
+    def run(guard, chaos_cfg=None) -> Dict:
+        sch = ContinuousBatchingScheduler(cfg, params, plan, eos_id=-1,
+                                          guard=guard)
+        reqs = [StreamRequest(i, list(prompt), max_news[i],
+                              arrival=arrivals[i])
+                for i in range(n_requests)]
+        t0 = time.perf_counter()
+        done = sch.run(reqs, chaos=chaos_cfg)
+        wall = time.perf_counter() - t0
+        st = sch.phase_stats
+        ok_toks = sum(len(r.out) for r in done if r.outcome.ok)
+        makespan = st["clock_steps"]
+        return {
+            "outcomes": st["outcomes"],
+            "all_terminal": len(done) == n_requests
+            and all(r.outcome is not None for r in done),
+            "shed_rate": st["outcomes"]["shed"] / n_requests,
+            "ok_tokens": ok_toks,
+            "makespan_steps": makespan,
+            "goodput_tokens_per_step": ok_toks / max(makespan, 1e-9),
+            "clamped_admissions": st["clamped_admissions"],
+            "stalled_boundaries": st["stalled_boundaries"],
+            "preemptions": st["preemptions"],
+            "kv_quant_final": st["kv_quant"],
+            "chaos_injected": st.get("chaos_injected"),
+            "pool_audit_clean": True,    # audit_every_sync raises otherwise
+            "wall_s": wall,
+            "_tokens": {r.rid: list(r.out) for r in done if r.outcome.ok},
+        }
+
+    out: Dict = {
+        "arch": arch, "rows": rows, "n_requests": n_requests,
+        "cache_len": cache_len, "page_size": page_size,
+        "num_pages": num_pages, "sync_every": sync_every,
+        "mean_gap": mean_gap,
+        "arrivals": [round(a, 2) for a in arrivals],
+        "max_new": max_news,
+    }
+    shed_only = run(guards["shed_only"])
+    ladder = run(guards["ladder"])
+    faulted = run(guards["shed_only"], chaos)
+    both_ok = set(shed_only["_tokens"]) & set(faulted["_tokens"])
+    out["survivors_bit_identical"] = all(
+        shed_only["_tokens"][rid] == faulted["_tokens"][rid]
+        for rid in both_ok)
+    out["survivors_compared"] = len(both_ok)
+    for name, row in (("shed_only", shed_only), ("ladder", ladder),
+                      ("faulted", faulted)):
+        row.pop("_tokens")
+        out[name] = row
+    out["goodput_vs_shed_only"] = (
+        ladder["goodput_tokens_per_step"] /
+        max(shed_only["goodput_tokens_per_step"], 1e-9))
+    return out
+
+
+def _print_chaos(ch: Dict) -> None:
+    print(f"=== Overload + chaos sweep ({ch['rows']} rows, "
+          f"{ch['n_requests']} reqs, {ch['num_pages']} pages) ===")
+    for name in ("shed_only", "ladder", "faulted"):
+        c = ch[name]
+        oc = c["outcomes"]
+        print(f"  {name:9s}: goodput {c['goodput_tokens_per_step']:.3f} "
+              f"tok/step  shed {oc['shed']}  ok {oc['ok']}  "
+              f"failed {oc['failed']}  clamped {c['clamped_admissions']}  "
+              f"kv={c['kv_quant_final']}")
+    print(f"  ladder/shed_only goodput x{ch['goodput_vs_shed_only']:.2f}; "
+          f"faulted survivors bit-identical: "
+          f"{ch['survivors_bit_identical']} "
+          f"({ch['survivors_compared']} compared)")
+
+
 def _kv_quant_ratio(cfg, rows, cache_len, num_pages, page_size) -> Dict:
     """Quantized-vs-fp byte accounting for the paged cache (int8 payload +
     per-page scale tables vs bf16) — the recorded ratio the guard checks."""
@@ -719,6 +851,9 @@ def main(smoke: bool = False, engine: bool = True, repeats: int = None,
             n_requests=6 if smoke else 9)
         res["shared_prefix"] = shared_prefix_benchmark(
             n_requests=4 if smoke else 6)
+        # not scaled down in smoke: the shed/goodput gates need the exact
+        # overload profile the guard thresholds were tuned against
+        res["chaos"] = chaos_overload_benchmark()
 
     kp = res["kernel_proxy"]
     print("=== Batch-1 BCSC GEMV vs dense RS grid steps "
@@ -795,6 +930,9 @@ def main(smoke: bool = False, engine: bool = True, repeats: int = None,
     if "shared_prefix" in res:
         _print_shared_prefix(res["shared_prefix"])
 
+    if "chaos" in res:
+        _print_chaos(res["chaos"])
+
     with open(BENCH_JSON, "w") as f:
         json.dump(res, f, indent=2, default=float)
     print(f"wrote {BENCH_JSON}")
@@ -822,6 +960,7 @@ if __name__ == "__main__":
         res["paged"] = paged_proxy()
         res["arrivals"] = arrival_benchmark()
         res["shared_prefix"] = shared_prefix_benchmark()
+        res["chaos"] = chaos_overload_benchmark()
         with open(BENCH_JSON, "w") as f:
             json.dump(res, f, indent=2, default=float)
         ar = res["arrivals"]
@@ -830,6 +969,7 @@ if __name__ == "__main__":
                   f"(sched p99 {c['scheduler']['latency_p99_steps']:.0f} vs "
                   f"drain p99 {c['drain']['latency_p99_steps']:.0f} steps)")
         _print_shared_prefix(res["shared_prefix"])
+        _print_chaos(res["chaos"])
         print(f"wrote {BENCH_JSON}")
     else:
         main(smoke=args.smoke, engine=not args.no_engine,

@@ -7,7 +7,14 @@ stream. Requests arrive on a Poisson process, share a page pool provisioned
 *below* the dense worst case, and stream tokens through per-request
 callbacks as they are generated.
 
+The facade serves behind the robustness guard (ISSUE 6) by default: every
+request ends in a structured outcome (ok/shed/expired/preempted_out/failed)
+delivered via ``on_outcome``, overload degrades along the plan's ladder
+(int8 KV -> clamp -> shed) instead of raising, and ``--ttl`` attaches a
+deadline in decode steps to every request.
+
     PYTHONPATH=src python examples/serve_lm.py --requests 12 --rows 4
+    PYTHONPATH=src python examples/serve_lm.py --mean-gap 1 --ttl 40
 """
 import argparse
 import time
@@ -37,6 +44,9 @@ def main():
                          "CoW prefix sharing stores it once across requests")
     ap.add_argument("--kv-quant", choices=["fp", "int8"], default=None,
                     help="page payload format (default: plan rule)")
+    ap.add_argument("--ttl", type=float, default=None,
+                    help="per-request deadline in decode steps from arrival "
+                         "(unfinished requests resolve `expired`)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch + "-reduced")
@@ -57,7 +67,12 @@ def main():
     print(plan.explain())
     print()
 
-    llm = LLM(cfg, params, plan, eos_id=1)
+    llm = LLM(cfg, params, plan, eos_id=1)   # guard on by default
+
+    def finished(req, outcome):
+        if not outcome.ok:
+            why = f" ({outcome.reason})" if outcome.reason else ""
+            print(f"  req {req.rid} -> {outcome.status}{why}")
 
     rng = np.random.default_rng(0)
     arrivals = np.cumsum(rng.exponential(args.mean_gap, args.requests))
@@ -78,11 +93,12 @@ def main():
                                            rng.integers(4, 12))),
                           max_new=int(rng.integers(4, args.max_new + 1)),
                           arrival=float(arrivals[i]),
+                          ttl=args.ttl,
                           on_token=stream)
             for i in range(args.requests)]
 
     t0 = time.time()
-    done = llm.stream(reqs)
+    done = llm.stream(reqs, on_outcome=finished)
     dt = time.time() - t0
     new_toks = sum(len(r.out) for r in done)
     st = llm.phase_stats
@@ -93,6 +109,8 @@ def main():
     print(f"latency p50 {np.percentile(lat, 50):.0f} / "
           f"p99 {np.percentile(lat, 99):.0f} steps; "
           f"preemptions {st['preemptions']}")
+    print(f"outcomes: " + ", ".join(
+        f"{k} {v}" for k, v in st["outcomes"].items() if v))
     pg = st.get("pages_peak")
     if pg:
         print(f"pages at peak: {pg['pages_used']}/{pg['pages_total']} in "

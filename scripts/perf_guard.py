@@ -27,7 +27,13 @@ Checks:
      unshared admission at the same pool size, peak at fewer pages, and
      produce identical outputs; int8 KV pages record a quantized-vs-fp
      byte ratio strictly below 1
-  9. plan snapshot (ISSUE 5): the resolved ServePlans for the seed configs
+  9. chaos/overload (ISSUE 6): the degradation ladder sheds no more than
+     admission-control-only shedding (and shed rate stays <= 0.5), degraded
+     goodput stays within 5% of (in practice above) the shed-only floor,
+     and the injected-fault run keeps every request terminal with a clean
+     pool audit and bit-identical surviving tokens — all on the virtual
+     step clock
+ 10. plan snapshot (ISSUE 5): the resolved ServePlans for the seed configs
      (core.plan.snapshot_plan — fixed budget/shape inputs) match
      scripts/golden_plans.json exactly. Any drift in a dispatch decision,
      threshold, pool size, or bound rationale fails CI until the golden
@@ -145,6 +151,34 @@ def main(path: str = "BENCH_sparse_decode.json") -> int:
               f"{kq['fp_cache_bytes']} B = {kq['int8_vs_fp_ratio']:.2f}")
     else:
         print("  [--] shared_prefix section absent; page-native gates "
+              "skipped")
+
+    ch = data.get("chaos", {})
+    if ch:
+        so, la, fa = ch["shed_only"], ch["ladder"], ch["faulted"]
+        check("shed-rate-bounded",
+              la["shed_rate"] <= so["shed_rate"] and so["shed_rate"] <= 0.5,
+              f"ladder {la['shed_rate']:.2f} <= shed-only "
+              f"{so['shed_rate']:.2f} <= 0.5 of {ch['n_requests']} requests")
+        check("degraded-goodput-floor",
+              la["goodput_tokens_per_step"] >=
+              0.95 * so["goodput_tokens_per_step"],
+              f"ladder {la['goodput_tokens_per_step']:.3f} tok/step >= 0.95"
+              f" x shed-only {so['goodput_tokens_per_step']:.3f} "
+              f"(x{ch['goodput_vs_shed_only']:.2f}, final kv "
+              f"{la['kv_quant_final']})")
+        check("chaos-terminal-outcomes",
+              all(r["all_terminal"] and r["pool_audit_clean"]
+                  for r in (so, la, fa)),
+              "every request terminal + per-sync pool audits clean in all "
+              "three runs")
+        check("chaos-survivors-bit-identical",
+              ch["survivors_bit_identical"] and ch["survivors_compared"] > 0,
+              f"{ch['survivors_compared']} requests ok in both faulted and "
+              f"fault-free runs, tokens identical "
+              f"(injected: {fa['chaos_injected']})")
+    else:
+        print("  [--] chaos section absent; overload/degradation gates "
               "skipped")
 
     plans = data.get("plans", {})

@@ -191,6 +191,11 @@ class ServePlan:
     # prefill admission schedule
     prefill_exact: bool                  # recurrent archs: exact-length tiers
     prefill_tiers: Tuple[int, ...]
+    # overload degradation ladder (serve.guard walks it under measured pool
+    # pressure): authorized rungs in escalation order, and the pool size the
+    # int8 rung grows to (same HBM footprint, int8 payload)
+    degrade: Tuple[str, ...] = ()
+    num_pages_int8: int = 0
     # rationale records (one per decision; not part of dispatch identity)
     decisions: Tuple[Decision, ...] = ()
 
@@ -526,6 +531,46 @@ def _resolve(cfg, arch: str, rows: int, cache_len: int, *, mean_len: float,
                "bookkeeping would outweigh the payload win"))
     decisions.append(Decision("kv_quant", kv_quant, "HBM", kv_why, kv_n))
 
+    # ---- degrade ladder (occupancy): authorized overload behavior ----
+    # resolved here (not improvised under pressure) so the guard's ladder is
+    # a plan decision with a roofline rationale like every other dispatch
+    ladder = []
+    np_int8 = 0
+    deg_n: Dict = {"num_pages": np_}
+    if paged:
+        fp_page_b = kvcache.kv_page_bytes(cfg, ps, "fp")
+        i8_page_b = kvcache.kv_page_bytes(cfg, ps, "int8")
+        deg_n.update(fp_page_bytes=fp_page_b, int8_page_bytes=i8_page_b)
+        if kv_quant == "fp":
+            # pages the fp pool's HBM footprint holds in int8 layout, capped
+            # at full provisioning (rows × max_pages — more is unreachable)
+            np_int8 = min(int(np_ * fp_page_b // max(i8_page_b, 1)),
+                          rows * max_pages)
+            if np_int8 > np_:
+                ladder.append("int8_kv")
+        ladder += ["clamp_max_new", "shed"]
+        deg_n["num_pages_int8"] = np_int8
+    if not paged:
+        deg_why = ("contiguous KV: no page pool to trade occupancy against "
+                   "— arrivals queue on the slot allocator and only "
+                   "deadlines bound their wait")
+    else:
+        steps = []
+        if "int8_kv" in ladder:
+            steps.append(
+                f"requantize the pool to int8 pages at the same HBM "
+                f"footprint ({np_} -> {np_int8} pages of {i8_page_b} B "
+                f"vs {fp_page_b} B)")
+        steps.append("clamp new admissions' max_new")
+        steps.append("shed new arrivals off measured pool pressure")
+        deg_why = ("occupancy, not compute, is what collapses under an "
+                   "arrival spike: " + "; then ".join(steps)
+                   + " — admitted work keeps finishing instead of the run "
+                     "raising on pool exhaustion")
+    decisions.append(Decision(
+        "degrade", " -> ".join(ladder) if ladder else "none", "occupancy",
+        deg_why, deg_n))
+
     # ---- prefill schedule (compute): pow2 tiers vs exact lengths ----
     tiers = () if recurrent else _pow2_tiers(cache_len)
     decisions.append(Decision(
@@ -548,6 +593,7 @@ def _resolve(cfg, arch: str, rows: int, cache_len: int, *, mean_len: float,
         attn_path=attn_choice, page_size=ps, max_pages=max_pages,
         num_pages=np_, share_prefix=share_prefix, kv_quant=kv_quant,
         prefill_exact=recurrent, prefill_tiers=tiers,
+        degrade=tuple(ladder), num_pages_int8=np_int8,
         decisions=tuple(decisions))
 
 

@@ -152,6 +152,41 @@ def dequantize_i8(q, scale):
     return q.astype(jnp.float32) * (scale * (1.0 / 127.0))
 
 
+def quantize_paged_entry(entry, num_pages: Optional[int] = None):
+    """Requantize a resident fp page pool to the int8 layout in place — the
+    device half of the guard's int8 degradation rung (serve/scheduler.py).
+
+    Each page gets the same per-(page, kv-head) amax scale scheme the int8
+    prefill/append paths use, so the paged-attention dequant and
+    ``_append_token_i8``'s requant-on-loud-token logic work on the result
+    unchanged. ``num_pages`` > the current pool grows the page axis with
+    zero pages (zero scale == empty page by convention) — int8 pages cost
+    half the HBM, so the same footprint holds ~2× the pages; existing
+    physical page ids keep their contents and block tables stay valid.
+    Handles both stacked ``(nper, P, ps, KV, D)`` and unstacked
+    ``(P, ps, KV, D)`` pools (page axis -4 either way).
+    """
+    assert is_paged_entry(entry) and not is_quantized_entry(entry), entry
+
+    def conv(pool):
+        x = pool.astype(jnp.float32)
+        scale = jnp.abs(x).max(axis=(-3, -1))          # (..., P, KV)
+        q = quantize_to_i8(x, scale[..., None, :, None])
+        if num_pages is not None and num_pages > pool.shape[-4]:
+            pad = num_pages - pool.shape[-4]
+            qw = [(0, 0)] * q.ndim
+            qw[-4] = (0, pad)
+            sw = [(0, 0)] * scale.ndim
+            sw[-2] = (0, pad)
+            q = jnp.pad(q, qw)
+            scale = jnp.pad(scale, sw)
+        return q, scale
+
+    pk, ks = conv(entry["pk"])
+    pv, vs = conv(entry["pv"])
+    return {"pk": pk, "pv": pv, "pk_scale": ks, "pv_scale": vs}
+
+
 def scatter_rows_to_pages(pool, rows_kv, block_table_rows, lengths,
                           start=None):
     """Write per-row contiguous KV (B,S,KV,D) into a page pool (P,ps,KV,D).

@@ -27,6 +27,14 @@ from typing import Any, Callable, Dict, List, Optional
 from repro.checkpoint.manager import CheckpointManager
 
 
+def backoff_delay(attempt: int, base_s: float) -> float:
+    """Exponential backoff schedule: ``base_s * 2**(attempt-1)`` seconds for
+    attempt >= 1. The single retry-pacing rule shared by the train-loop
+    Supervisor and the serving guard's transient-step retries
+    (serve/scheduler.py) — the two retry loops cannot drift apart."""
+    return base_s * (2 ** (max(attempt, 1) - 1))
+
+
 @dataclasses.dataclass
 class FaultToleranceConfig:
     checkpoint_dir: str
@@ -125,7 +133,7 @@ class Supervisor:
                     if attempt > self.cfg.max_retries:
                         raise RuntimeError(
                             f"step {step}: retry budget exhausted") from e
-                    time.sleep(self.cfg.backoff_s * (2 ** (attempt - 1)))
+                    time.sleep(backoff_delay(attempt, self.cfg.backoff_s))
                     # restart from the last durable state
                     start2, state = self._restore_or_init()
                     step = start2

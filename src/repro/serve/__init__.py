@@ -1,5 +1,6 @@
-from repro.serve import engine, facade, kvcache, paging, scheduler, sparse
+from repro.serve import (chaos, engine, facade, guard, kvcache, paging,
+                         scheduler, sparse)
 from repro.serve.facade import LLM
 
-__all__ = ["LLM", "engine", "facade", "kvcache", "paging", "scheduler",
-           "sparse"]
+__all__ = ["LLM", "chaos", "engine", "facade", "guard", "kvcache", "paging",
+           "scheduler", "sparse"]

@@ -1,0 +1,105 @@
+"""Seeded chaos harness: deterministic fault injection for the serving loop.
+
+The guard layer (serve/guard.py) promises that every request reaches a
+terminal :class:`~repro.serve.guard.RequestOutcome` and that the page pool
+never leaks — promises that are only worth anything if they hold under
+faults. This module injects three fault classes the scheduler must absorb,
+all driven by a fixed seed so a chaos run is exactly reproducible:
+
+* **page-``ensure`` failures** — ``ensure_fails`` makes an allocation probe
+  report pressure even when pages are free (rate-limited by
+  ``ensure_fail_max`` so a run always terminates). The scheduler sees the
+  same signal as genuine exhaustion: preempt, or stall the boundary.
+* **transient step failures** — ``check_step`` raises
+  :class:`InjectedFault` for the first ``step_fail_attempts`` attempts of
+  each listed chunk, *before* the device call is issued (the decode state is
+  donated to the jitted chunk, so a post-dispatch retry would replay against
+  consumed buffers — pre-dispatch injection keeps retry trivially safe). The
+  scheduler retries with the shared ``fault_tolerance.backoff_delay``
+  schedule; exceeding ``max_step_retries`` resolves everything in flight as
+  ``failed``.
+* **NaN logits** — ``nan_rids_for`` names requests whose next-token logits
+  are poisoned before a given chunk; the guard's NaN sweep must quarantine
+  exactly those rows (outcome ``failed``) without touching survivors.
+
+Faults are injected at the host/device boundary, never inside traced code,
+so surviving requests' tokens stay bit-identical to a fault-free run — the
+chaos suite (tests/test_serve_guard.py) asserts exactly that.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """A deterministic injected fault — transient and safely retryable."""
+
+
+@dataclasses.dataclass
+class ChaosConfig:
+    """One seeded fault schedule (pass to ``scheduler.run(..., chaos=)``).
+
+    ``ensure_fail_rate`` is the per-probe probability of a spurious
+    allocation failure, capped at ``ensure_fail_max`` total injections;
+    ``step_fail_chunks`` lists decode-chunk indices whose first
+    ``step_fail_attempts`` dispatch attempts raise; ``nan_rids`` maps a
+    chunk index to the rids whose logits are poisoned before that chunk.
+    """
+    seed: int = 0
+    ensure_fail_rate: float = 0.0
+    ensure_fail_max: int = 64
+    step_fail_chunks: Tuple[int, ...] = ()
+    step_fail_attempts: int = 1
+    nan_rids: Dict[int, Tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)
+
+
+class FaultInjector:
+    """Stateful executor of one :class:`ChaosConfig` (one run's faults).
+
+    ``injected`` counts faults actually delivered per class — the chaos
+    tests assert the schedule fired, not just that nothing crashed.
+    """
+
+    def __init__(self, cfg: ChaosConfig):
+        self.cfg = cfg
+        self._rng = np.random.default_rng(cfg.seed)
+        self._step_attempts: Dict[int, int] = {}
+        self._nan_pending = {k: tuple(v) for k, v in cfg.nan_rids.items()}
+        self.injected = {"ensure": 0, "step": 0, "nan": 0}
+
+    def ensure_fails(self, rid: int, n_tokens: int) -> bool:
+        """Should this allocation probe spuriously report page pressure?"""
+        if self.cfg.ensure_fail_rate <= 0.0 \
+                or self.injected["ensure"] >= self.cfg.ensure_fail_max:
+            return False
+        if self._rng.random() < self.cfg.ensure_fail_rate:
+            self.injected["ensure"] += 1
+            return True
+        return False
+
+    def check_step(self, chunk_index: int) -> None:
+        """Raise :class:`InjectedFault` while this chunk's failure budget
+        lasts; silently pass once it is spent (the retry then succeeds)."""
+        if chunk_index not in self.cfg.step_fail_chunks:
+            return
+        attempts = self._step_attempts.get(chunk_index, 0)
+        if attempts >= self.cfg.step_fail_attempts:
+            return
+        self._step_attempts[chunk_index] = attempts + 1
+        self.injected["step"] += 1
+        raise InjectedFault(
+            f"injected step failure (chunk {chunk_index}, "
+            f"attempt {attempts + 1})")
+
+    def nan_rids_for(self, chunk_index: int) -> Tuple[int, ...]:
+        """Rids whose pre-chunk logits should be poisoned with NaN.
+        Fires at most once per chunk index: a boundary whose chunk is then
+        skipped (all poisoned rows quarantined) must not re-poison."""
+        rids = self._nan_pending.pop(chunk_index, ())
+        if rids:
+            self.injected["nan"] += len(rids)
+        return rids

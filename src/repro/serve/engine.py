@@ -24,6 +24,7 @@ import numpy as np
 from repro.core import plan as plan_lib
 from repro.models import decoding
 from repro.serve import kvcache
+from repro.serve.guard import RequestOutcome
 
 
 def make_serve_step(cfg) -> Callable:
@@ -89,6 +90,7 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    outcome: Optional[RequestOutcome] = None
 
 
 def length_tier(plen: int, recurrent: bool, cache_len: int = 0) -> int:
@@ -329,6 +331,7 @@ class DecodeEngine:
         for r in [r for r in queue if r.max_new <= 0]:
             queue.remove(r)
             r.done = True
+            r.outcome = RequestOutcome("ok", "empty generation budget")
             done.append(r)
         alloc = kvcache.SlotAllocator(self.slots)
         active: Dict[int, Request] = {}
@@ -399,6 +402,7 @@ class DecodeEngine:
                 if not live_h[slot]:
                     r = active.pop(slot)
                     r.done = True
+                    r.outcome = RequestOutcome("ok")
                     done.append(r)
                     alloc.free(slot)
         return done

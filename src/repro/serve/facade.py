@@ -30,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 
 from repro.core import eyexam, plan as plan_lib
 from repro.serve.engine import DecodeEngine, Request
+from repro.serve.guard import GuardConfig
 from repro.serve.scheduler import ContinuousBatchingScheduler, StreamRequest
 
 DEFAULT_LEN_DIST = {"mean": 256, "max": 512}
@@ -50,7 +51,8 @@ class LLM:
     """
 
     def __init__(self, cfg, params, plan: Optional[plan_lib.ServePlan] = None,
-                 *, eos_id: int = 1, temperature: float = 0.0):
+                 *, eos_id: int = 1, temperature: float = 0.0,
+                 guard: Union[GuardConfig, None, bool] = None):
         if plan is None:
             plan = plan_lib.plan_serve(
                 cfg,
@@ -62,6 +64,16 @@ class LLM:
         self.plan = plan
         self.eos_id = eos_id
         self.temperature = temperature
+        # robustness guard (ISSUE 6): on by default behind the facade — every
+        # streamed request ends in a structured RequestOutcome, overload is
+        # shed/degraded along the plan's ladder instead of raising. Pass
+        # ``guard=False`` for the raw legacy engine behavior, or a tuned
+        # GuardConfig for production deadlines/budgets.
+        if guard is None:
+            guard = GuardConfig()
+        elif guard is False:
+            guard = None
+        self.guard: Optional[GuardConfig] = guard
         self._engine: Optional[DecodeEngine] = None
         self._scheduler: Optional[ContinuousBatchingScheduler] = None
         self._last_run = None                # engine behind the last call
@@ -94,6 +106,32 @@ class LLM:
             raise ValueError("request rids must be unique")
         return out
 
+    def _validate(self, requests: Sequence) -> None:
+        """Caller-bug checks at the front door (ISSUE 6 satellite): empty
+        batches and infeasible requests raise a clear ValueError naming the
+        violated limit, before any engine is built or any work is traced —
+        runtime faults, by contrast, become RequestOutcomes, never raises."""
+        if not requests:
+            raise ValueError(
+                "empty request list — nothing to serve (did request "
+                "construction upstream filter everything out?)")
+        patches = self.cfg.num_patches if self.cfg.frontend == "vision" else 0
+        cache_len = self.plan.cache_len
+        for r in requests:
+            if not r.prompt and not patches:
+                raise ValueError(
+                    f"request {r.rid}: empty prompt — decode needs at least "
+                    "one conditioning token")
+            plen = len(r.prompt) + patches
+            if plen + max(r.max_new, 0) > cache_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt ({plen} tokens"
+                    f"{' incl. vision patches' if patches else ''}) + "
+                    f"max_new ({r.max_new}) = {plen + max(r.max_new, 0)} "
+                    f"exceeds the plan's cache_len ({cache_len}); shorten "
+                    "the request or re-plan with a larger "
+                    "expected_len_dist['max']")
+
     # ------------------------------------------------------------- serving
     def generate(self, requests: Sequence[RequestLike], rng=None
                  ) -> List[Request]:
@@ -107,26 +145,38 @@ class LLM:
                 self.cfg, self.params, self.plan, eos_id=self.eos_id,
                 temperature=self.temperature)
         self._last_run = self._engine
-        done = self._engine.run(self._normalize(requests, Request), rng=rng)
+        reqs = self._normalize(requests, Request)
+        self._validate(reqs)
+        done = self._engine.run(reqs, rng=rng)
         return sorted(done, key=lambda r: r.rid)
 
     def stream(self, requests: Sequence[RequestLike],
-               on_token: Optional[Callable] = None, rng=None
+               on_token: Optional[Callable] = None, rng=None,
+               on_outcome: Optional[Callable] = None, chaos=None
                ) -> List[StreamRequest]:
         """Serve ``requests`` with continuous batching + streaming.
 
         Wraps the paged ``ContinuousBatchingScheduler`` (requests may carry
         ``arrival`` stamps and per-request ``on_token`` callbacks; a
         call-level ``on_token(request, token)`` applies to any request
-        without its own). Returns finished requests in input order.
+        without its own, as does ``on_outcome(request, outcome)``). With the
+        default guard every returned request carries a terminal
+        ``r.outcome`` (ok/shed/expired/preempted_out/failed). ``chaos``
+        takes a ``serve.chaos.ChaosConfig`` for deterministic fault
+        injection (tests/CI only). Returns finished requests in input order.
         """
         if self._scheduler is None:
             self._scheduler = ContinuousBatchingScheduler(
                 self.cfg, self.params, self.plan, eos_id=self.eos_id,
-                temperature=self.temperature)
+                temperature=self.temperature, guard=self.guard)
         reqs = self._normalize(requests, StreamRequest, on_token=on_token)
+        self._validate(reqs)
+        if on_outcome is not None:
+            for r in reqs:
+                if r.on_outcome is None:
+                    r.on_outcome = on_outcome
         self._last_run = self._scheduler
-        done = self._scheduler.run(reqs, rng=rng)
+        done = self._scheduler.run(reqs, rng=rng, chaos=chaos)
         return sorted(done, key=lambda r: r.rid)
 
     # ------------------------------------------------------------- reports

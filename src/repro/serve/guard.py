@@ -1,0 +1,196 @@
+"""Serving robustness layer: outcomes, deadlines, overload control, audits.
+
+Eyeriss v2's flexibility argument is about keeping utilization high when the
+workload misbehaves; this module is the serving-side half of that claim
+(ISSUE 6). Before it, a page-pool spike or a bad step surfaced as a raised
+exception out of ``ContinuousBatchingScheduler`` — leaked pages, no terminal
+status for in-flight streams. With a :class:`GuardConfig` attached, every
+request submitted to the scheduler ends in exactly one structured
+:class:`RequestOutcome`:
+
+* ``ok``            — completed normally (EOS or budget).
+* ``shed``          — refused at arrival: measured pool pressure above the
+  shed threshold (admission control at the front door, never mid-flight).
+* ``expired``       — its TTL/deadline passed before it finished (waiting
+  requests expire un-admitted; active rows are evicted with partial output).
+* ``preempted_out`` — preempted more than ``retry_budget`` times; resolving
+  it beats recompute-thrashing it forever (starvation bound).
+* ``failed``        — a non-transient fault: permanent step failure, NaN
+  logits quarantined on its row, or a pool stall that outlived
+  ``stall_budget`` boundaries.
+
+Overload control walks the **degradation ladder** the plan authorizes
+(``ServePlan.degrade``, resolved with an occupancy rationale): requantize the
+page pool to int8 at the same HBM footprint (≈2× the pages), then clamp new
+admissions' ``max_new``, then shed — degrade goodput gracefully instead of
+raising on exhaustion.
+
+:func:`audit_pool` is the pool invariant auditor (refcount/leak/block-table/
+CoW-prefix consistency) the scheduler runs after every sync window in debug
+mode (``audit_every_sync``) and the chaos suite runs in CI; it consumes
+``PageAllocator.snapshot()`` and returns human-readable violations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+OUTCOMES = ("ok", "shed", "expired", "preempted_out", "failed")
+
+
+class PoolAuditError(RuntimeError):
+    """A pool invariant was violated (leak, refcount drift, stale index)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestOutcome:
+    """Terminal status of one request, delivered via ``on_outcome`` callbacks
+    and the request's ``outcome`` field — never as an exception mid-batch.
+
+    ``at_step`` is the scheduler's virtual clock when the request resolved;
+    ``degraded`` lists the ladder rungs applied to this request (e.g.
+    ``('clamp_max_new',)`` when its budget was clamped at admission).
+    """
+    status: str
+    reason: str = ""
+    at_step: float = 0.0
+    degraded: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        assert self.status in OUTCOMES, self.status
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+@dataclasses.dataclass
+class GuardConfig:
+    """Robustness policy for the serving loop (scheduler ``guard=`` kwarg).
+
+    Deadlines: ``default_ttl_steps`` (virtual decode steps from arrival)
+    applies to requests without their own ``ttl``; ``None`` disables.
+    ``retry_budget`` bounds recompute preemptions per request;
+    ``stall_budget`` bounds consecutive boundaries the pool may stall with
+    nothing left to preempt before the blocked (oldest) request fails.
+    ``max_step_retries``/``backoff_s`` govern transient decode-step faults
+    (exponential backoff via ``runtime.fault_tolerance.backoff_delay``).
+
+    The pressure thresholds gate the degradation ladder against measured
+    pool utilization (``PageAllocator.in_use / num_pages``); a rung only
+    fires if the plan's ``degrade`` tuple authorizes it (further restricted
+    by ``degrade_rungs`` when set). ``nan_check`` quarantines rows whose
+    logits go non-finite; ``audit_every_sync`` runs the pool auditor after
+    every sync window (debug/CI mode — raises :class:`PoolAuditError`).
+    """
+    default_ttl_steps: Optional[float] = None
+    retry_budget: int = 8
+    stall_budget: int = 8
+    max_step_retries: int = 3
+    backoff_s: float = 0.0
+    int8_pressure: float = 0.85
+    clamp_pressure: float = 0.92
+    shed_pressure: float = 0.97
+    clamp_max_new: int = 32
+    degrade_rungs: Optional[Tuple[str, ...]] = None
+    nan_check: bool = False
+    audit_every_sync: bool = False
+
+
+# ---------------------------------------------------------------- auditing
+def audit_pool(pager, drained: bool = False) -> List[str]:
+    """Check every PageAllocator invariant; return violations (empty = clean).
+
+    Invariants audited:
+
+    * free-list hygiene — no duplicates, ids in range, disjoint from every
+      block table;
+    * refcount exactness — each page's refcount equals the number of block-
+      table entries referencing it (so Σ refcounts == Σ table lengths: no
+      leaked and no double-held pages), and refcount 0 ⟺ on the free list;
+    * block tables — no page appears twice within one table (CoW guarantees
+      private append targets), recorded lengths are covered by pages;
+    * prefix index — every indexed page is resident (refcount ≥ 1: purge-on-
+      release worked) and the page→keys reverse map agrees with the index.
+
+    With ``drained=True`` (end of run) additionally require the pool fully
+    returned: no tables, every page free at refcount 0, empty index.
+    """
+    v: List[str] = []
+    snap = pager.snapshot()
+    num = pager.num_pages
+    free, refs = snap["free"], snap["refs"]
+    tables, lengths = snap["tables"], snap["lengths"]
+    pidx, pkeys = snap["prefix_index"], snap["page_keys"]
+
+    if len(set(free)) != len(free):
+        v.append("free list contains duplicate page ids")
+    for p in free:
+        if not 0 <= p < num:
+            v.append(f"free list id {p} out of range [0, {num})")
+    held = [0] * num
+    for rid, table in tables.items():
+        seen = set()
+        for p in table:
+            if not 0 <= p < num:
+                v.append(f"rid {rid}: table page {p} out of range")
+                continue
+            if p in seen:
+                v.append(f"rid {rid}: page {p} appears twice in one "
+                         "block table (CoW should have split it)")
+            seen.add(p)
+            held[p] += 1
+    for p in range(num):
+        if refs[p] != held[p]:
+            v.append(f"page {p}: refcount {refs[p]} != {held[p]} block-table "
+                     "references (leak or double-hold)")
+    freeset = set(free)
+    for p in range(num):
+        if refs[p] == 0 and p not in freeset:
+            v.append(f"page {p}: refcount 0 but not on the free list "
+                     "(leaked page)")
+        if refs[p] > 0 and p in freeset:
+            v.append(f"page {p}: refcount {refs[p]} but on the free list "
+                     "(double-free hazard)")
+    for rid, n in lengths.items():
+        if rid not in tables:
+            v.append(f"rid {rid}: length recorded with no block table")
+        elif pager.pages_for(n) > len(tables[rid]):
+            v.append(f"rid {rid}: length {n} not covered by "
+                     f"{len(tables[rid])} pages")
+    for key, p in pidx.items():
+        if not 0 <= p < num:
+            v.append(f"prefix index entry {key!r} -> page {p} out of range")
+        elif refs[p] == 0:
+            v.append(f"prefix index entry -> page {p} with refcount 0 "
+                     "(dangling: purge-on-release missed it)")
+        elif key not in pkeys.get(p, ()):
+            v.append(f"prefix key {key!r} missing from page {p}'s "
+                     "reverse key list")
+    for p, keys in pkeys.items():
+        for key in keys:
+            if pidx.get(key) != p:
+                v.append(f"page {p}: stale reverse key {key!r} "
+                         "(index maps it elsewhere)")
+    if drained:
+        if tables:
+            v.append(f"drained pool still holds tables for rids "
+                     f"{sorted(tables)}")
+        if len(free) != num:
+            v.append(f"drained pool has {len(free)}/{num} pages free")
+        if any(refs):
+            v.append("drained pool has nonzero refcounts: "
+                     f"{[p for p in range(num) if refs[p]]}")
+        if pidx:
+            v.append(f"drained pool retains {len(pidx)} prefix index "
+                     "entries")
+    return v
+
+
+def assert_pool_clean(pager, drained: bool = False) -> None:
+    """Raise :class:`PoolAuditError` listing every violated invariant."""
+    violations = audit_pool(pager, drained=drained)
+    if violations:
+        raise PoolAuditError(
+            f"pool audit failed ({len(violations)} violation(s)): "
+            + "; ".join(violations))

@@ -89,6 +89,18 @@ class PageAllocator:
     def refcount(self, page: int) -> int:
         return self._refs[page]
 
+    def snapshot(self) -> Dict:
+        """Deep copy of the allocator's internal state for the pool invariant
+        auditor (serve.guard.audit_pool) — queries only, never mutated."""
+        return {
+            "free": list(self._free),
+            "refs": list(self._refs),
+            "tables": {rid: list(t) for rid, t in self._tables.items()},
+            "lengths": dict(self._lengths),
+            "prefix_index": dict(self._prefix_index),
+            "page_keys": {p: list(k) for p, k in self._page_keys.items()},
+        }
+
     # ----------------------------------------------------------- mutation
     def _pop_free(self) -> int:
         page = self._free.pop()
@@ -108,6 +120,20 @@ class PageAllocator:
                 del self._prefix_index[key]
         self._free.append(page)
         return True
+
+    def grow(self, num_pages: int) -> int:
+        """Append fresh free pages so the pool holds ``num_pages`` total —
+        the allocator half of the int8 degradation rung (the device pool is
+        requantized and padded along its page axis at the same moment, so
+        existing physical ids 0..old-1 stay valid and every block table
+        survives verbatim). Returns the number of pages added."""
+        assert num_pages >= self.num_pages, (num_pages, self.num_pages)
+        added = list(range(self.num_pages, num_pages))
+        self._refs.extend([0] * len(added))
+        self._free.extend(added)
+        self._free.sort(reverse=True)         # keep lowest-first pop order
+        self.num_pages = num_pages
+        return len(added)
 
     def ensure(self, rid: int, n_tokens: int) -> bool:
         """Grow rid's block table to cover ``n_tokens``. All-or-nothing:

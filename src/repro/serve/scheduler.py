@@ -51,7 +51,9 @@ import numpy as np
 
 from repro.core import dataflow, plan as plan_lib
 from repro.models import decoding
-from repro.serve import kvcache, paging
+from repro.runtime.fault_tolerance import backoff_delay
+from repro.serve import chaos as chaos_mod, kvcache, paging
+from repro.serve import guard as guard_mod
 from repro.serve.engine import build_tier_batch, make_decode_step
 
 
@@ -80,6 +82,12 @@ class StreamRequest:
     preemptions: int = 0
     shared_tokens: int = 0       # prompt tokens served from adopted pages
                                  # at the most recent admission (CoW sharing)
+    # --- robustness layer (serve.guard, ISSUE 6) ---
+    ttl: Optional[float] = None  # deadline = arrival + ttl (virtual steps);
+                                 # None falls back to guard.default_ttl_steps
+    on_outcome: Optional[Callable] = None   # on_outcome(request, outcome)
+    outcome: Optional[guard_mod.RequestOutcome] = None
+    degraded: List[str] = dataclasses.field(default_factory=list)
 
 
 class ContinuousBatchingScheduler:
@@ -108,7 +116,8 @@ class ContinuousBatchingScheduler:
                  temperature: float = 0.0, sync_every: Optional[int] = None,
                  attn_path: Optional[str] = None,
                  share_prefix: Optional[bool] = None,
-                 kv_quant: Optional[str] = None):
+                 kv_quant: Optional[str] = None,
+                 guard: Optional[guard_mod.GuardConfig] = None):
         legacy_kwargs = (rows is not None or cache_len is not None
                          or page_size or num_pages or attn_path is not None
                          or share_prefix is not None or kv_quant is not None)
@@ -173,6 +182,16 @@ class ContinuousBatchingScheduler:
             self.pager = None
         self.share_prefix = plan.share_prefix
         self.kv_quant = plan.kv_quant
+        # robustness policy (serve.guard): guard=None preserves the legacy
+        # raise-on-exhaustion semantics exactly; with a GuardConfig every
+        # request resolves to a structured RequestOutcome and overload walks
+        # the plan's degradation ladder instead of raising
+        self.guard = guard
+        if guard is not None and guard.degrade_rungs is not None:
+            self._ladder = tuple(r for r in plan.degrade
+                                 if r in guard.degrade_rungs)
+        else:
+            self._ladder = plan.degrade if guard is not None else ()
         self.host_syncs = 0
         self.phase_stats: Dict = {}
         self._chunk = jax.jit(self._make_chunk_fn(), donate_argnums=(1,))
@@ -308,15 +327,61 @@ class ContinuousBatchingScheduler:
         return jnp.asarray(self.pager.block_table_rows(row_rids,
                                                        self.max_pages))
 
-    def run(self, requests: List[StreamRequest], rng=None
+    def _degrade_to_int8(self, state, clock: float):
+        """int8 rung of the degradation ladder: requantize the resident fp
+        pool to int8 pages in place and GROW it to the plan's
+        ``num_pages_int8`` (same HBM footprint, ~2× pages — pressure relief
+        without evicting anyone). Page ids 0..old-1 keep their contents, so
+        every block table survives verbatim; the jitted programs retrace on
+        the new pytree structure automatically. Sticky for the scheduler's
+        lifetime (there is no un-degrade rung — re-widening would need a
+        lossy fp reconstruction for no occupancy win)."""
+        new_pages = self.plan.num_pages_int8
+
+        def migrate(cache):
+            out_cache = {}
+            for part in ("blocks", "rem"):
+                if part not in cache:
+                    continue
+                out = {}
+                for name, e in cache[part].items():
+                    if decoding.is_paged_entry(e) \
+                            and not decoding.is_quantized_entry(e):
+                        out[name] = decoding.quantize_paged_entry(e,
+                                                                  new_pages)
+                    else:
+                        out[name] = e
+                out_cache[part] = out
+            return out_cache
+
+        cache, last, pos, live, budget = state
+        with warnings.catch_warnings():
+            # fp buffers can't be reused for the int8 pool (dtype + shape
+            # change) — the donation-unused warning is expected here, once
+            warnings.simplefilter("ignore", UserWarning)
+            cache = jax.jit(migrate, donate_argnums=(0,))(cache)
+        self.pager.grow(new_pages)
+        self.num_pages = new_pages
+        self.kv_quant = "int8"
+        self.phase_stats["kv_quant"] = "int8"
+        self.phase_stats["degraded_to_int8_at"] = clock
+        return (cache, last, pos, live, budget)
+
+    def run(self, requests: List[StreamRequest], rng=None, chaos=None
             ) -> List[StreamRequest]:
         # the plan is the dispatch source for everything traced below
         with plan_lib.activate(self.plan):
-            return self._run(requests, rng)
+            return self._run(requests, rng, chaos)
 
-    def _run(self, requests: List[StreamRequest], rng=None
+    def _run(self, requests: List[StreamRequest], rng=None, chaos=None
              ) -> List[StreamRequest]:
         rng = rng if rng is not None else jax.random.PRNGKey(0)
+        g = self.guard
+        inj = None
+        if chaos is not None:
+            inj = chaos if isinstance(chaos, chaos_mod.FaultInjector) \
+                else chaos_mod.FaultInjector(chaos)
+        self.last_injector = inj
         rids = [r.rid for r in requests]
         if len(set(rids)) != len(rids):
             # block tables are keyed by rid — duplicates would silently share
@@ -324,7 +389,8 @@ class ContinuousBatchingScheduler:
             raise ValueError(f"request rids must be unique, got {rids}")
         # feasibility is arrival-independent (resume totals equal originals):
         # validate everything up front so a late infeasible request cannot
-        # abort the run after other requests already finished
+        # abort the run after other requests already finished — caller bugs
+        # raise here, before any work; only runtime faults become outcomes
         for r in requests:
             total = len(r.prompt) + r.max_new
             if r.max_new > 0 and total > self.cache_len:
@@ -349,6 +415,10 @@ class ContinuousBatchingScheduler:
             pending.remove(r)
             r.done = True
             r.finished_at = r.arrival
+            r.outcome = guard_mod.RequestOutcome(
+                "ok", "empty generation budget", at_step=r.arrival)
+            if r.on_outcome is not None:
+                r.on_outcome(r, r.outcome)
             done.append(r)
         alloc = kvcache.SlotAllocator(self.rows)
         active: Dict[int, StreamRequest] = {}        # row -> request
@@ -359,6 +429,7 @@ class ContinuousBatchingScheduler:
         K = self.cfg.num_codebooks
         T = self.sync_every
         clock = 0.0
+        stall_streak = 0
         t0 = time.perf_counter()
         st = self.phase_stats = {
             "prefill_s": 0.0, "decode_s": 0.0, "prefill_batches": 0,
@@ -373,6 +444,10 @@ class ContinuousBatchingScheduler:
             "cow_copies": 0,               # shared pages materialized for
                                            # a decode append
             "peak_live_rows": 0,           # max concurrent admitted requests
+            "guard_enabled": g is not None,
+            "stalled_boundaries": 0,       # boundaries skipped: pool stalled
+            "step_retries": 0,             # transient step faults retried
+            "clamped_admissions": 0,       # max_new clamps (degrade rung 2)
         }
 
         preempted_rows: List[int] = []
@@ -393,9 +468,56 @@ class ContinuousBatchingScheduler:
             state = (cache, last, pos, live, budget)
             preempted_rows.clear()
 
+        def resolve(r: StreamRequest, status: str, reason: str = ""):
+            """Terminal state: exactly one structured RequestOutcome per
+            request, delivered via its on_outcome callback — never an
+            exception escaping mid-batch."""
+            r.done = True
+            if r.finished_at is None:
+                r.finished_at = clock
+            r.finished_wall_s = time.perf_counter() - t0
+            r.outcome = guard_mod.RequestOutcome(
+                status=status, reason=reason, at_step=clock,
+                degraded=tuple(r.degraded))
+            done.append(r)
+            if r.on_outcome is not None:
+                r.on_outcome(r, r.outcome)
+
+        def deadline_of(r: StreamRequest) -> Optional[float]:
+            ttl = r.ttl if r.ttl is not None else (
+                g.default_ttl_steps if g is not None else None)
+            return None if ttl is None else r.arrival + ttl
+
+        def evict_active(row: int, status: str, reason: str):
+            """Terminal eviction of a live row (expired/failed): pages and
+            slot returned, device live flag scheduled for clearing, partial
+            output kept on the resolved request."""
+            r = active.pop(row)
+            if self.paged:
+                self.pager.free(r.rid)
+            alloc.free(row)
+            admit_order.remove(row)
+            row_rids[row] = -1
+            row_pos.pop(row, None)
+            preempted_rows.append(row)
+            resolve(r, status, reason)
+
+        def ensure_pages(rid: int, n_tokens: int) -> bool:
+            """pager.ensure behind the chaos harness: an injected failure is
+            indistinguishable from genuine pressure (and allocates nothing),
+            so the same preempt/stall machinery absorbs both."""
+            if inj is not None and inj.ensure_fails(rid, n_tokens):
+                return False
+            return self.pager.ensure(rid, n_tokens)
+
         def preempt_latest() -> bool:
-            """Free the latest-admitted row; requeue its request (recompute).
-            Returns False when there is nothing to preempt."""
+            """Free the latest-admitted row and requeue its request for
+            recompute — unless its retry budget is spent, in which case it
+            resolves as ``preempted_out`` (starvation bound: under sustained
+            pressure the same victim would otherwise recompute-thrash
+            forever). Returns False when there is nothing to preempt.
+            Re-admission order is deterministic: ``waiting`` is kept sorted
+            by (arrival, rid), never by insertion order under churn."""
             if len(admit_order) <= 1:
                 return False
             row = admit_order.pop()               # latest admitted
@@ -408,15 +530,87 @@ class ContinuousBatchingScheduler:
             r.preemptions += 1
             st["preemptions"] += 1
             preempted_rows.append(row)
+            if g is not None and r.preemptions > g.retry_budget:
+                resolve(r, "preempted_out",
+                        f"preempted {r.preemptions} times — retry budget "
+                        f"({g.retry_budget}) spent; {len(r.out)} generated "
+                        "tokens kept")
+                return True
             just_preempted.add(r.rid)
-            waiting.insert(0, r)                  # keeps its queue priority
+            waiting.append(r)
+            waiting.sort(key=lambda w: (w.arrival, w.rid))
             return True
 
+        def note_stall(why: str):
+            """A boundary that could not reserve chunk headroom even after
+            preempting everything preemptible: skip the chunk (appending
+            without reserved pages would drop writes and corrupt reads) and
+            advance the clock so arrivals/deadlines keep progressing. A
+            streak longer than stall_budget fails the oldest resident
+            request — the pool demonstrably cannot serve it."""
+            nonlocal stall_streak
+            st["stalled_boundaries"] += 1
+            stall_streak += 1
+            just_preempted.clear()
+            if g is not None and stall_streak > g.stall_budget and \
+                    admit_order:
+                evict_active(admit_order[0], "failed",
+                             f"{why}: {stall_streak} consecutive stalled "
+                             f"boundaries (stall_budget {g.stall_budget})")
+                stall_streak = 0
+
         while pending or waiting or active:
+            # ---- int8 degrade rung (boundary start, measured pressure) ----
+            # requantizing relieves pressure BEFORE this boundary's arrivals
+            # are judged for clamping/shedding, so rung 1 shadows rungs 2-3
+            if "int8_kv" in self._ladder and self.paged \
+                    and self.kv_quant == "fp" \
+                    and self.plan.num_pages_int8 > self.num_pages:
+                if self.pager.in_use / self.num_pages >= g.int8_pressure:
+                    state = self._degrade_to_int8(state, clock)
+
             # ---- arrivals (virtual clock; idle-jump when nothing to do) ----
             while pending and pending[0].arrival <= clock + 1e-9:
-                waiting.append(pending.pop(0))
+                r = pending.pop(0)
+                if g is not None and self.paged and self._ladder:
+                    # admission control at the front door: rungs 2-3 judge
+                    # each arrival against measured pool pressure
+                    pressure = self.pager.in_use / self.num_pages
+                    if "shed" in self._ladder and pressure >= g.shed_pressure:
+                        resolve(r, "shed",
+                                f"pool pressure {pressure:.2f} >= shed "
+                                f"threshold {g.shed_pressure:.2f} at arrival")
+                        continue
+                    if "clamp_max_new" in self._ladder \
+                            and pressure >= g.clamp_pressure \
+                            and r.max_new > g.clamp_max_new:
+                        r.max_new = g.clamp_max_new
+                        r.degraded.append("clamp_max_new")
+                        st["clamped_admissions"] += 1
+                waiting.append(r)
+
+            # ---- deadlines: expire whatever outlived arrival + ttl --------
+            if g is not None:
+                for r in list(waiting):
+                    dl = deadline_of(r)
+                    if dl is not None and clock + 1e-9 >= dl:
+                        waiting.remove(r)
+                        resolve(r, "expired",
+                                f"deadline (arrival {r.arrival:g} + ttl "
+                                f"{dl - r.arrival:g} steps) passed before "
+                                "admission")
+                for row, r in list(active.items()):
+                    dl = deadline_of(r)
+                    if dl is not None and clock + 1e-9 >= dl:
+                        evict_active(row, "expired",
+                                     f"deadline (arrival {r.arrival:g} + "
+                                     f"ttl {dl - r.arrival:g} steps) passed "
+                                     f"mid-generation; {len(r.out)} tokens "
+                                     "kept")
+
             if not active and not waiting:
+                if not pending:
+                    break
                 st["idle_steps"] += pending[0].arrival - clock
                 clock = pending[0].arrival
                 continue
@@ -426,21 +620,30 @@ class ContinuousBatchingScheduler:
             # first, so a new request is never admitted (and batch-prefilled)
             # only to be preempted at the same boundary — that would throw
             # the prefill away and thrash under sustained pressure
+            stalled = False
             if self.paged:
                 for row in list(admit_order):         # oldest first
                     if row not in active:
                         continue
                     r = active[row]
                     need = min(row_pos[row] + T, self._final_len(r))
-                    while row in active and not self.pager.ensure(r.rid,
-                                                                  need):
+                    while row in active and not ensure_pages(r.rid, need):
                         if not preempt_latest():
-                            raise RuntimeError(
-                                "page pool exhausted with nothing left to "
-                                "preempt — num_pages is too small")
+                            if g is None:
+                                raise RuntimeError(
+                                    "page pool exhausted with nothing left "
+                                    "to preempt — num_pages is too small")
+                            stalled = True
+                            break
+                    if stalled:
+                        break
                     if row in active:
                         self.pager.set_length(r.rid, row_pos[row])
             clear_preempted_flags()
+            if stalled:
+                note_stall("no page headroom for the next chunk")
+                clock += T
+                continue
 
             # ---- admission: arrived requests into freed rows --------------
             to_admit: List[StreamRequest] = []
@@ -462,7 +665,7 @@ class ContinuousBatchingScheduler:
                     r.shared_tokens = self.pager.adopt_prefix(
                         r.rid, self._resume_prompt(r)) \
                         if self.share_prefix else 0
-                    if not self.pager.ensure(
+                    if not ensure_pages(
                             r.rid, min(plen + T, self._final_len(r))):
                         if self.pager.pages_of(r.rid):
                             self.pager.free(r.rid)   # roll back adoption
@@ -519,6 +722,12 @@ class ContinuousBatchingScheduler:
                 st["prefill_s"] += time.perf_counter() - tp0
 
             if not active:
+                if g is not None or inj is not None:
+                    # nothing running and nothing admitted (transient chaos
+                    # ensure-failures can starve admission): advance the
+                    # clock so arrivals/deadlines keep progressing
+                    st["idle_steps"] += T
+                    clock += T
                 continue
             st["peak_live_rows"] = max(st["peak_live_rows"], len(active))
 
@@ -542,13 +751,22 @@ class ContinuousBatchingScheduler:
                         pair = self.pager.cow_page(r.rid, shared[0])
                         if pair is None:              # no free page: pressure
                             if not preempt_latest():
-                                raise RuntimeError(
-                                    "page pool exhausted during CoW "
-                                    "materialization with nothing left to "
-                                    "preempt — num_pages is too small")
+                                if g is None:
+                                    raise RuntimeError(
+                                        "page pool exhausted during CoW "
+                                        "materialization with nothing left "
+                                        "to preempt — num_pages is too "
+                                        "small")
+                                stalled = True
+                                break
                             continue
                         pairs.append(pair)
+                    if stalled:
+                        break
                 if pairs:
+                    # apply collected copies even on a stalled boundary: the
+                    # allocator already repointed those tables, so the device
+                    # content copy must land before anything reads the pages
                     st["cow_copies"] += len(pairs)
                     # pad to a power of two (bounded retraces); pads repeat a
                     # real pair so duplicate dsts carry identical content
@@ -558,6 +776,10 @@ class ContinuousBatchingScheduler:
                     dst = jnp.asarray([d for _, d in pairs], jnp.int32)
                     state = self._cow(state, src, dst)
             clear_preempted_flags()       # CoW-guard preemptions, pre-chunk
+            if stalled:
+                note_stall("no free page for CoW materialization")
+                clock += T
+                continue
 
             if self.paged:
                 # sample occupancy at the busiest point of the boundary —
@@ -566,6 +788,69 @@ class ContinuousBatchingScheduler:
                 if peak_pages is None or \
                         s["pages_used"] > peak_pages["pages_used"]:
                     peak_pages = s
+
+            # ---- transient step faults (chaos): retry with backoff --------
+            # injected BEFORE the device dispatch (the chunk's state arg is
+            # donated — a post-dispatch replay would reuse consumed buffers)
+            # and BEFORE the rng split, so retried boundaries consume no
+            # randomness and survivors stay bit-identical to a clean run
+            if inj is not None:
+                attempt, aborted = 0, False
+                while True:
+                    try:
+                        inj.check_step(st["decode_chunks"])
+                        break
+                    except chaos_mod.InjectedFault as e:
+                        attempt += 1
+                        st["step_retries"] += 1
+                        limit = g.max_step_retries if g is not None else 3
+                        if attempt > limit:
+                            reason = (f"decode step failing persistently "
+                                      f"({e}) — {limit} retries spent")
+                            for row in list(active):
+                                evict_active(row, "failed", reason)
+                            for r in list(waiting) + list(pending):
+                                resolve(r, "failed", reason)
+                            waiting.clear()
+                            pending.clear()
+                            aborted = True
+                            break
+                        time.sleep(backoff_delay(
+                            attempt, g.backoff_s if g is not None else 0.0))
+                if aborted:
+                    clear_preempted_flags()
+                    continue
+
+            # ---- NaN quarantine (pre-chunk): state[1] holds the logits
+            # the previous chunk (or prefill) produced for each row — a
+            # non-finite value there means this row's next sampled token
+            # would be garbage. Sweep at the boundary, evict poisoned rows
+            # BEFORE dispatching the chunk, so they emit nothing. (Chaos
+            # poisons the same buffer, so injection and genuine NaNs take
+            # the identical detection path. In-scan NaNs are caught one
+            # boundary late — tokens of the chunk that produced them may
+            # include garbage; the terminal outcome says so.)
+            if inj is not None:
+                prids = set(inj.nan_rids_for(st["decode_chunks"]))
+                prows = [row for row, r in active.items() if r.rid in prids]
+                if prows:
+                    cache_c, last_c, pos_c, live_c, budget_c = state
+                    last_c = last_c.at[jnp.asarray(prows)].set(jnp.nan)
+                    state = (cache_c, last_c, pos_c, live_c, budget_c)
+            if g is not None and (g.nan_check or inj is not None):
+                bad = jax.device_get(jnp.isnan(
+                    state[1]).reshape(self.rows, -1).any(axis=1))
+                for row in [int(i) for i in np.nonzero(bad)[0]
+                            if int(i) in active]:
+                    r = active[row]
+                    evict_active(row, "failed",
+                                 "non-finite logits at the sync boundary; "
+                                 f"{len(r.out)} tokens kept")
+                clear_preempted_flags()
+                if not active:
+                    st["idle_steps"] += T
+                    clock += T
+                    continue
 
             # ---------------------- device-resident decode chunk ----------
             td0 = time.perf_counter()
@@ -578,6 +863,7 @@ class ContinuousBatchingScheduler:
             st["decode_chunks"] += 1
             st["decode_steps"] += T
             st["decode_s"] += time.perf_counter() - td0
+            stall_streak = 0
             clock += T
             for t in range(emits_h.shape[0]):
                 for row, r in active.items():
@@ -594,20 +880,42 @@ class ContinuousBatchingScheduler:
                 row_pos[row] += T
                 if not live_h[row]:
                     r = active.pop(row)
-                    r.done = True
-                    r.finished_at = clock
-                    r.finished_wall_s = time.perf_counter() - t0
-                    done.append(r)
                     freed_rows.append(row)
                     admit_order.remove(row)
                     row_rids[row] = -1
                     row_pos.pop(row, None)
                     if self.paged:
                         self.pager.free(r.rid)   # pages return immediately
+                    resolve(r, "ok")
             alloc.free_many(freed_rows)
+
+            if g is not None and g.audit_every_sync and self.paged:
+                # debug/CI mode: the full pool invariant audit after every
+                # sync window — leaks surface at the boundary that caused
+                # them, not as an end-of-run mystery
+                guard_mod.assert_pool_clean(self.pager)
         st["total_wall_s"] = time.perf_counter() - t0
         st["clock_steps"] = clock
+        if g is not None:
+            for r in requests:
+                if r.outcome is None:       # unreachable by construction —
+                    if not r.done:          # belt and braces for the promise
+                        r.done = True       # that every request terminates
+                        done.append(r)
+                    r.outcome = guard_mod.RequestOutcome(
+                        "failed", "run ended without a terminal state",
+                        at_step=clock)
+            st["outcomes"] = {k: 0 for k in guard_mod.OUTCOMES}
+            for r in done:
+                if r.outcome is not None:
+                    st["outcomes"][r.outcome.status] += 1
+        if inj is not None:
+            st["chaos_injected"] = dict(inj.injected)
         if self.paged:
             st["pages"] = self.pager.stats()       # drained end state
             st["pages_peak"] = peak_pages          # busiest boundary
+            if g is not None:
+                # every request terminal implies a fully drained pool — the
+                # leak audit is the cheap proof
+                guard_mod.assert_pool_clean(self.pager, drained=True)
         return done

@@ -4,6 +4,14 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # no pytest.ini/pyproject in this repo, so markers register here
+    config.addinivalue_line(
+        "markers",
+        "chaos: seeded fault-injection suite for the serving guard "
+        "(run explicitly in CI via `-m chaos`; part of the default run too)")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

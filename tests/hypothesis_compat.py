@@ -29,3 +29,10 @@ except ModuleNotFoundError:
 
     def settings(*_a, **_k):
         return lambda fn: fn
+
+
+def fuzz_seeds(n, base=0):
+    """Deterministic seed list for randomized sweeps that must run with or
+    without hypothesis (ISSUE 6: allocator fuzz) — a failing seed reproduces
+    with plain pytest and no extra deps."""
+    return [base + 7919 * i for i in range(n)]
