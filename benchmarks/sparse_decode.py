@@ -690,6 +690,150 @@ def chaos_overload_benchmark(arch: str = "qwen2.5-3b-reduced", rows: int = 3,
     return out
 
 
+# -------------------------- ISSUE 7: multi-replica failover trace simulator
+def replica_failover_benchmark(arch: str = "qwen2.5-3b-reduced",
+                               rows: int = 2, n_requests: int = 12,
+                               cache_len: int = 48, page_size: int = 4,
+                               sync_every: int = 4, replicas: int = 3,
+                               kill_step: float = 8.0, mean_gap: float = 1.0,
+                               seed: int = 0) -> Dict:
+    """Multi-replica trace simulator: the --arrivals Poisson sweep through
+    the replica control plane (serve/replica.py), three ways:
+
+    * ``fault_free``  — N replicas, prefix-affinity routing: the goodput
+      baseline, plus the CoW page-sharing the router's placement achieves
+      on shared-system-prompt traffic.
+    * ``no_affinity`` — identical traffic with affinity off (pure
+      least-depth placement, the round-robin-equivalent spread): the
+      sharing comparison behind the ``router-prefix-affinity`` gate —
+      affinity must win strictly, or the placement rule is dead weight.
+    * ``killed``      — replica 0 killed mid-sweep at ``kill_step``:
+      stranded requests migrate by recompute; every request must still end
+      in exactly one terminal outcome, every request that completes ``ok``
+      in both runs must produce bit-identical tokens (greedy decode on the
+      shared virtual clock), and fleet goodput must hold the
+      ``failover-goodput-floor`` (>= 0.9x fault-free with 1 of
+      ``replicas`` lost — the recompute tax, not a collapse).
+
+    Goodput counts ok-tokens per virtual step of fleet makespan; all three
+    runs are seed-deterministic, so perf_guard gates them wall-clock-free.
+    """
+    import jax
+    from repro.core import dataflow
+    from repro.models import transformer as tfm
+    from repro.serve.chaos import ReplicaChaosConfig
+    from repro.serve.replica import ReplicaSet
+    from repro.serve.router import RouterConfig
+    from repro.serve.scheduler import StreamRequest
+
+    cfg = get_config(arch)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    arrivals = _poisson_arrivals(n_requests, mean_gap, rng)
+    max_news = [6 if i % 2 else 10 for i in range(n_requests)]
+    # two distinct system prompts (two full pages each) + a per-request
+    # tail, interleaved across arrivals: affinity routing partitions each
+    # prompt group onto its home replica for maximal CoW sharing, while
+    # depth-based placement interleaves the groups so co-resident requests
+    # hold mismatched prefixes — the traffic shape the placement rule
+    # exists for
+    sys_prompts = [[11, 12, 13, 14, 15, 16, 17, 18],
+                   [21, 22, 23, 24, 25, 26, 27, 28]]
+    num_pages = rows * dataflow.pages_for(cache_len, page_size)
+    plan = plan_lib.plan_for_scheduler(
+        cfg, rows=rows, cache_len=cache_len, page_size=page_size,
+        num_pages=num_pages, attn_path="paged", sync_every=sync_every)
+
+    def reqs():
+        return [StreamRequest(i, sys_prompts[i % 2] + [30 + i], max_news[i],
+                              arrival=arrivals[i], tenant="t%d" % (i % 3))
+                for i in range(n_requests)]
+
+    def run(affinity: bool = True, chaos=None) -> Dict:
+        rs = ReplicaSet(cfg, params, plan, replicas=replicas, eos_id=-1,
+                        router=RouterConfig(affinity=affinity))
+        t0 = time.perf_counter()
+        done = rs.run(reqs(), chaos=chaos)
+        wall = time.perf_counter() - t0
+        st = rs.phase_stats
+        ok_toks = sum(len(r.out) for r in done if r.outcome.ok)
+        makespan = st["clock_steps"]
+        return {
+            "outcomes": st["outcomes"],
+            "all_terminal": len(done) == n_requests
+            and all(r.outcome is not None for r in done),
+            "ok_tokens": ok_toks,
+            "makespan_steps": makespan,
+            "goodput_tokens_per_step": ok_toks / max(makespan, 1e-9),
+            "failovers": st["failovers"],
+            "migrated_requests": st["migrated_requests"],
+            "shared_tokens_admitted": st["fleet"]["shared_tokens_admitted"],
+            "router": st["router"],
+            "wall_s": wall,
+            "_tokens": {r.rid: list(r.out) for r in done if r.outcome.ok},
+            "_migrated": {r.rid for r in done if r.migrations > 0},
+        }
+
+    out: Dict = {
+        "arch": arch, "rows": rows, "replicas": replicas,
+        "n_requests": n_requests, "cache_len": cache_len,
+        "page_size": page_size, "num_pages": num_pages,
+        "sync_every": sync_every, "kill_step": kill_step,
+        "mean_gap": mean_gap,
+        "arrivals": [round(a, 2) for a in arrivals],
+        "max_new": max_news,
+    }
+    fault_free = run(affinity=True)
+    no_affinity = run(affinity=False)
+    killed = run(affinity=True,
+                 chaos=ReplicaChaosConfig(kill_at_step={0: kill_step}))
+    # survivors = requests that never migrated AND completed ok in both
+    # runs; bit-identity there proves replica loss never perturbs work
+    # that stayed on healthy replicas. Migrated requests are compared too
+    # (greedy recompute is exact) but reported separately.
+    survivors = [rid for rid in
+                 set(fault_free["_tokens"]) & set(killed["_tokens"])
+                 if rid not in killed["_migrated"]]
+    out["survivors_bit_identical"] = all(
+        fault_free["_tokens"][rid] == killed["_tokens"][rid]
+        for rid in survivors)
+    out["survivors_compared"] = len(survivors)
+    out["migrated_bit_identical"] = all(
+        fault_free["_tokens"][rid] == killed["_tokens"][rid]
+        for rid in killed["_migrated"] if rid in fault_free["_tokens"])
+    for name, row in (("fault_free", fault_free),
+                      ("no_affinity", no_affinity), ("killed", killed)):
+        row.pop("_tokens")
+        row["migrated_rids"] = sorted(row.pop("_migrated"))
+        out[name] = row
+    out["failover_goodput_ratio"] = (
+        killed["goodput_tokens_per_step"] /
+        max(fault_free["goodput_tokens_per_step"], 1e-9))
+    out["affinity_sharing_ratio"] = (
+        fault_free["shared_tokens_admitted"] /
+        max(no_affinity["shared_tokens_admitted"], 1))
+    return out
+
+
+def _print_replica_failover(rf: Dict) -> None:
+    print(f"=== Replica failover sweep ({rf['replicas']} replicas x "
+          f"{rf['rows']} rows, {rf['n_requests']} reqs, kill replica 0 @ "
+          f"step {rf['kill_step']:g}) ===")
+    for name in ("fault_free", "no_affinity", "killed"):
+        c = rf[name]
+        print(f"  {name:11s}: goodput {c['goodput_tokens_per_step']:.3f} "
+              f"tok/step  makespan {c['makespan_steps']:.0f}  "
+              f"ok {c['outcomes']['ok']}  failovers {c['failovers']}  "
+              f"migrated {c['migrated_requests']}  "
+              f"shared_toks {c['shared_tokens_admitted']}")
+    print(f"  failover goodput x{rf['failover_goodput_ratio']:.2f} of "
+          f"fault-free; survivors bit-identical: "
+          f"{rf['survivors_bit_identical']} "
+          f"({rf['survivors_compared']} compared, migrated identical: "
+          f"{rf['migrated_bit_identical']}); affinity sharing "
+          f"x{rf['affinity_sharing_ratio']:.1f} vs no-affinity")
+
+
 def _print_chaos(ch: Dict) -> None:
     print(f"=== Overload + chaos sweep ({ch['rows']} rows, "
           f"{ch['n_requests']} reqs, {ch['num_pages']} pages) ===")
@@ -854,6 +998,8 @@ def main(smoke: bool = False, engine: bool = True, repeats: int = None,
         # not scaled down in smoke: the shed/goodput gates need the exact
         # overload profile the guard thresholds were tuned against
         res["chaos"] = chaos_overload_benchmark()
+        # likewise exact: the failover/affinity gates compare seeded runs
+        res["replica_failover"] = replica_failover_benchmark()
 
     kp = res["kernel_proxy"]
     print("=== Batch-1 BCSC GEMV vs dense RS grid steps "
@@ -933,6 +1079,9 @@ def main(smoke: bool = False, engine: bool = True, repeats: int = None,
     if "chaos" in res:
         _print_chaos(res["chaos"])
 
+    if "replica_failover" in res:
+        _print_replica_failover(res["replica_failover"])
+
     with open(BENCH_JSON, "w") as f:
         json.dump(res, f, indent=2, default=float)
     print(f"wrote {BENCH_JSON}")
@@ -961,6 +1110,7 @@ if __name__ == "__main__":
         res["arrivals"] = arrival_benchmark()
         res["shared_prefix"] = shared_prefix_benchmark()
         res["chaos"] = chaos_overload_benchmark()
+        res["replica_failover"] = replica_failover_benchmark()
         with open(BENCH_JSON, "w") as f:
             json.dump(res, f, indent=2, default=float)
         ar = res["arrivals"]

@@ -13,8 +13,17 @@ delivered via ``on_outcome``, overload degrades along the plan's ladder
 (int8 KV -> clamp -> shed) instead of raising, and ``--ttl`` attaches a
 deadline in decode steps to every request.
 
+With ``--replicas N`` the same facade serves through the multi-replica
+control plane (ISSUE 7): a router places requests by prefix affinity and
+measured queue depth across N scheduler replicas on one shared virtual
+clock, heartbeats are audited every sync window, and ``--kill-replica-at
+STEP`` chaos-kills replica 0 mid-run — stranded requests migrate by
+recompute and every request still ends in exactly one outcome.
+
     PYTHONPATH=src python examples/serve_lm.py --requests 12 --rows 4
     PYTHONPATH=src python examples/serve_lm.py --mean-gap 1 --ttl 40
+    PYTHONPATH=src python examples/serve_lm.py --replicas 3 \\
+        --kill-replica-at 8
 """
 import argparse
 import time
@@ -47,7 +56,17 @@ def main():
     ap.add_argument("--ttl", type=float, default=None,
                     help="per-request deadline in decode steps from arrival "
                          "(unfinished requests resolve `expired`)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="scheduler replicas behind the router (>1 serves "
+                         "through the multi-replica control plane)")
+    ap.add_argument("--kill-replica-at", type=float, default=None,
+                    help="chaos-kill replica 0 at this virtual step "
+                         "(requires --replicas > 1); stranded requests "
+                         "migrate by recompute")
     args = ap.parse_args()
+    if args.kill_replica_at is not None and args.replicas < 2:
+        ap.error("--kill-replica-at needs --replicas > 1 (killing the "
+                 "only replica just respawns it)")
 
     cfg = get_config(args.arch + "-reduced")
     params = tfm.init_params(jax.random.PRNGKey(0), cfg)
@@ -67,7 +86,8 @@ def main():
     print(plan.explain())
     print()
 
-    llm = LLM(cfg, params, plan, eos_id=1)   # guard on by default
+    llm = LLM(cfg, params, plan, eos_id=1,   # guard on by default
+              replicas=args.replicas)
 
     def finished(req, outcome):
         if not outcome.ok:
@@ -97,18 +117,36 @@ def main():
                           on_token=stream)
             for i in range(args.requests)]
 
+    chaos = None
+    if args.kill_replica_at is not None:
+        from repro.serve.chaos import ReplicaChaosConfig
+        chaos = ReplicaChaosConfig(
+            kill_at_step={0: args.kill_replica_at})
+
     t0 = time.time()
-    done = llm.stream(reqs, on_outcome=finished)
+    done = llm.stream(reqs, on_outcome=finished, chaos=chaos)
     dt = time.time() - t0
     new_toks = sum(len(r.out) for r in done)
     st = llm.phase_stats
+    fleet = st.get("fleet", st)   # multi-replica aggregates live in "fleet"
     lat = [r.finished_at - r.arrival for r in done]
     print(f"{len(done)} requests, {new_toks} tokens in {dt:.1f}s "
           f"({new_toks / dt:.1f} tok/s wall; "
           f"{new_toks / max(st['clock_steps'], 1):.2f} tok/step)")
     print(f"latency p50 {np.percentile(lat, 50):.0f} / "
           f"p99 {np.percentile(lat, 99):.0f} steps; "
-          f"preemptions {st['preemptions']}")
+          f"preemptions {fleet['preemptions']}")
+    if args.replicas > 1:
+        ro = st["router"]
+        print(f"fleet: {st['replicas_spawned']} replicas spawned, "
+              f"{st['replicas_final']} live at end; "
+              f"failovers {st['failovers']}"
+              + (f" {st['failover_reasons']}" if st["failovers"] else "")
+              + f", {st['migrated_requests']} requests migrated")
+        print(f"router: {ro['affinity_hits']}/{ro['placements']} "
+              f"placements hit prefix affinity "
+              f"({fleet['shared_tokens_admitted']} prompt tokens adopted "
+              f"from shared pages)")
     print(f"outcomes: " + ", ".join(
         f"{k} {v}" for k, v in st["outcomes"].items() if v))
     pg = st.get("pages_peak")

@@ -33,7 +33,12 @@ Checks:
      and the injected-fault run keeps every request terminal with a clean
      pool audit and bit-identical surviving tokens — all on the virtual
      step clock
- 10. plan snapshot (ISSUE 5): the resolved ServePlans for the seed configs
+ 10. replica failover (ISSUE 7): killing 1 of N replicas mid-sweep leaves
+     non-migrated survivors bit-identical and every rid terminal, fleet
+     goodput holds >= 0.9x the fault-free run (the recompute tax bound),
+     and prefix-affinity placement achieves strictly more CoW page sharing
+     on shared-prompt traffic than affinity-free placement
+ 11. plan snapshot (ISSUE 5): the resolved ServePlans for the seed configs
      (core.plan.snapshot_plan — fixed budget/shape inputs) match
      scripts/golden_plans.json exactly. Any drift in a dispatch decision,
      threshold, pool size, or bound rationale fails CI until the golden
@@ -179,6 +184,34 @@ def main(path: str = "BENCH_sparse_decode.json") -> int:
               f"(injected: {fa['chaos_injected']})")
     else:
         print("  [--] chaos section absent; overload/degradation gates "
+              "skipped")
+
+    rf = data.get("replica_failover", {})
+    if rf:
+        ff, ki = rf["fault_free"], rf["killed"]
+        check("failover-survivors-bit-identical",
+              rf["survivors_bit_identical"] and rf["survivors_compared"] > 0
+              and all(r["all_terminal"] for r in (ff, ki)),
+              f"{rf['survivors_compared']} non-migrated survivors "
+              f"bit-identical after killing 1 of {rf['replicas']} replicas "
+              f"at step {rf['kill_step']:g}; every rid terminal in both "
+              f"runs (migrated identical: {rf['migrated_bit_identical']})")
+        check("failover-goodput-floor",
+              rf["failover_goodput_ratio"] >= 0.9,
+              f"killed {ki['goodput_tokens_per_step']:.3f} tok/step >= 0.9 "
+              f"x fault-free {ff['goodput_tokens_per_step']:.3f} "
+              f"(x{rf['failover_goodput_ratio']:.2f} with "
+              f"{ki['migrated_requests']} migrations)")
+        check("router-prefix-affinity",
+              rf["fault_free"]["shared_tokens_admitted"] >
+              rf["no_affinity"]["shared_tokens_admitted"],
+              f"affinity placement shares "
+              f"{rf['fault_free']['shared_tokens_admitted']} prompt tokens "
+              f"from adopted pages vs "
+              f"{rf['no_affinity']['shared_tokens_admitted']} without "
+              f"(x{rf['affinity_sharing_ratio']:.1f})")
+    else:
+        print("  [--] replica_failover section absent; failover gates "
               "skipped")
 
     plans = data.get("plans", {})

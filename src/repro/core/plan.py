@@ -652,6 +652,36 @@ def plan_serve(cfg, *, hbm_budget_bytes: int, expected_batch: int,
         })
 
 
+def replan_from_lengths(cfg, base_plan: ServePlan, lengths,
+                        *, arch: Optional[str] = None) -> ServePlan:
+    """Feedback-driven re-plan (serve/replica.py): resolve a fresh ServePlan
+    from *measured* finished-request total lengths (prompt + generated
+    tokens), keeping the base plan's serving envelope — rows, cache_len,
+    page geometry, kernel routes, sync cadence — pinned so a hot-swap at a
+    drain boundary can never shrink feasibility (any request admissible
+    under the base plan stays admissible) or flip a dispatch decision
+    mid-deployment. Only the *pool size* re-resolves, from
+    ``{'mean': measured mean, 'max': base.cache_len}`` — the occupancy knob
+    the original ``expected_len_dist`` guess was standing in for.
+    """
+    from repro.serve import kvcache
+
+    mean_len, _ = _normalize_len_dist(list(lengths))
+    mean_len = min(mean_len, float(base_plan.cache_len))
+    slot_bytes = kvcache.cache_bytes(cfg, 1, base_plan.cache_len)
+    return plan_serve(
+        cfg,
+        hbm_budget_bytes=base_plan.rows * slot_bytes,
+        expected_batch=base_plan.rows,
+        expected_len_dist={"mean": mean_len, "max": base_plan.cache_len},
+        page_size=base_plan.page_size or None,
+        attn_path=base_plan.attn_path,
+        share_prefix=base_plan.share_prefix,
+        kv_quant=base_plan.kv_quant,
+        sync_every=base_plan.sync_every,
+        arch=arch or base_plan.arch)
+
+
 # ------------------------------------------------------------- legacy shims
 def plan_for_engine(cfg, *, slots: int, cache_len: int,
                     sync_every: int = 8) -> ServePlan:

@@ -48,15 +48,40 @@ class FaultToleranceConfig:
 
 
 class StragglerDetector:
+    """Median-based straggler detector, shared by the train-loop Supervisor
+    and the serving ReplicaSupervisor (serve/replica.py).
+
+    Serving reuse seam: a replica restarts its local step counter after a
+    failover, so ``observe`` tolerates non-monotonic ``step`` input — a step
+    that moves backwards starts a fresh epoch (strike state cleared, the
+    timing history kept: step *durations* stay comparable across restarts,
+    stale strikes do not). ``reset`` drops everything, for supervisors that
+    recycle one detector across replica generations.
+    """
+
     def __init__(self, factor: float, patience: int):
         self.factor = factor
         self.patience = patience
         self.times: List[float] = []
         self.strikes = 0
         self.events: List[Dict] = []
+        self.last_step: Optional[int] = None
+
+    def reset(self) -> None:
+        """Forget all observations (history, strikes, events, epoch)."""
+        self.times.clear()
+        self.strikes = 0
+        self.events.clear()
+        self.last_step = None
 
     def observe(self, step: int, dt: float) -> bool:
         """Returns True if this step is flagged as a straggler."""
+        if self.last_step is not None and step < self.last_step:
+            # restarted step clock (e.g. replica failover): stale strikes
+            # must not carry into the new epoch
+            self.strikes = 0
+        self.last_step = step
+        dt = max(dt, 0.0)
         flagged = False
         if len(self.times) >= 5:
             med = statistics.median(self.times[-50:])

@@ -1,6 +1,6 @@
 from repro.serve import (chaos, engine, facade, guard, kvcache, paging,
-                         scheduler, sparse)
+                         replica, router, scheduler, sparse)
 from repro.serve.facade import LLM
 
 __all__ = ["LLM", "chaos", "engine", "facade", "guard", "kvcache", "paging",
-           "scheduler", "sparse"]
+           "replica", "router", "scheduler", "sparse"]

@@ -57,6 +57,39 @@ class ChaosConfig:
         default_factory=dict)
 
 
+@dataclasses.dataclass
+class ReplicaChaosConfig:
+    """Replica-level fault schedule for the multi-replica control plane
+    (serve/replica.ReplicaSet). Where :class:`ChaosConfig` injects faults a
+    single scheduler must absorb, this schedules whole-replica failures the
+    *supervisor* must absorb — the dominant failure mode at fleet scale:
+
+    * ``kill_at_step``    — replica dies abruptly at the given virtual-clock
+      step (its run generator is abandoned mid-flight: no finalization, page
+      pool lost, in-flight requests stranded until failover re-routes them).
+    * ``stall_at_step``   — replica hangs from that step on: it stops
+      responding to boundary ticks but is never cleanly dead, so only the
+      heartbeat audit (steps since last response, judged by the shared
+      ``runtime.fault_tolerance.StragglerDetector``) can catch it.
+    * ``corrupt_pool_at_step`` — the replica's PageAllocator metadata is
+      corrupted at that step (a phantom refcount, exactly the drift
+      ``guard.audit_pool`` exists to catch); the per-window pool audit must
+      quarantine the replica before the corruption spreads.
+    * ``request_chaos``   — optional per-replica :class:`ChaosConfig`
+      threaded into that replica's scheduler run (both chaos layers
+      compose).
+
+    All maps are keyed by replica slot id; every schedule is deterministic
+    on the shared virtual clock, so two same-seed runs fail identically.
+    """
+    kill_at_step: Dict[int, float] = dataclasses.field(default_factory=dict)
+    stall_at_step: Dict[int, float] = dataclasses.field(default_factory=dict)
+    corrupt_pool_at_step: Dict[int, float] = dataclasses.field(
+        default_factory=dict)
+    request_chaos: Dict[int, ChaosConfig] = dataclasses.field(
+        default_factory=dict)
+
+
 class FaultInjector:
     """Stateful executor of one :class:`ChaosConfig` (one run's faults).
 

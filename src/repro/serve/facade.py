@@ -31,6 +31,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 from repro.core import eyexam, plan as plan_lib
 from repro.serve.engine import DecodeEngine, Request
 from repro.serve.guard import GuardConfig
+from repro.serve.replica import ReplicaSet
 from repro.serve.scheduler import ContinuousBatchingScheduler, StreamRequest
 
 DEFAULT_LEN_DIST = {"mean": 256, "max": 512}
@@ -52,7 +53,16 @@ class LLM:
 
     def __init__(self, cfg, params, plan: Optional[plan_lib.ServePlan] = None,
                  *, eos_id: int = 1, temperature: float = 0.0,
-                 guard: Union[GuardConfig, None, bool] = None):
+                 guard: Union[GuardConfig, None, bool] = None,
+                 replicas: int = 1,
+                 on_token: Optional[Callable] = None,
+                 on_outcome: Optional[Callable] = None):
+        if replicas < 1:
+            raise ValueError(
+                f"replicas must be >= 1, got {replicas}: serving always "
+                "goes through at least one scheduler replica (replicas=1 "
+                "is the single-scheduler fast path, replicas>=2 the "
+                "fault-tolerant control plane)")
         if plan is None:
             plan = plan_lib.plan_serve(
                 cfg,
@@ -74,8 +84,18 @@ class LLM:
         elif guard is False:
             guard = None
         self.guard: Optional[GuardConfig] = guard
+        # multi-replica control plane (ISSUE 7): replicas >= 2 serves
+        # stream() through a ReplicaSet — router placement, heartbeats,
+        # deterministic failover — on the same plan and guard
+        self.replicas = replicas
+        # constructor-level streaming defaults: a deployment that always
+        # wants the same callbacks sets them once here; per-call arguments
+        # (and per-request callbacks) still override
+        self.on_token = on_token
+        self.on_outcome = on_outcome
         self._engine: Optional[DecodeEngine] = None
         self._scheduler: Optional[ContinuousBatchingScheduler] = None
+        self._replicaset: Optional[ReplicaSet] = None
         self._last_run = None                # engine behind the last call
 
     # ------------------------------------------------------------- helpers
@@ -159,22 +179,38 @@ class LLM:
         Wraps the paged ``ContinuousBatchingScheduler`` (requests may carry
         ``arrival`` stamps and per-request ``on_token`` callbacks; a
         call-level ``on_token(request, token)`` applies to any request
-        without its own, as does ``on_outcome(request, outcome)``). With the
-        default guard every returned request carries a terminal
-        ``r.outcome`` (ok/shed/expired/preempted_out/failed). ``chaos``
-        takes a ``serve.chaos.ChaosConfig`` for deterministic fault
-        injection (tests/CI only). Returns finished requests in input order.
+        without its own, falling back to the constructor-level default, as
+        does ``on_outcome(request, outcome)``). With the default guard every
+        returned request carries a terminal ``r.outcome``
+        (ok/shed/expired/preempted_out/failed). With ``replicas >= 2`` the
+        call serves through the multi-replica control plane
+        (``serve.replica.ReplicaSet``): router placement, heartbeat
+        supervision, deterministic failover. ``chaos`` takes a
+        ``serve.chaos.ChaosConfig`` (or, multi-replica, a
+        ``ReplicaChaosConfig``) for deterministic fault injection (tests/CI
+        only). Returns finished requests in input order.
         """
-        if self._scheduler is None:
-            self._scheduler = ContinuousBatchingScheduler(
-                self.cfg, self.params, self.plan, eos_id=self.eos_id,
-                temperature=self.temperature, guard=self.guard)
+        on_token = on_token if on_token is not None else self.on_token
+        on_outcome = on_outcome if on_outcome is not None \
+            else self.on_outcome
         reqs = self._normalize(requests, StreamRequest, on_token=on_token)
         self._validate(reqs)
         if on_outcome is not None:
             for r in reqs:
                 if r.on_outcome is None:
                     r.on_outcome = on_outcome
+        if self.replicas > 1:
+            if self._replicaset is None:
+                self._replicaset = ReplicaSet(
+                    self.cfg, self.params, self.plan,
+                    replicas=self.replicas, eos_id=self.eos_id,
+                    temperature=self.temperature, guard=self.guard)
+            self._last_run = self._replicaset
+            return self._replicaset.run(reqs, rng=rng, chaos=chaos)
+        if self._scheduler is None:
+            self._scheduler = ContinuousBatchingScheduler(
+                self.cfg, self.params, self.plan, eos_id=self.eos_id,
+                temperature=self.temperature, guard=self.guard)
         self._last_run = self._scheduler
         done = self._scheduler.run(reqs, rng=rng, chaos=chaos)
         return sorted(done, key=lambda r: r.rid)

@@ -1,0 +1,649 @@
+"""Multi-replica serving control plane: lockstep replicas, heartbeats,
+deterministic failover (ISSUE 7).
+
+One ``ContinuousBatchingScheduler`` is a single failure domain: a host dies
+and every in-flight request dies with it. This module wraps N schedulers —
+each with its own page pool, jitted programs, and rng stream — behind the
+same front door (``repro.serve.LLM(..., replicas=N)``) and makes the fleet
+survive replica loss without giving up the repo's determinism contract:
+
+* **One shared virtual clock.** Replicas are driven through the
+  scheduler's boundary-stepped generator (``start_gen`` / ``("tick", G)``):
+  every live replica processes the boundary at global clock G before anyone
+  sees G+T, and a scheduler never idle-jumps ahead of the clock. Placement,
+  failure detection, and failover all key off G — two same-seed runs
+  produce identical outcome sets because nothing reads wall-clock.
+* **Heartbeats + supervision.** A replica's heartbeat is *virtual steps
+  since it last responded to a tick*, audited every sync window. The
+  ``ReplicaSupervisor`` reuses the train-loop's
+  ``runtime.fault_tolerance.StragglerDetector`` (median-based flagging,
+  strike persistence) to catch creeping stalls, with a hard
+  ``max_silent_windows`` ceiling behind it (a replica silent from its very
+  first window never builds the healthy history the median needs), plus a
+  ``guard.audit_pool`` sweep per window to quarantine allocator corruption
+  before it spreads. Kills are visible immediately (the replica's state
+  flips); stalls and corruption are *detected*, not observed.
+* **Deterministic failover.** A failed replica's generator is abandoned
+  exactly as a dead process would be (no finalization — ``gen.close()``),
+  its unfinished requests harvested from the scheduler's live state and
+  re-routed in (arrival, rid) order through the router. Active requests
+  migrate by recompute through the existing preemption path (the resume
+  prompt is ``prompt + out``, bit-exact under greedy decode); each request
+  carries a migration budget and pays the shared ``backoff_delay`` schedule
+  per migration, and a request whose budget is spent resolves ``failed`` —
+  so every submitted rid ends in exactly one terminal
+  :class:`~repro.serve.guard.RequestOutcome`, fleet-wide, under any chaos
+  schedule.
+* **Feedback re-planning.** Finished-request lengths feed
+  ``core.plan.replan_from_lengths``; when the measured mean drifts past the
+  plan's assumed occupancy, the replica hot-swaps the re-resolved plan at a
+  drain boundary (never mid-flight — dispatch identity holds within a
+  request's lifetime).
+* **Autoscaling.** Measured queue depth per live replica against
+  high/low watermarks with patience counters (hysteresis): bursts spawn
+  replicas, sustained idleness retires drained ones — never a replica that
+  still holds work.
+
+Replica-level chaos (``serve.chaos.ReplicaChaosConfig``) schedules kills,
+permanent stalls, and pool corruption on the same virtual clock, so the
+chaos suite can assert the real promises: survivors bit-identical to a
+fault-free run, exactly-once outcomes, goodput within a constant factor of
+the no-failure run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.core import plan as plan_lib
+from repro.runtime.fault_tolerance import StragglerDetector, backoff_delay
+from repro.serve import chaos as chaos_mod, guard as guard_mod
+from repro.serve.router import Router, RouterConfig
+from repro.serve.scheduler import ContinuousBatchingScheduler, StreamRequest
+
+# replica lifecycle states
+LIVE = "live"
+DEAD = "dead"              # killed (chaos or supervisor on stall/corruption)
+RETIRED = "retired"        # cleanly drained and stopped (scale-down)
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    """Failure-detection policy (all thresholds in sync windows).
+
+    The straggler detector needs ~5 healthy observations before its median
+    is meaningful; ``max_silent_windows`` is the unconditional ceiling that
+    catches replicas stalled too early to have a history.
+    """
+    heartbeat_factor: float = 3.0     # StragglerDetector flag multiplier
+    heartbeat_patience: int = 2       # consecutive flags -> stalled
+    max_silent_windows: int = 8       # hard heartbeat ceiling
+    audit_every_window: bool = True   # guard.audit_pool per replica/window
+
+
+@dataclasses.dataclass
+class AutoscaleConfig:
+    """Queue-depth autoscaling with hysteresis (depths per live replica)."""
+    min_replicas: int = 1
+    max_replicas: int = 4
+    high_depth: float = 6.0           # scale up above this
+    low_depth: float = 1.0            # scale down below this
+    patience_windows: int = 3         # watermark must hold this long
+
+
+@dataclasses.dataclass
+class ReplanConfig:
+    """Feedback-driven re-planning policy.
+
+    Re-plan fires when the measured mean finished length drifts more than
+    ``drift_threshold`` (relative) from the plan's assumed occupancy, with
+    at least ``min_samples`` finished requests behind the measurement; the
+    swap itself only happens at a replica drain boundary.
+    """
+    min_samples: int = 8
+    drift_threshold: float = 0.3
+
+
+class Replica:
+    """One scheduler + its boundary-stepped generator + liveness state.
+
+    ``slot`` is the fleet-unique identity (never reused — chaos schedules,
+    detectors, and router affinity key off it). ``generation`` counts plan
+    hot-swaps; the local step counter restarts with each generation, which
+    is exactly the non-monotonic input seam ``StragglerDetector.observe``
+    tolerates.
+    """
+
+    def __init__(self, slot: int, cfg, params, plan, *, eos_id: int,
+                 temperature: float, guard):
+        self.slot = slot
+        self.cfg = cfg
+        self.params = params
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.guard = guard
+        self.state = LIVE
+        self.failed_over = False     # failover executed (exactly once)
+        self.fail_reason = ""
+        self.generation = 0
+        self.local_step = 0          # boundaries processed this generation
+        self.last_response: float = 0.0   # clock of last answered tick
+        self.last_status: Optional[Dict] = None
+        self.done_accum: List[StreamRequest] = []   # prior generations
+        self.stalled_by_chaos = False
+        self._gen = None
+        self.scheduler = ContinuousBatchingScheduler(
+            cfg, params, plan, eos_id=eos_id, temperature=temperature,
+            guard=guard)
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self, rng, chaos=None, at_clock: float = 0.0,
+              sync_every: int = 1) -> None:
+        self._gen = self.scheduler.start_gen([], rng=rng, chaos=chaos)
+        # a fresh replica counts as having just responded (spawn is a sync)
+        self.last_response = at_clock - sync_every
+        self.local_step = 0
+        self.last_status = None
+
+    def tick(self, clock: float) -> Optional[Dict]:
+        """Process one boundary at the shared clock. Returns the status
+        dict, or None if the replica's own pool audit raised (the replica
+        is marked DEAD for the supervisor to fail over)."""
+        try:
+            with plan_lib.activate(self.scheduler.plan):
+                self.last_status = self._gen.send(("tick", clock))
+        except guard_mod.PoolAuditError as e:
+            # the generator died raising — same surface as a crashed host
+            self._gen = None
+            self.state = DEAD
+            self.last_status = None
+            self.fail_reason = f"pool audit failed in-run: {e}"
+            return None
+        self.last_response = clock
+        self.local_step += 1
+        return self.last_status
+
+    def stop(self) -> List[StreamRequest]:
+        """Finalize cleanly (requires a drained scheduler when guarded)."""
+        try:
+            with plan_lib.activate(self.scheduler.plan):
+                self._gen.send(("stop", None))
+        except StopIteration as e:
+            return e.value
+        finally:
+            self._gen = None
+        raise RuntimeError("scheduler generator did not finalize on stop")
+
+    def kill(self) -> None:
+        """Abandon the run exactly as a dead process would: the generator
+        unwinds without finalization, outcomes undelivered, live state left
+        harvestable."""
+        if self._gen is not None:
+            self._gen.close()
+            self._gen = None
+
+    # ------------------------------------------------------------- queries
+    def queue_depth(self) -> int:
+        live = self.scheduler._live
+        if live is None:
+            return 0
+        return len(live["pending"]) + len(live["waiting"]) \
+            + len(live["active"])
+
+    def heartbeat(self, clock: float) -> float:
+        """Virtual steps since this replica last answered a tick."""
+        return clock - self.last_response
+
+    def harvest_unfinished(self) -> List[StreamRequest]:
+        """Requests stranded by this replica's death (no terminal outcome),
+        in (arrival, rid) order — the failover re-route order."""
+        live = self.scheduler._live
+        if live is None:
+            return []
+        stranded = list(live["pending"]) + list(live["waiting"]) \
+            + list(live["active"].values())
+        stranded = [r for r in stranded if r.outcome is None]
+        return sorted(stranded, key=lambda r: (r.arrival, r.rid))
+
+    def collect_done(self) -> List[StreamRequest]:
+        """Every request this replica resolved, across plan generations."""
+        out = list(self.done_accum)
+        if self.scheduler._live is not None:
+            out.extend(self.scheduler._live["done"])
+        return out
+
+    # ----------------------------------------------------------- plan swap
+    def swap_plan(self, plan, rng, chaos=None, at_clock: float = 0.0) -> None:
+        """Hot-swap a re-resolved plan at a drain boundary: finalize the
+        drained run, rebuild the scheduler on the new plan, restart the
+        generator. The local step counter restarts — downstream heartbeat
+        observers must tolerate the non-monotonic step input."""
+        self.done_accum.extend(self.stop())
+        self.generation += 1
+        self.scheduler = ContinuousBatchingScheduler(
+            self.cfg, self.params, plan, eos_id=self.eos_id,
+            temperature=self.temperature, guard=self.guard)
+        self.start(rng, chaos=chaos, at_clock=at_clock,
+                   sync_every=self.scheduler.sync_every)
+
+
+class ReplicaSupervisor:
+    """Per-window liveness audit over the fleet.
+
+    Reuses the train loop's :class:`StragglerDetector` per slot: each
+    window every live replica's heartbeat (in windows) is observed; a
+    healthy replica contributes ~1.0, a stalling one a growing value that
+    flags once past ``factor × median`` and persists past ``patience``.
+    ``max_silent_windows`` backstops the cold-start case, and
+    ``guard.audit_pool`` catches allocator corruption the same window it
+    appears. Returns *reasons*, never mutates the fleet — failover policy
+    belongs to the ReplicaSet.
+    """
+
+    def __init__(self, cfg: Optional[SupervisorConfig] = None):
+        self.cfg = cfg or SupervisorConfig()
+        self._detectors: Dict[int, StragglerDetector] = {}
+
+    def detector(self, slot: int) -> StragglerDetector:
+        if slot not in self._detectors:
+            self._detectors[slot] = StragglerDetector(
+                self.cfg.heartbeat_factor, self.cfg.heartbeat_patience)
+        return self._detectors[slot]
+
+    def audit(self, replicas: List[Replica], clock: float,
+              sync_every: int) -> List[tuple]:
+        """One supervision window: returns [(replica, reason), ...] for
+        every replica that must be failed over, deterministic order."""
+        failures = []
+        for rep in replicas:
+            if rep.state == DEAD:
+                failures.append(
+                    (rep, rep.fail_reason or "replica died (killed)"))
+                continue
+            hb_windows = rep.heartbeat(clock) / max(sync_every, 1)
+            det = self.detector(rep.slot)
+            det.observe(rep.local_step, hb_windows)
+            if det.persistent:
+                failures.append((rep, f"heartbeat stalled: silent for "
+                                      f"{hb_windows:.0f} windows (straggler "
+                                      f"strikes {det.strikes})"))
+                continue
+            if hb_windows > self.cfg.max_silent_windows:
+                failures.append((rep, f"heartbeat stalled: silent for "
+                                      f"{hb_windows:.0f} windows (hard "
+                                      "ceiling "
+                                      f"{self.cfg.max_silent_windows})"))
+                continue
+            if self.cfg.audit_every_window and rep.scheduler.paged \
+                    and rep.scheduler.pager is not None:
+                violations = guard_mod.audit_pool(rep.scheduler.pager)
+                if violations:
+                    failures.append(
+                        (rep, f"pool audit failed ({len(violations)} "
+                              f"violation(s)): {violations[0]}"))
+        return failures
+
+
+class ReplicaSet:
+    """N lockstep scheduler replicas behind one run() call.
+
+    The drive loop per window at global clock G, in fixed order (every
+    stage deterministic on G and the seed):
+
+    1. apply due replica chaos (kill / stall / pool corruption);
+    2. supervise: heartbeat + pool audits -> failover (harvest stranded
+       requests, re-route in (arrival, rid) order, budget-checked);
+    3. autoscale on measured queue depth (hysteresis);
+    4. re-plan check at drain boundaries (measured length feedback);
+    5. dispatch due arrivals in per-tenant fair order through the router;
+    6. tick every responsive replica with ("tick", G);
+    7. harvest finished-length feedback;
+    then G += sync_every until every submitted request holds a terminal
+    outcome. Requests the fleet can no longer host (migration budget spent)
+    resolve ``failed`` here — the exactly-once outcome promise is the
+    ReplicaSet's, not any single scheduler's.
+    """
+
+    def __init__(self, cfg, params, plan=None, *, replicas: int = 2,
+                 eos_id: int = 1, temperature: float = 0.0,
+                 guard: Optional[guard_mod.GuardConfig] = None,
+                 router: Optional[RouterConfig] = None,
+                 supervisor: Optional[SupervisorConfig] = None,
+                 autoscale: Optional[AutoscaleConfig] = None,
+                 replan: Optional[ReplanConfig] = None,
+                 migration_budget: int = 3,
+                 migrate_backoff_steps: float = 0.0,
+                 max_rounds: int = 10_000):
+        if replicas < 1:
+            raise ValueError(
+                f"replicas must be >= 1, got {replicas}: the control plane "
+                "needs at least one scheduler replica to place requests on")
+        if plan is None:
+            plan = plan_lib.plan_serve(
+                cfg, hbm_budget_bytes=1 << 30, expected_batch=4,
+                expected_len_dist={"mean": 256, "max": 512})
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan                  # template for spawns (may re-plan)
+        self.eos_id = eos_id
+        self.temperature = temperature
+        # the control plane's promises (exactly-once outcomes, failover)
+        # are guard-layer promises — a guardless fleet would raise on the
+        # first overload instead of degrading, so the guard is always on
+        self.guard = guard or guard_mod.GuardConfig()
+        self.sync_every = plan.sync_every
+        self.router = Router(router, page_size=plan.page_size)
+        self.supervisor = ReplicaSupervisor(supervisor)
+        self.autoscale = autoscale
+        self.replan = replan
+        self.migration_budget = migration_budget
+        self.migrate_backoff_steps = migrate_backoff_steps
+        self.max_rounds = max_rounds
+        self.n_replicas = replicas
+        self._all: List[Replica] = []     # every replica ever spawned
+        self._next_slot = 0
+        self.phase_stats: Dict = {}
+
+    # ------------------------------------------------------------- helpers
+    def _live(self) -> List[Replica]:
+        return [rep for rep in self._all if rep.state == LIVE]
+
+    def _rng_for(self, root, slot: int, generation: int):
+        # fold slot and generation into the root key: per-replica streams
+        # are independent of fleet membership, so a survivor's randomness
+        # never depends on whether another replica died
+        return jax.random.fold_in(jax.random.fold_in(root, slot), generation)
+
+    def _spawn(self, root, chaos: chaos_mod.ReplicaChaosConfig,
+               at_clock: float) -> Replica:
+        slot = self._next_slot
+        self._next_slot += 1
+        rep = Replica(slot, self.cfg, self.params, self.plan,
+                      eos_id=self.eos_id, temperature=self.temperature,
+                      guard=self.guard)
+        rep.start(self._rng_for(root, slot, 0),
+                  chaos=chaos.request_chaos.get(slot),
+                  at_clock=at_clock, sync_every=self.sync_every)
+        self._all.append(rep)
+        self._st["replicas_spawned"] += 1
+        return rep
+
+    def _resolve_failed(self, r: StreamRequest, clock: float,
+                        reason: str) -> None:
+        r.done = True
+        r.finished_at = clock
+        r.outcome = guard_mod.RequestOutcome(
+            "failed", reason, at_step=clock, degraded=tuple(r.degraded))
+        if r.on_outcome is not None:
+            r.on_outcome(r, r.outcome)
+        self._failed.append(r)
+
+    def _failover(self, rep: Replica, reason: str, clock: float) -> None:
+        """Deterministic failover: kill, forget affinity, re-route stranded
+        requests in (arrival, rid) order with per-request budgets."""
+        rep.kill()
+        rep.state = DEAD
+        rep.failed_over = True
+        self.router.forget_replica(rep.slot)
+        st = self._st
+        st["failovers"] += 1
+        st["failover_reasons"].setdefault(reason.split(":")[0], 0)
+        st["failover_reasons"][reason.split(":")[0]] += 1
+        for r in rep.harvest_unfinished():
+            r.migrations += 1
+            if r.migrations > self.migration_budget:
+                self._resolve_failed(
+                    r, clock,
+                    f"migration budget ({self.migration_budget}) spent: "
+                    f"request lost its host {r.migrations} times "
+                    f"(last: {reason}); {len(r.out)} generated tokens kept")
+                st["failed_migrations"] += 1
+            else:
+                # re-route through normal dispatch; the shared backoff
+                # schedule paces repeat offenders (0 base: immediate)
+                self._hold[r.rid] = clock + backoff_delay(
+                    r.migrations, self.migrate_backoff_steps)
+                self._pendq.append(r)
+                st["migrated_requests"] += 1
+        self._pendq.sort(key=lambda r: (r.arrival, r.rid))
+
+    def _plan_mean(self) -> float:
+        """The occupancy assumption baked into the current plan."""
+        for d in self.plan.decisions:
+            if "expected_mean_len" in getattr(d, "numbers", {}):
+                return float(d.numbers["expected_mean_len"])
+        return self.plan.cache_len / 2
+
+    # ----------------------------------------------------------------- run
+    def run(self, requests: List[StreamRequest], rng=None,
+            chaos: Optional[chaos_mod.ReplicaChaosConfig] = None
+            ) -> List[StreamRequest]:
+        root = rng if rng is not None else jax.random.PRNGKey(0)
+        if chaos is None:
+            chaos = chaos_mod.ReplicaChaosConfig()
+        elif isinstance(chaos, chaos_mod.ChaosConfig):
+            # request-level chaos through the multi-replica path: every
+            # replica gets the same seeded schedule
+            chaos = chaos_mod.ReplicaChaosConfig(
+                request_chaos={s: chaos for s in range(self.n_replicas)})
+        reqs = list(requests)
+        rids = [r.rid for r in reqs]
+        if len(set(rids)) != len(rids):
+            raise ValueError(f"request rids must be unique, got {rids}")
+        # feasibility against the plan envelope, up front: a late infeasible
+        # request must raise before any replica does any work (the same
+        # caller-bug contract as the single-scheduler run), and re-planning
+        # pins cache_len so the check stays valid across hot-swaps
+        for r in reqs:
+            total = len(r.prompt) + r.max_new
+            if r.max_new > 0 and total > self.plan.cache_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt ({len(r.prompt)}) + max_new "
+                    f"({r.max_new}) exceeds cache_len "
+                    f"({self.plan.cache_len})")
+        T = self.sync_every
+        st = self._st = self.phase_stats = {
+            "replicas": self.n_replicas, "replicas_spawned": 0,
+            "failovers": 0, "failover_reasons": {},
+            "migrated_requests": 0, "failed_migrations": 0,
+            "scale_ups": 0, "scale_downs": 0, "replans": 0,
+            "rounds": 0, "clock_steps": 0.0,
+        }
+        self._all = []
+        self._next_slot = 0
+        self._failed: List[StreamRequest] = []
+        self._pendq = sorted(reqs, key=lambda r: (r.arrival, r.rid))
+        self._hold: Dict[int, float] = {}       # rid -> earliest dispatch
+        self._finished_lengths: List[int] = []
+        self._done_seen: Dict[int, int] = {}    # slot -> done entries seen
+        chaos_done = {"kill": set(), "stall": set(), "corrupt": set()}
+        up_streak = down_streak = 0
+        G = 0.0
+        for _ in range(self.n_replicas):
+            self._spawn(root, chaos, at_clock=G)
+
+        rounds = 0
+        while True:
+            live = self._live()
+            # ---- 1. replica chaos due at this clock -----------------------
+            by_slot = {rep.slot: rep for rep in live}
+            for slot, step in sorted(chaos.kill_at_step.items()):
+                if step <= G + 1e-9 and slot not in chaos_done["kill"] \
+                        and slot in by_slot:
+                    chaos_done["kill"].add(slot)
+                    rep = by_slot[slot]
+                    rep.kill()
+                    rep.state = DEAD
+                    rep.fail_reason = \
+                        f"replica died (chaos kill at step {step:g})"
+            for slot, step in sorted(chaos.stall_at_step.items()):
+                if step <= G + 1e-9 and slot not in chaos_done["stall"] \
+                        and slot in by_slot:
+                    chaos_done["stall"].add(slot)
+                    by_slot[slot].stalled_by_chaos = True
+            for slot, step in sorted(chaos.corrupt_pool_at_step.items()):
+                if step <= G + 1e-9 and slot not in chaos_done["corrupt"] \
+                        and slot in by_slot:
+                    rep = by_slot[slot]
+                    pager = rep.scheduler.pager
+                    if pager is not None:
+                        chaos_done["corrupt"].add(slot)
+                        # phantom refcount: the exact metadata drift
+                        # audit_pool exists to catch
+                        pager._refs[0] += 1
+
+            # ---- 2. supervise + failover ---------------------------------
+            candidates = [rep for rep in self._all
+                          if rep.state != RETIRED and not rep.failed_over]
+            for rep, reason in self.supervisor.audit(candidates, G, T):
+                self._failover(rep, reason, G)
+            live = self._live()
+            unresolved = any(r.outcome is None for r in reqs)
+            if not live and unresolved:
+                # total fleet loss with work outstanding: spawn a cold
+                # replacement (fresh slot — chaos schedules never re-fire)
+                self._spawn(root, chaos, at_clock=G)
+                live = self._live()
+
+            # ---- 3. autoscale (hysteresis on measured queue depth) -------
+            if self.autoscale is not None and live:
+                asc = self.autoscale
+                arrived = sum(1 for r in self._pendq
+                              if r.arrival <= G + 1e-9)
+                depth = arrived + sum(rep.queue_depth() for rep in live)
+                per = depth / len(live)
+                if per > asc.high_depth:
+                    up_streak += 1
+                    down_streak = 0
+                elif per < asc.low_depth:
+                    down_streak += 1
+                    up_streak = 0
+                else:
+                    up_streak = down_streak = 0
+                if up_streak >= asc.patience_windows \
+                        and len(live) < asc.max_replicas:
+                    self._spawn(root, chaos, at_clock=G)
+                    st["scale_ups"] += 1
+                    up_streak = 0
+                    live = self._live()
+                elif down_streak >= asc.patience_windows \
+                        and len(live) > asc.min_replicas:
+                    drained = [rep for rep in live if rep.last_status
+                               and rep.last_status["drained"]
+                               and rep.queue_depth() == 0]
+                    if drained:
+                        rep = max(drained, key=lambda rep: rep.slot)
+                        rep.done_accum.extend(rep.stop())
+                        if rep.scheduler._live is not None:
+                            rep.scheduler._live["done"] = []  # in accum now
+                        rep.state = RETIRED
+                        self.router.forget_replica(rep.slot)
+                        st["scale_downs"] += 1
+                        down_streak = 0
+                        live = self._live()
+
+            # ---- 4. feedback re-planning at drain boundaries -------------
+            if self.replan is not None \
+                    and len(self._finished_lengths) >= self.replan.min_samples:
+                measured = statistics.fmean(self._finished_lengths)
+                assumed = self._plan_mean()
+                if abs(measured - assumed) / max(assumed, 1.0) \
+                        > self.replan.drift_threshold:
+                    new_plan = plan_lib.replan_from_lengths(
+                        self.cfg, self.plan, self._finished_lengths)
+                    if new_plan != self.plan:
+                        self.plan = new_plan    # spawns use it immediately
+                        st["replans"] += 1
+                    for rep in live:
+                        if rep.last_status and rep.last_status["drained"] \
+                                and rep.queue_depth() == 0 \
+                                and rep.scheduler.plan != new_plan:
+                            rep.swap_plan(
+                                new_plan,
+                                self._rng_for(root, rep.slot,
+                                              rep.generation + 1),
+                                chaos=chaos.request_chaos.get(rep.slot),
+                                at_clock=G)
+                            self._done_seen[rep.slot] = 0
+
+            # ---- 5. dispatch due arrivals (fair order, router placed) ----
+            due = [r for r in self._pendq if r.arrival <= G + 1e-9
+                   and self._hold.get(r.rid, -1.0) <= G + 1e-9]
+            if due and live:
+                for r in Router.fair_order(due):
+                    rep = self.router.place(r, live)
+                    r.replica = rep.slot
+                    rep.scheduler.inject([r])
+                    self._pendq.remove(r)
+                    self._hold.pop(r.rid, None)
+
+            # ---- 6. tick the fleet at G (lockstep) -----------------------
+            for rep in sorted(live, key=lambda rep: rep.slot):
+                if rep.stalled_by_chaos:
+                    continue            # hung process: no response
+                rep.tick(G)
+
+            # ---- 7. finished-length feedback -----------------------------
+            for rep in self._live():
+                slive = rep.scheduler._live
+                if slive is None:
+                    continue
+                seen = self._done_seen.get(rep.slot, 0)
+                for r in slive["done"][seen:]:
+                    if r.replica is None:
+                        r.replica = rep.slot
+                    if r.outcome is not None and r.outcome.status == "ok":
+                        self._finished_lengths.append(
+                            len(r.prompt) + len(r.out))
+                self._done_seen[rep.slot] = len(slive["done"])
+
+            st["rounds"] = rounds = rounds + 1
+            G += T
+            st["clock_steps"] = G
+            if all(r.outcome is not None for r in reqs):
+                break
+            if rounds > self.max_rounds:
+                raise RuntimeError(
+                    f"replica set made no terminal progress within "
+                    f"max_rounds ({self.max_rounds}) windows — "
+                    "supervision/failover wedged")
+
+        # ---- finalize: stop live replicas (all drained), merge done ------
+        st["replicas_final"] = len(self._live())
+        done: List[StreamRequest] = list(self._failed)
+        for rep in self._all:
+            if rep.state == LIVE:
+                rep.done_accum.extend(rep.stop())
+                rep.state = RETIRED
+                if rep.scheduler._live is not None:
+                    rep.scheduler._live["done"] = []   # folded into accum
+            done.extend(rep.collect_done())
+        # a request only ever resolves on one replica (or here): the merge
+        # is the exactly-once proof surface the chaos tests sweep
+        by_rid: Dict[int, StreamRequest] = {}
+        for r in done:
+            if r.rid in by_rid:
+                raise RuntimeError(
+                    f"rid {r.rid} resolved on two replicas — exactly-once "
+                    "outcome invariant broken")
+            by_rid[r.rid] = r
+        st["outcomes"] = {k: 0 for k in guard_mod.OUTCOMES}
+        for r in done:
+            if r.outcome is not None:
+                st["outcomes"][r.outcome.status] += 1
+        st["router"] = dict(self.router.stats)
+        # aggregate the per-replica scheduler counters the benchmarks read
+        agg_keys = ("decode_chunks", "decode_steps", "prefill_batches",
+                    "prefill_prompts", "prefill_real_tokens", "preemptions",
+                    "shared_tokens_admitted", "cow_copies",
+                    "stalled_boundaries", "step_retries",
+                    "clamped_admissions", "idle_steps")
+        st["fleet"] = {k: 0 for k in agg_keys}
+        for rep in self._all:
+            ps = rep.scheduler.phase_stats
+            for k in agg_keys:
+                st["fleet"][k] += ps.get(k, 0)
+        return sorted(done, key=lambda r: r.rid)

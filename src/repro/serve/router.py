@@ -1,0 +1,133 @@
+"""Request placement across replicas: prefix affinity, load, fairness.
+
+The multi-replica control plane (serve/replica.py) holds N independent
+``ContinuousBatchingScheduler`` instances, each with its own page pool and
+copy-on-write prefix index. Placement therefore decides more than load
+balance: a request landing on the replica that already holds its prompt
+prefix adopts those pages (refcount++, prefill skips the shared tokens),
+while the same request on any other replica re-prefills and re-stores the
+identical KV. The router encodes that locality:
+
+* **Prefix affinity** — requests are keyed by their first KV page worth of
+  prompt tokens (the allocator's prefix index is page-granular, so anything
+  shorter can never be adopted). The first request of a key claims a home
+  replica; followers with the same key go home too — unless home's measured
+  queue depth has fallen ``max_depth_imbalance`` behind the least-loaded
+  replica, at which point load wins (affinity is a heuristic, starvation is
+  not acceptable).
+* **Queue depth** — the fallback (and tiebreak) is the replica with the
+  fewest resident requests (pending + waiting + active, measured from the
+  scheduler's live state, including placements made earlier in the same
+  window), lowest slot id on ties so placement is deterministic.
+* **Tenant fairness** — same-window arrivals are dispatched in per-tenant
+  round-robin order (stable (arrival, rid) within a tenant): one tenant's
+  burst cannot occupy every row ahead of another tenant's single request
+  that arrived the same window.
+
+The router is deliberately stateless about replica health: the supervisor
+calls :meth:`forget_replica` on failover and the affinity map drops every
+claim on the dead replica (its pool — and thus every adoptable page — is
+gone, so affinity would route to a cold replacement for no sharing win).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+DEFAULT_TENANT = ""
+
+
+@dataclasses.dataclass
+class RouterConfig:
+    """Placement policy knobs.
+
+    ``affinity`` switches prefix-affinity routing (off: pure least-depth);
+    ``max_depth_imbalance`` is how many requests deeper than the least
+    loaded replica the affinity home may run before load balancing
+    overrides the sharing win.
+    """
+    affinity: bool = True
+    max_depth_imbalance: int = 4
+
+
+class Router:
+    """Places requests onto live replicas; owns the prefix→home map.
+
+    ``page_size`` must match the replicas' plan (the affinity key is one KV
+    page of prompt — the unit the CoW prefix index can actually share).
+    """
+
+    def __init__(self, cfg: Optional[RouterConfig] = None, *,
+                 page_size: int = 0):
+        self.cfg = cfg or RouterConfig()
+        self.page_size = page_size
+        self._home: Dict[Tuple[int, ...], int] = {}   # prefix key -> slot
+        self.stats = {"placements": 0, "affinity_hits": 0,
+                      "affinity_overridden": 0, "forgotten_keys": 0}
+
+    # ----------------------------------------------------------- affinity
+    def prefix_key(self, prompt: Sequence[int]) -> Optional[Tuple[int, ...]]:
+        """First full KV page of the prompt, or None when the prompt is
+        shorter than one page (nothing page-granular to share)."""
+        if not self.cfg.affinity or self.page_size <= 0 \
+                or len(prompt) < self.page_size:
+            return None
+        return tuple(int(t) for t in prompt[: self.page_size])
+
+    def forget_replica(self, slot: int) -> int:
+        """Drop every affinity claim on a dead replica (its pool is gone).
+        Returns the number of keys released."""
+        dead = [k for k, s in self._home.items() if s == slot]
+        for k in dead:
+            del self._home[k]
+        self.stats["forgotten_keys"] += len(dead)
+        return len(dead)
+
+    # ---------------------------------------------------------- placement
+    def place(self, request, replicas: List) -> object:
+        """Pick the replica for ``request`` among live ``replicas`` (each
+        exposing ``.slot`` and ``.queue_depth()``). Deterministic: depth
+        ties break on slot id, and the affinity map mutates in placement
+        order."""
+        if not replicas:
+            raise RuntimeError("router: no live replicas to place onto")
+        by_slot = {rep.slot: rep for rep in replicas}
+        depths = {rep.slot: rep.queue_depth() for rep in replicas}
+        least = min(replicas, key=lambda rep: (depths[rep.slot], rep.slot))
+        chosen = least
+        key = self.prefix_key(request.prompt)
+        if key is not None:
+            home = self._home.get(key)
+            if home is not None and home in by_slot:
+                if depths[home] <= depths[least.slot] \
+                        + self.cfg.max_depth_imbalance:
+                    chosen = by_slot[home]
+                    self.stats["affinity_hits"] += 1
+                else:
+                    self.stats["affinity_overridden"] += 1
+            self._home[key] = chosen.slot
+        self.stats["placements"] += 1
+        return chosen
+
+    # ----------------------------------------------------------- fairness
+    @staticmethod
+    def fair_order(requests: Sequence) -> List:
+        """Per-tenant round-robin dispatch order for one admission window.
+
+        Within a tenant, requests keep strict (arrival, rid) order; across
+        tenants, one request per tenant is taken per round, tenants ordered
+        by their earliest (arrival, rid) — deterministic, and a 50-request
+        burst from tenant A interleaves 1:1 with tenant B's requests
+        instead of monopolizing every free row first.
+        """
+        queues: Dict[str, List] = {}
+        for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+            queues.setdefault(r.tenant or DEFAULT_TENANT, []).append(r)
+        order = sorted(queues,
+                       key=lambda t: (queues[t][0].arrival, queues[t][0].rid))
+        out: List = []
+        while any(queues.values()):
+            for t in order:
+                if queues[t]:
+                    out.append(queues[t].pop(0))
+        return out

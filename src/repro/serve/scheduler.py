@@ -88,6 +88,10 @@ class StreamRequest:
     on_outcome: Optional[Callable] = None   # on_outcome(request, outcome)
     outcome: Optional[guard_mod.RequestOutcome] = None
     degraded: List[str] = dataclasses.field(default_factory=list)
+    # --- multi-replica control plane (serve.router/replica, ISSUE 7) ---
+    tenant: Optional[str] = None  # fair-admission key (None: default tenant)
+    replica: Optional[int] = None           # replica that resolved it
+    migrations: int = 0          # failovers survived (recompute re-routes)
 
 
 class ContinuousBatchingScheduler:
@@ -194,6 +198,7 @@ class ContinuousBatchingScheduler:
             self._ladder = plan.degrade if guard is not None else ()
         self.host_syncs = 0
         self.phase_stats: Dict = {}
+        self._live = None             # run-in-progress state (see _run_gen)
         self._chunk = jax.jit(self._make_chunk_fn(), donate_argnums=(1,))
         self._refill = jax.jit(self._make_refill_fn(), donate_argnums=(1,))
         self._cow = jax.jit(self._make_cow_fn(), donate_argnums=(0,))
@@ -369,12 +374,86 @@ class ContinuousBatchingScheduler:
 
     def run(self, requests: List[StreamRequest], rng=None, chaos=None
             ) -> List[StreamRequest]:
-        # the plan is the dispatch source for everything traced below
+        # the plan is the dispatch source for everything traced below; the
+        # run is self-paced: every boundary ticks with no external clock and
+        # the loop idle-jumps across arrival gaps
+        gen = self._run_gen(requests, rng, chaos, external=False)
         with plan_lib.activate(self.plan):
-            return self._run(requests, rng, chaos)
+            try:
+                gen.send(None)                       # prime: setup + validate
+                while True:
+                    gen.send(("tick", None))
+            except StopIteration as e:
+                return e.value
+            finally:
+                self._live = None
 
-    def _run(self, requests: List[StreamRequest], rng=None, chaos=None
-             ) -> List[StreamRequest]:
+    def start_gen(self, requests: List[StreamRequest], rng=None, chaos=None):
+        """Prime a boundary-stepped run for an external driver (the
+        multi-replica control plane, serve/replica.py).
+
+        The returned generator yields a status dict before every sync-window
+        boundary: ``{"clock", "drained", "active", "waiting", "pending",
+        "done", "decode_chunks"}``. Send ``("tick", global_clock)`` to
+        process ONE boundary with the scheduler's virtual clock synced to
+        the shared ``global_clock`` (the scheduler never idle-jumps ahead of
+        it, so N replicas driven with the same ticks stay in lockstep), or
+        ``("stop", None)`` to finalize — ``StopIteration.value`` is the done
+        list, exactly as :meth:`run` returns it. Caller-bug validation runs
+        here, before the first yield. The driver must wrap every ``send`` in
+        ``plan_lib.activate(self.plan)`` (dispatch identity) and may
+        :meth:`inject` requests between boundaries (failover re-routes).
+        Abandoning the generator (``close()``) models replica death: no
+        finalization, no outcome delivery, live state left harvestable in
+        ``self._live``.
+        """
+        gen = self._run_gen(requests, rng, chaos, external=True)
+        with plan_lib.activate(self.plan):
+            gen.send(None)
+        return gen
+
+    def inject(self, requests: List[StreamRequest]) -> None:
+        """Add requests to a run in progress (multi-replica failover and
+        router dispatch land here). Same caller-bug validation as run start;
+        a request whose ``arrival`` is already in the past is admissible at
+        the next boundary."""
+        live = self._live
+        if live is None:
+            raise RuntimeError(
+                "inject() requires a run in progress (start_gen)")
+        for r in requests:
+            if r.rid in live["rids"]:
+                raise ValueError(
+                    f"request rid {r.rid} already known to this run — rids "
+                    "must be unique across the run, including re-routes")
+            total = len(r.prompt) + r.max_new
+            if r.max_new > 0 and total > self.cache_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt ({len(r.prompt)}) + max_new "
+                    f"({r.max_new}) exceeds cache_len ({self.cache_len})")
+            if self.paged and r.max_new > 0 and dataflow.pages_for(
+                    total, self.page_size) > self.num_pages:
+                raise ValueError(
+                    f"request {r.rid} needs "
+                    f"{dataflow.pages_for(total, self.page_size)} pages, "
+                    f"pool has {self.num_pages}: it can never run")
+        for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+            live["rids"].add(r.rid)
+            live["requests"].append(r)
+            if r.max_new <= 0:
+                r.done = True
+                r.finished_at = r.arrival
+                r.outcome = guard_mod.RequestOutcome(
+                    "ok", "empty generation budget", at_step=r.arrival)
+                if r.on_outcome is not None:
+                    r.on_outcome(r, r.outcome)
+                live["done"].append(r)
+            else:
+                live["pending"].append(r)
+        live["pending"].sort(key=lambda r: (r.arrival, r.rid))
+
+    def _run_gen(self, requests: List[StreamRequest], rng=None, chaos=None,
+                 external: bool = False):
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         g = self.guard
         inj = None
@@ -403,6 +482,7 @@ class ContinuousBatchingScheduler:
                     f"request {r.rid} needs "
                     f"{dataflow.pages_for(total, self.page_size)} pages, "
                     f"pool has {self.num_pages}: it can never run")
+        allreqs = list(requests)      # grows via inject() (failover re-routes)
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
         waiting: List[StreamRequest] = []
         done: List[StreamRequest] = []
@@ -422,6 +502,12 @@ class ContinuousBatchingScheduler:
             done.append(r)
         alloc = kvcache.SlotAllocator(self.rows)
         active: Dict[int, StreamRequest] = {}        # row -> request
+        # live run state, shared with inject() and harvestable by the
+        # control plane after a replica death (the lists are the loop's own
+        # objects, so external appends to pending are visible here)
+        self._live = {"pending": pending, "waiting": waiting,
+                      "active": active, "done": done, "requests": allreqs,
+                      "rids": set(rids)}
         row_pos: Dict[int, int] = {}                 # row -> device pos mirror
         admit_order: List[int] = []                  # rows, oldest first
         row_rids = [-1] * self.rows
@@ -559,7 +645,28 @@ class ContinuousBatchingScheduler:
                              f"boundaries (stall_budget {g.stall_budget})")
                 stall_streak = 0
 
-        while pending or waiting or active:
+        while True:
+            # ---- boundary gate: yield status, receive the next command ----
+            # self-paced runs tick with no clock (internal idle-jumps);
+            # externally driven runs receive the shared global clock and
+            # never run ahead of it — N replicas ticked together stay in
+            # deterministic lockstep on one virtual clock
+            cmd, tick = yield {
+                "clock": clock,
+                "drained": not (pending or waiting or active),
+                "active": len(active), "waiting": len(waiting),
+                "pending": len(pending), "done": len(done),
+                "decode_chunks": st["decode_chunks"]}
+            if cmd == "stop":
+                break
+            if tick is not None and tick > clock:
+                st["idle_steps"] += tick - clock
+                clock = tick
+            if not (pending or waiting or active):
+                if not external:
+                    break             # self-paced: nothing can arrive later
+                continue              # lockstep: stay alive for inject()
+
             # ---- int8 degrade rung (boundary start, measured pressure) ----
             # requantizing relieves pressure BEFORE this boundary's arrivals
             # are judged for clamping/shedding, so rung 1 shadows rungs 2-3
@@ -609,6 +716,8 @@ class ContinuousBatchingScheduler:
                                      "kept")
 
             if not active and not waiting:
+                if external:
+                    continue      # lockstep: never idle-jump past the tick
                 if not pending:
                     break
                 st["idle_steps"] += pending[0].arrival - clock
@@ -897,7 +1006,7 @@ class ContinuousBatchingScheduler:
         st["total_wall_s"] = time.perf_counter() - t0
         st["clock_steps"] = clock
         if g is not None:
-            for r in requests:
+            for r in allreqs:
                 if r.outcome is None:       # unreachable by construction —
                     if not r.done:          # belt and braces for the promise
                         r.done = True       # that every request terminates

@@ -102,6 +102,42 @@ def test_straggler_detector_flags_slow_steps():
     assert len(det.events) == 2
 
 
+def test_straggler_detector_reset_forgets_everything():
+    det = StragglerDetector(factor=3.0, patience=2)
+    for i in range(10):
+        det.observe(i, 0.1)
+    det.observe(10, 1.0)
+    det.observe(11, 1.0)
+    assert det.persistent and det.times and det.events
+    det.reset()
+    assert det.strikes == 0 and not det.persistent
+    assert det.times == [] and det.events == [] and det.last_step is None
+    # post-reset: warms up from scratch (no flag until history rebuilds)
+    assert not det.observe(0, 100.0)
+
+
+def test_straggler_detector_tolerates_nonmonotonic_steps():
+    """A replica restarts its local step counter after a failover/plan swap
+    (serve/replica.py): a backwards step starts a fresh strike epoch, but
+    keeps the timing history (durations stay comparable across restarts)."""
+    det = StragglerDetector(factor=3.0, patience=3)
+    for i in range(8):
+        det.observe(i, 0.1)
+    det.observe(8, 1.0)
+    det.observe(9, 1.0)
+    assert det.strikes == 2
+    flagged = det.observe(0, 1.0)         # step clock restarted
+    assert flagged                        # still slow vs retained history
+    assert det.strikes == 1               # but stale strikes were cleared
+    assert not det.persistent
+    assert len(det.times) == 11           # history survived the restart
+    # negative dt (clock skew) clamps instead of corrupting the median
+    det.reset()
+    for i in range(6):
+        det.observe(i, -1.0)
+    assert all(t == 0.0 for t in det.times)
+
+
 def test_elastic_restore_with_shardings(tmp_path):
     """Restore device_puts against explicitly provided shardings (the
     re-shard-onto-new-mesh path)."""

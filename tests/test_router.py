@@ -1,0 +1,102 @@
+"""Router placement units (serve/router.py): prefix affinity, queue-depth
+fallback, imbalance override, tenant-fair dispatch order. Pure host logic —
+no model, no device work."""
+import pytest
+
+from repro.serve.router import Router, RouterConfig
+from repro.serve.scheduler import StreamRequest
+
+
+class FakeReplica:
+    def __init__(self, slot, depth=0):
+        self.slot = slot
+        self.depth = depth
+
+    def queue_depth(self):
+        return self.depth
+
+
+def _req(rid, prompt, arrival=0.0, tenant=None):
+    return StreamRequest(rid=rid, prompt=list(prompt), max_new=4,
+                         arrival=arrival, tenant=tenant)
+
+
+# ---------------------------------------------------------------- affinity
+def test_prefix_key_is_one_page_and_page_gated():
+    r = Router(page_size=4)
+    assert r.prefix_key([1, 2, 3]) is None          # shorter than a page
+    assert r.prefix_key([1, 2, 3, 4]) == (1, 2, 3, 4)
+    assert r.prefix_key([1, 2, 3, 4, 9, 9]) == (1, 2, 3, 4)
+    assert Router(RouterConfig(affinity=False),
+                  page_size=4).prefix_key([1, 2, 3, 4]) is None
+    assert Router(page_size=0).prefix_key([1, 2, 3, 4]) is None
+
+
+def test_same_prefix_routes_to_same_replica():
+    r = Router(page_size=4)
+    reps = [FakeReplica(0), FakeReplica(1), FakeReplica(2)]
+    sys_prompt = [7, 7, 7, 7]
+    first = r.place(_req(0, sys_prompt + [1]), reps)
+    first.depth += 1
+    for i in range(1, 5):
+        rep = r.place(_req(i, sys_prompt + [i + 1]), reps)
+        assert rep.slot == first.slot     # follows the claim despite depth
+        rep.depth += 1
+    assert r.stats["affinity_hits"] == 4
+
+
+def test_affinity_yields_to_load_past_imbalance():
+    r = Router(RouterConfig(max_depth_imbalance=2), page_size=4)
+    reps = [FakeReplica(0, depth=0), FakeReplica(1, depth=0)]
+    home = r.place(_req(0, [7, 7, 7, 7, 1]), reps)
+    assert home.slot == 0                 # least depth, lowest slot
+    reps[0].depth = 5                     # home now 5 deeper than replica 1
+    moved = r.place(_req(1, [7, 7, 7, 7, 2]), reps)
+    assert moved.slot == 1
+    assert r.stats["affinity_overridden"] == 1
+    # and the claim moved with it: next follower goes to the new home
+    assert r.place(_req(2, [7, 7, 7, 7, 3]), reps).slot == 1
+
+
+def test_no_key_falls_back_to_least_depth_lowest_slot():
+    r = Router(page_size=4)
+    reps = [FakeReplica(0, depth=3), FakeReplica(1, depth=1),
+            FakeReplica(2, depth=1)]
+    assert r.place(_req(0, [1, 2]), reps).slot == 1   # depth tie -> low slot
+
+
+def test_forget_replica_drops_claims():
+    r = Router(page_size=4)
+    reps = [FakeReplica(0), FakeReplica(1, depth=9)]
+    assert r.place(_req(0, [7, 7, 7, 7]), reps).slot == 0
+    assert r.forget_replica(0) == 1
+    # claim gone: placement re-judges by depth among survivors
+    assert r.place(_req(1, [7, 7, 7, 7]), [reps[1]]).slot == 1
+
+
+def test_place_requires_live_replicas():
+    with pytest.raises(RuntimeError, match="no live replicas"):
+        Router(page_size=4).place(_req(0, [1, 2, 3, 4]), [])
+
+
+# ---------------------------------------------------------------- fairness
+def test_fair_order_interleaves_tenants():
+    burst = [_req(i, [1], arrival=0.0, tenant="a") for i in range(4)]
+    single = [_req(10, [1], arrival=0.0, tenant="b")]
+    order = Router.fair_order(burst + single)
+    rids = [r.rid for r in order]
+    # tenant b's lone request lands second, not behind the whole burst
+    assert rids == [0, 10, 1, 2, 3]
+
+
+def test_fair_order_stable_within_tenant_and_deterministic():
+    reqs = [_req(2, [1], arrival=1.0, tenant="a"),
+            _req(0, [1], arrival=0.0, tenant="a"),
+            _req(5, [1], arrival=0.5, tenant="b"),
+            _req(3, [1], arrival=2.0, tenant="b"),
+            _req(9, [1], arrival=0.0)]            # None -> default tenant
+    a = [r.rid for r in Router.fair_order(reqs)]
+    b = [r.rid for r in Router.fair_order(list(reversed(reqs)))]
+    assert a == b                                  # input-order independent
+    pos = {rid: i for i, rid in enumerate(a)}
+    assert pos[0] < pos[2] and pos[5] < pos[3]     # (arrival, rid) in tenant
