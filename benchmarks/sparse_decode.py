@@ -769,6 +769,10 @@ def replica_failover_benchmark(arch: str = "qwen2.5-3b-reduced",
             "migrated_requests": st["migrated_requests"],
             "shared_tokens_admitted": st["fleet"]["shared_tokens_admitted"],
             "router": st["router"],
+            # per-tenant goodput + admission-wait percentiles (ISSUE 8):
+            # requests interleave tenants t0/t1/t2, so tail-wait skew
+            # between tenants is the per-tenant fairness signal
+            "tenants": st["tenants"],
             "wall_s": wall,
             "_tokens": {r.rid: list(r.out) for r in done if r.outcome.ok},
             "_migrated": {r.rid for r in done if r.migrations > 0},
@@ -815,6 +819,94 @@ def replica_failover_benchmark(arch: str = "qwen2.5-3b-reduced",
     return out
 
 
+def telemetry_benchmark(arch: str = "qwen2.5-3b-reduced",
+                        n_requests: int = 6, cache_len: int = 64,
+                        page_size: int = 4, sync_every: int = 4) -> Dict:
+    """Observability sweep (ISSUE 8) behind two perf_guard gates:
+
+    * ``trace-deterministic`` — two same-seed chaos runs (allocation
+      failures + transient step faults + NaN poisoning) must produce
+      identical trace signatures (wall-clock annotations stripped): the
+      trace structure is a pure function of the seed, so a diverging trace
+      is itself a determinism regression detector.
+    * ``plan-drift-clean`` — Eyexam at runtime, both directions: a plan
+      resolved from an *accurate* expected_len_dist must yield a clean
+      DriftReport, and a plan provisioned for 40-token requests serving
+      8-token traffic must emit a report naming the attention (paging)
+      decision as CONFIRMED divergent. A detector that never fires is as
+      dead as one that always fires.
+    """
+    import jax
+    from repro.models import transformer as tfm
+    from repro.serve import LLM
+    from repro.serve.chaos import ChaosConfig
+    from repro.serve.scheduler import StreamRequest
+
+    cfg = get_config(arch)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+
+    def plan(mean: float):
+        return plan_lib.plan_serve(
+            cfg, hbm_budget_bytes=1 << 30, expected_batch=3,
+            expected_len_dist={"mean": mean, "max": cache_len},
+            page_size=page_size, sync_every=sync_every)
+
+    def reqs(max_new: int):
+        return [StreamRequest(rid=i, prompt=[3 + i % 4, 5, 7],
+                              max_new=max_new, arrival=float(i),
+                              tenant="t%d" % (i % 2))
+                for i in range(n_requests)]
+
+    def chaos_run():
+        llm = LLM(cfg, params, plan(16), eos_id=-1)
+        llm.stream(reqs(13), chaos=ChaosConfig(
+            seed=7, ensure_fail_rate=0.3, step_fail_chunks=(1,),
+            nan_rids={2: (1,)}))
+        return llm.telemetry()
+
+    a, b = chaos_run(), chaos_run()
+    sig = a.tracer.signature()
+
+    # accurate plan (mean 16 vs measured 3 prompt + 13 generated = 16)
+    llm = LLM(cfg, params, plan(16), eos_id=-1)
+    llm.stream(reqs(13))
+    clean = llm.telemetry().last_drift
+
+    # mispredicted plan: provisioned for mean 40, serving 8-token requests
+    llm = LLM(cfg, params, plan(40), eos_id=-1)
+    llm.stream(reqs(5))
+    drifted = llm.telemetry().last_drift
+
+    return {
+        "arch": arch, "n_requests": n_requests, "cache_len": cache_len,
+        "page_size": page_size, "sync_every": sync_every,
+        "trace_deterministic": sig == b.tracer.signature(),
+        "span_count": len(a.tracer.events),
+        "span_categories": sorted({e.cat for e in a.tracer.events}),
+        "chaos_injected_kinds": sorted(
+            {e.args["kind"] for e in a.tracer.events
+             if e.name == "chaos_inject"}),
+        "clean_drift": clean.summary(),
+        "clean_report": clean.render(),
+        "forced_drift": drifted.summary(),
+        "forced_report": drifted.render(),
+        "forced_names_attention": any(
+            f.startswith("attention.") for f in
+            drifted.summary()["confirmed"]),
+    }
+
+
+def _print_telemetry(tl: Dict) -> None:
+    print(f"=== Telemetry sweep ({tl['arch']}, {tl['n_requests']} reqs) ===")
+    print(f"  chaos trace deterministic: {tl['trace_deterministic']} "
+          f"({tl['span_count']} spans, cats {tl['span_categories']}, "
+          f"injected {tl['chaos_injected_kinds']})")
+    print(f"  accurate plan drift: {tl['clean_drift']['confirmed'] or 'clean'}"
+          f" over {tl['clean_drift']['windows']} windows")
+    print(f"  mispredicted plan drift: {tl['forced_drift']['confirmed']} "
+          f"(names attention: {tl['forced_names_attention']})")
+
+
 def _print_replica_failover(rf: Dict) -> None:
     print(f"=== Replica failover sweep ({rf['replicas']} replicas x "
           f"{rf['rows']} rows, {rf['n_requests']} reqs, kill replica 0 @ "
@@ -832,6 +924,11 @@ def _print_replica_failover(rf: Dict) -> None:
           f"({rf['survivors_compared']} compared, migrated identical: "
           f"{rf['migrated_bit_identical']}); affinity sharing "
           f"x{rf['affinity_sharing_ratio']:.1f} vs no-affinity")
+    for tenant, t in rf["fault_free"]["tenants"].items():
+        print(f"    tenant {tenant}: ok {t['ok_requests']:.0f}  goodput "
+              f"{t['goodput_tokens']:.0f} tok  admission wait p50 "
+              f"{t['admission_wait_p50_steps']:.0f} / p99 "
+              f"{t['admission_wait_p99_steps']:.0f} steps")
 
 
 def _print_chaos(ch: Dict) -> None:
@@ -1000,6 +1097,8 @@ def main(smoke: bool = False, engine: bool = True, repeats: int = None,
         res["chaos"] = chaos_overload_benchmark()
         # likewise exact: the failover/affinity gates compare seeded runs
         res["replica_failover"] = replica_failover_benchmark()
+        # seeded, wall-clock-free: the trace-determinism and drift gates
+        res["telemetry"] = telemetry_benchmark()
 
     kp = res["kernel_proxy"]
     print("=== Batch-1 BCSC GEMV vs dense RS grid steps "
@@ -1082,6 +1181,9 @@ def main(smoke: bool = False, engine: bool = True, repeats: int = None,
     if "replica_failover" in res:
         _print_replica_failover(res["replica_failover"])
 
+    if "telemetry" in res:
+        _print_telemetry(res["telemetry"])
+
     with open(BENCH_JSON, "w") as f:
         json.dump(res, f, indent=2, default=float)
     print(f"wrote {BENCH_JSON}")
@@ -1111,6 +1213,7 @@ if __name__ == "__main__":
         res["shared_prefix"] = shared_prefix_benchmark()
         res["chaos"] = chaos_overload_benchmark()
         res["replica_failover"] = replica_failover_benchmark()
+        res["telemetry"] = telemetry_benchmark()
         with open(BENCH_JSON, "w") as f:
             json.dump(res, f, indent=2, default=float)
         ar = res["arrivals"]

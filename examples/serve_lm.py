@@ -20,12 +20,21 @@ clock, heartbeats are audited every sync window, and ``--kill-replica-at
 STEP`` chaos-kills replica 0 mid-run — stranded requests migrate by
 recompute and every request still ends in exactly one outcome.
 
+``--trace out.json`` writes the run's step-clock trace (ISSUE 8) as Chrome
+``trace_event`` JSON — open it at https://ui.perfetto.dev (or
+chrome://tracing): replicas render as processes, requests as threads, one
+virtual decode step as 1 ms. The trace structure is deterministic (wall
+time rides along as annotations), and the end-of-run drift report diffs
+measured occupancy/length/route proxies against the plan's decisions.
+
     PYTHONPATH=src python examples/serve_lm.py --requests 12 --rows 4
     PYTHONPATH=src python examples/serve_lm.py --mean-gap 1 --ttl 40
     PYTHONPATH=src python examples/serve_lm.py --replicas 3 \\
         --kill-replica-at 8
+    PYTHONPATH=src python examples/serve_lm.py --trace trace.json
 """
 import argparse
+import json
 import time
 
 import jax
@@ -63,6 +72,9 @@ def main():
                     help="chaos-kill replica 0 at this virtual step "
                          "(requires --replicas > 1); stranded requests "
                          "migrate by recompute")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write the step-clock trace as Chrome trace_event "
+                         "JSON (load at https://ui.perfetto.dev)")
     args = ap.parse_args()
     if args.kill_replica_at is not None and args.replicas < 2:
         ap.error("--kill-replica-at needs --replicas > 1 (killing the "
@@ -159,6 +171,20 @@ def main():
         print(f"sharing: {st['shared_tokens_admitted']} prompt tokens "
               f"admitted from adopted pages, {st['cow_copies']} CoW copies, "
               f"peak concurrency {st['peak_live_rows']} rows")
+
+    tel = llm.telemetry()
+    if tel.last_drift is not None:
+        d = tel.last_drift
+        print(f"plan drift: {len(d.confirmed)} CONFIRMED / "
+              f"{len(d.findings)} compared over {d.windows} windows"
+              + (" — " + "; ".join(f"{f.decision}.{f.metric}"
+                                   for f in d.confirmed)
+                 if d.confirmed else ""))
+    if args.trace:
+        with open(args.trace, "w") as f:
+            json.dump(tel.tracer.to_chrome_trace(), f)
+        print(f"wrote {len(tel.tracer.events)} spans to {args.trace} "
+              f"(open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

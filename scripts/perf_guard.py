@@ -214,6 +214,27 @@ def main(path: str = "BENCH_sparse_decode.json") -> int:
         print("  [--] replica_failover section absent; failover gates "
               "skipped")
 
+    tl = data.get("telemetry", {})
+    if tl:
+        check("trace-deterministic",
+              tl["trace_deterministic"] and tl["span_count"] > 0,
+              f"two same-seed chaos runs, identical trace signatures with "
+              f"wall-clock stripped ({tl['span_count']} spans, injected "
+              f"{tl['chaos_injected_kinds']})")
+        # both directions: the accurate plan stays clean AND the
+        # mispredicted plan fires naming the paging decision — a drift
+        # detector that never fires is as dead as one that always fires
+        check("plan-drift-clean",
+              not tl["clean_drift"]["confirmed"]
+              and tl["clean_drift"]["compared"] > 0
+              and tl["forced_names_attention"],
+              f"accurate plan: {tl['clean_drift']['compared']} comparisons "
+              f"clean over {tl['clean_drift']['windows']} windows; "
+              f"mispredicted plan confirms "
+              f"{tl['forced_drift']['confirmed']}")
+    else:
+        print("  [--] telemetry section absent; trace/drift gates skipped")
+
     plans = data.get("plans", {})
     if plans:
         golden_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),

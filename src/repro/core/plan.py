@@ -251,13 +251,18 @@ class ServePlan:
         return activate(self)
 
     # -------------------------------------------------------------- report
-    def explain(self) -> str:
+    def explain(self, drift=None) -> str:
         """Render the per-decision rationale — the Eyexam-style report.
 
         Every decision names its bound (compute/HBM/occupancy) and prints
         the roofline numbers it was resolved from; the MLP entry carries the
         same per-layer time model as
         ``benchmarks/sparse_decode.py::mlp_bound_analysis``.
+
+        Pass a ``serve.telemetry.DriftReport`` (Eyexam-at-runtime: measured
+        proxies vs these decisions' numbers) as ``drift`` to append each
+        decision's measured-vs-predicted verdicts — CONFIRMED lines mark the
+        decisions whose runtime evidence diverged past the threshold.
         """
         lines = [
             f"ServePlan — {self.arch}  "
@@ -267,6 +272,9 @@ class ServePlan:
         for d in self.decisions:
             lines.append(f"  {d.name:<9s}: {d.choice:<28s} [bound: {d.bound}]")
             lines.append(f"      {d.why}")
+            if drift is not None:
+                for f in drift.for_decision(d.name):
+                    lines.append(f"      drift: {f.render()}")
             if d.name == "mlp" and "per_layer_time_s" in d.numbers:
                 t = d.numbers["per_layer_time_s"]
                 s = d.numbers["speedup"]
@@ -284,6 +292,11 @@ class ServePlan:
                     if isinstance(v, (int, float)))
                 if kv:
                     lines.append(f"      {kv}")
+        if drift is not None:
+            lines.append(
+                f"  drift: {len(drift.confirmed)} CONFIRMED / "
+                f"{len(drift.findings)} compared over {drift.windows} "
+                "measured window(s)")
         return "\n".join(lines)
 
 

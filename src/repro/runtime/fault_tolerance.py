@@ -120,13 +120,23 @@ class Supervisor:
         self.detector = StragglerDetector(cfg.straggler_factor,
                                           cfg.straggler_patience)
         self.restarts = 0
+        # clock sources behind the heartbeat record — injectable so tests
+        # (and the straggler suite) control both readings deterministically
+        self.wall_clock: Callable[[], float] = time.time
+        self.mono_clock: Callable[[], float] = time.monotonic
 
     # -------------------------------------------------------------- plumbing
     def _heartbeat(self, step: int):
         if self.cfg.heartbeat_path:
+            # one schema shared with serving telemetry annotations
+            # (serve.telemetry.HEARTBEAT_SCHEMA): monotonic step + wall time
+            # + a jump-immune monotonic reading. Lazy import: serve pulls in
+            # this module (scheduler -> backoff_delay), not vice versa.
+            from repro.serve.telemetry import heartbeat_record
             with open(self.cfg.heartbeat_path, "w") as f:
-                json.dump({"step": step, "time": time.time(),
-                           "restarts": self.restarts}, f)
+                json.dump(heartbeat_record(
+                    step, wall_time=self.wall_clock(),
+                    mono_s=self.mono_clock(), restarts=self.restarts), f)
 
     def _restore_or_init(self):
         latest = self.ckpt.latest_step()

@@ -1,6 +1,8 @@
 from repro.serve import (chaos, engine, facade, guard, kvcache, paging,
-                         replica, router, scheduler, sparse)
+                         replica, router, scheduler, sparse, telemetry)
 from repro.serve.facade import LLM
+from repro.serve.telemetry import Telemetry
 
-__all__ = ["LLM", "chaos", "engine", "facade", "guard", "kvcache", "paging",
-           "replica", "router", "scheduler", "sparse"]
+__all__ = ["LLM", "Telemetry", "chaos", "engine", "facade", "guard",
+           "kvcache", "paging", "replica", "router", "scheduler", "sparse",
+           "telemetry"]

@@ -103,6 +103,14 @@ class FaultInjector:
         self._step_attempts: Dict[int, int] = {}
         self._nan_pending = {k: tuple(v) for k, v in cfg.nan_rids.items()}
         self.injected = {"ensure": 0, "step": 0, "nan": 0}
+        # observer hook (serve.telemetry): called as on_inject(kind, rid) at
+        # every delivered injection — the schedule is seeded, so the
+        # resulting trace events are as deterministic as the faults
+        self.on_inject = None
+
+    def _notify(self, kind: str, rid: int = -1) -> None:
+        if self.on_inject is not None:
+            self.on_inject(kind, rid)
 
     def ensure_fails(self, rid: int, n_tokens: int) -> bool:
         """Should this allocation probe spuriously report page pressure?"""
@@ -111,6 +119,7 @@ class FaultInjector:
             return False
         if self._rng.random() < self.cfg.ensure_fail_rate:
             self.injected["ensure"] += 1
+            self._notify("ensure", rid)
             return True
         return False
 
@@ -124,6 +133,7 @@ class FaultInjector:
             return
         self._step_attempts[chunk_index] = attempts + 1
         self.injected["step"] += 1
+        self._notify("step")
         raise InjectedFault(
             f"injected step failure (chunk {chunk_index}, "
             f"attempt {attempts + 1})")
@@ -135,4 +145,6 @@ class FaultInjector:
         rids = self._nan_pending.pop(chunk_index, ())
         if rids:
             self.injected["nan"] += len(rids)
+            for rid in rids:
+                self._notify("nan", rid)
         return rids

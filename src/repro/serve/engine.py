@@ -13,7 +13,6 @@ the slot KV cache is updated in place rather than copied each chunk.
 from __future__ import annotations
 
 import dataclasses
-import time
 import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -24,6 +23,7 @@ import numpy as np
 from repro.core import plan as plan_lib
 from repro.models import decoding
 from repro.serve import kvcache
+from repro.serve import telemetry as telemetry_mod
 from repro.serve.guard import RequestOutcome
 
 
@@ -197,7 +197,8 @@ class DecodeEngine:
                  *, slots: Optional[int] = None,
                  cache_len: Optional[int] = None,
                  eos_id: int = 1, temperature: float = 0.0,
-                 sync_every: Optional[int] = None):
+                 sync_every: Optional[int] = None,
+                 telemetry: Optional["telemetry_mod.Telemetry"] = None):
         if plan is not None and not (slots is None and cache_len is None):
             # a plan plus legacy geometry kwargs would silently lose the
             # kwargs (the plan wins) — refuse instead of surprising the
@@ -251,6 +252,11 @@ class DecodeEngine:
         # itself goes through plan.tier)
         self._recurrent = plan.prefill_exact
         self.phase_stats: Dict = {}
+        # observability (serve.telemetry): the drain engine has no arrival
+        # clock, so its spans sit on a synthetic one (decode_chunks * T)
+        self.telemetry = telemetry if telemetry is not None \
+            else telemetry_mod.Telemetry()
+        self._own_telemetry = telemetry is None
         # the decode state (arg 1: cache + sampling state) is donated — the
         # cache buffer is updated in place step over step, never copied
         self._chunk = jax.jit(self._make_chunk_fn(), donate_argnums=(1,))
@@ -342,6 +348,10 @@ class DecodeEngine:
             "prefill_prompts": 0, "prefill_real_tokens": 0,
             "prefill_padded_tokens": 0, "decode_chunks": 0,
         }
+        if self._own_telemetry:
+            self.telemetry.reset()
+        tr = self.telemetry.tracer
+        T = self.sync_every
 
         while queue or active:
             # ---- admission: batched prefill, one call per length tier ----
@@ -363,36 +373,42 @@ class DecodeEngine:
                 for slot, r in admits:
                     buckets.setdefault(self._tier(len(r.prompt)),
                                        []).append((slot, r))
-                t0 = time.perf_counter()
-                for tier, group in sorted(buckets.items()):
-                    B = len(group)
-                    toks, lengths, slot_ids, max_news, _ = build_tier_batch(
-                        group, tier, lambda r: r.prompt,
-                        lambda r: r.max_new)
-                    for slot, r in group:
-                        active[slot] = r
-                    state = self._refill(self.params, state,
-                                         jnp.asarray(toks),
-                                         jnp.asarray(lengths),
-                                         jnp.asarray(slot_ids),
-                                         jnp.asarray(max_news))
-                    st["prefill_batches"] += 1
-                    st["prefill_prompts"] += B
-                    st["prefill_real_tokens"] += int(lengths.sum())
-                    st["prefill_padded_tokens"] += B * tier
-                jax.block_until_ready(state[1])     # phase-accurate timing
-                st["prefill_s"] += time.perf_counter() - t0
+                with telemetry_mod.phase_timer(
+                        st, "prefill_s", tracer=tr, name="prefill",
+                        start=st["decode_chunks"] * T) as ph:
+                    for tier, group in sorted(buckets.items()):
+                        B = len(group)
+                        toks, lengths, slot_ids, max_news, _ = \
+                            build_tier_batch(
+                                group, tier, lambda r: r.prompt,
+                                lambda r: r.max_new)
+                        for slot, r in group:
+                            active[slot] = r
+                        state = self._refill(self.params, state,
+                                             jnp.asarray(toks),
+                                             jnp.asarray(lengths),
+                                             jnp.asarray(slot_ids),
+                                             jnp.asarray(max_news))
+                        st["prefill_batches"] += 1
+                        st["prefill_prompts"] += B
+                        st["prefill_real_tokens"] += int(lengths.sum())
+                        st["prefill_padded_tokens"] += B * tier
+                    ph.ready(state[1])          # phase-accurate timing
+                    ph.note(prompts=len(admits), tiers=len(buckets))
 
             # ---------------------- device-resident decode chunk ----------
-            t0 = time.perf_counter()
-            rng, k = jax.random.split(rng)
-            state, toks, emits = self._chunk(self.params, state, k)
-            # the single device->host transfer for this sync_every-token chunk
-            toks_h, emits_h, live_h = jax.device_get(
-                (toks, emits, state[3]))
+            with telemetry_mod.phase_timer(
+                    st, "decode_s", tracer=tr, name="decode_chunk",
+                    start=st["decode_chunks"] * T,
+                    end=(st["decode_chunks"] + 1) * T) as ph:
+                rng, k = jax.random.split(rng)
+                state, toks, emits = self._chunk(self.params, state, k)
+                # the single device->host transfer for this chunk
+                toks_h, emits_h, live_h = jax.device_get(
+                    (toks, emits, state[3]))
+                ph.note(rows=len(active))
             self.host_syncs += 1
             st["decode_chunks"] += 1
-            st["decode_s"] += time.perf_counter() - t0
             for t in range(emits_h.shape[0]):
                 for slot, r in active.items():
                     if emits_h[t, slot]:

@@ -33,6 +33,7 @@ from repro.serve.engine import DecodeEngine, Request
 from repro.serve.guard import GuardConfig
 from repro.serve.replica import ReplicaSet
 from repro.serve.scheduler import ContinuousBatchingScheduler, StreamRequest
+from repro.serve.telemetry import Telemetry
 
 DEFAULT_LEN_DIST = {"mean": 256, "max": 512}
 DEFAULT_BATCH = 8
@@ -56,7 +57,8 @@ class LLM:
                  guard: Union[GuardConfig, None, bool] = None,
                  replicas: int = 1,
                  on_token: Optional[Callable] = None,
-                 on_outcome: Optional[Callable] = None):
+                 on_outcome: Optional[Callable] = None,
+                 trace: Union[bool, Telemetry] = True):
         if replicas < 1:
             raise ValueError(
                 f"replicas must be >= 1, got {replicas}: serving always "
@@ -93,6 +95,15 @@ class LLM:
         # (and per-request callbacks) still override
         self.on_token = on_token
         self.on_outcome = on_outcome
+        # observability (serve.telemetry, ISSUE 8): one Telemetry bundle
+        # shared by whichever engine serves, reset at each call. trace=True
+        # records spans on the virtual step clock (deterministic; wall time
+        # as annotations); trace=False keeps the metrics registry but drops
+        # span recording; passing a Telemetry shares an external bundle.
+        if isinstance(trace, Telemetry):
+            self._telemetry = trace
+        else:
+            self._telemetry = Telemetry(enabled=bool(trace))
         self._engine: Optional[DecodeEngine] = None
         self._scheduler: Optional[ContinuousBatchingScheduler] = None
         self._replicaset: Optional[ReplicaSet] = None
@@ -163,10 +174,11 @@ class LLM:
         if self._engine is None:
             self._engine = DecodeEngine(
                 self.cfg, self.params, self.plan, eos_id=self.eos_id,
-                temperature=self.temperature)
+                temperature=self.temperature, telemetry=self._telemetry)
         self._last_run = self._engine
         reqs = self._normalize(requests, Request)
         self._validate(reqs)
+        self._telemetry.reset()            # one trace per call
         done = self._engine.run(reqs, rng=rng)
         return sorted(done, key=lambda r: r.rid)
 
@@ -204,14 +216,18 @@ class LLM:
                 self._replicaset = ReplicaSet(
                     self.cfg, self.params, self.plan,
                     replicas=self.replicas, eos_id=self.eos_id,
-                    temperature=self.temperature, guard=self.guard)
+                    temperature=self.temperature, guard=self.guard,
+                    telemetry=self._telemetry)
             self._last_run = self._replicaset
+            # ReplicaSet.run resets the shared bundle itself
             return self._replicaset.run(reqs, rng=rng, chaos=chaos)
         if self._scheduler is None:
             self._scheduler = ContinuousBatchingScheduler(
                 self.cfg, self.params, self.plan, eos_id=self.eos_id,
-                temperature=self.temperature, guard=self.guard)
+                temperature=self.temperature, guard=self.guard,
+                telemetry=self._telemetry)
         self._last_run = self._scheduler
+        self._telemetry.reset()            # one trace per call
         done = self._scheduler.run(reqs, rng=rng, chaos=chaos)
         return sorted(done, key=lambda r: r.rid)
 
@@ -222,3 +238,10 @@ class LLM:
         split, paging/sharing counters)."""
         return self._last_run.phase_stats if self._last_run is not None \
             else {}
+
+    def telemetry(self) -> Telemetry:
+        """The Telemetry bundle of the most recent call: ``.tracer`` (spans
+        on the virtual step clock; ``to_chrome_trace()`` for Perfetto),
+        ``.metrics`` (frozen-key registry; ``snapshot()``), and
+        ``.last_drift`` (Eyexam-at-runtime DriftReport vs the plan)."""
+        return self._telemetry

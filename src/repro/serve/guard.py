@@ -98,7 +98,8 @@ class GuardConfig:
 
 
 # ---------------------------------------------------------------- auditing
-def audit_pool(pager, drained: bool = False) -> List[str]:
+def audit_pool(pager, drained: bool = False, *, tracer=None,
+               clock: float = 0.0, slot: int = -1) -> List[str]:
     """Check every PageAllocator invariant; return violations (empty = clean).
 
     Invariants audited:
@@ -115,6 +116,11 @@ def audit_pool(pager, drained: bool = False) -> List[str]:
 
     With ``drained=True`` (end of run) additionally require the pool fully
     returned: no tables, every page free at refcount 0, empty index.
+
+    A ``tracer`` (serve.telemetry.Tracer) records a ``pool_audit`` event
+    ONLY when violations are found — clean audits leave no trace, so
+    attaching a tracer never perturbs same-seed trace identity of a healthy
+    run.
     """
     v: List[str] = []
     snap = pager.snapshot()
@@ -184,12 +190,17 @@ def audit_pool(pager, drained: bool = False) -> List[str]:
         if pidx:
             v.append(f"drained pool retains {len(pidx)} prefix index "
                      "entries")
+    if v and tracer is not None:
+        tracer.event("pool_audit", clock, cat="pool", slot=slot,
+                     violations=len(v))
     return v
 
 
-def assert_pool_clean(pager, drained: bool = False) -> None:
+def assert_pool_clean(pager, drained: bool = False, *, tracer=None,
+                      clock: float = 0.0, slot: int = -1) -> None:
     """Raise :class:`PoolAuditError` listing every violated invariant."""
-    violations = audit_pool(pager, drained=drained)
+    violations = audit_pool(pager, drained=drained, tracer=tracer,
+                            clock=clock, slot=slot)
     if violations:
         raise PoolAuditError(
             f"pool audit failed ({len(violations)} violation(s)): "

@@ -288,6 +288,19 @@ class PageAllocator:
         return bt
 
     # -------------------------------------------------------------- stats
+    def observe(self, metrics) -> None:
+        """Publish the pool gauges into a telemetry MetricsRegistry (one
+        call per sync window from the scheduler) — the per-window occupancy
+        record plan-drift detection measures against."""
+        used = self.in_use
+        metrics.gauge("pages_used", used)
+        metrics.gauge("pages_free", len(self._free))
+        metrics.gauge("pool_pressure",
+                      used / self.num_pages if self.num_pages else 0.0)
+        metrics.gauge("shared_page_ratio",
+                      sum(1 for r in self._refs if r > 1) / max(used, 1))
+        metrics.gauge("resident_tokens", sum(self._lengths.values()))
+
     def stats(self) -> Dict[str, float]:
         used_pages = self.in_use
         used_tokens = sum(self._lengths.values())

@@ -61,6 +61,7 @@ import jax
 from repro.core import plan as plan_lib
 from repro.runtime.fault_tolerance import StragglerDetector, backoff_delay
 from repro.serve import chaos as chaos_mod, guard as guard_mod
+from repro.serve import telemetry as telemetry_mod
 from repro.serve.router import Router, RouterConfig
 from repro.serve.scheduler import ContinuousBatchingScheduler, StreamRequest
 
@@ -118,13 +119,15 @@ class Replica:
     """
 
     def __init__(self, slot: int, cfg, params, plan, *, eos_id: int,
-                 temperature: float, guard):
+                 temperature: float, guard,
+                 telemetry: Optional[telemetry_mod.Telemetry] = None):
         self.slot = slot
         self.cfg = cfg
         self.params = params
         self.eos_id = eos_id
         self.temperature = temperature
         self.guard = guard
+        self.telemetry = telemetry   # fleet-shared registry (slot-tagged)
         self.state = LIVE
         self.failed_over = False     # failover executed (exactly once)
         self.fail_reason = ""
@@ -137,7 +140,7 @@ class Replica:
         self._gen = None
         self.scheduler = ContinuousBatchingScheduler(
             cfg, params, plan, eos_id=eos_id, temperature=temperature,
-            guard=guard)
+            guard=guard, telemetry=telemetry, slot=slot)
 
     # ------------------------------------------------------------ lifecycle
     def start(self, rng, chaos=None, at_clock: float = 0.0,
@@ -225,7 +228,8 @@ class Replica:
         self.generation += 1
         self.scheduler = ContinuousBatchingScheduler(
             self.cfg, self.params, plan, eos_id=self.eos_id,
-            temperature=self.temperature, guard=self.guard)
+            temperature=self.temperature, guard=self.guard,
+            telemetry=self.telemetry, slot=self.slot)
         self.start(rng, chaos=chaos, at_clock=at_clock,
                    sync_every=self.scheduler.sync_every)
 
@@ -316,7 +320,8 @@ class ReplicaSet:
                  replan: Optional[ReplanConfig] = None,
                  migration_budget: int = 3,
                  migrate_backoff_steps: float = 0.0,
-                 max_rounds: int = 10_000):
+                 max_rounds: int = 10_000,
+                 telemetry: Optional[telemetry_mod.Telemetry] = None):
         if replicas < 1:
             raise ValueError(
                 f"replicas must be >= 1, got {replicas}: the control plane "
@@ -343,6 +348,11 @@ class ReplicaSet:
         self.migrate_backoff_steps = migrate_backoff_steps
         self.max_rounds = max_rounds
         self.n_replicas = replicas
+        # one fleet-shared Telemetry: every replica's scheduler writes into
+        # it tagged with its slot; the control plane adds window/failover
+        # events on slot -1 and owns the per-run reset
+        self.telemetry = telemetry if telemetry is not None \
+            else telemetry_mod.Telemetry()
         self._all: List[Replica] = []     # every replica ever spawned
         self._next_slot = 0
         self.phase_stats: Dict = {}
@@ -363,7 +373,7 @@ class ReplicaSet:
         self._next_slot += 1
         rep = Replica(slot, self.cfg, self.params, self.plan,
                       eos_id=self.eos_id, temperature=self.temperature,
-                      guard=self.guard)
+                      guard=self.guard, telemetry=self.telemetry)
         rep.start(self._rng_for(root, slot, 0),
                   chaos=chaos.request_chaos.get(slot),
                   at_clock=at_clock, sync_every=self.sync_every)
@@ -377,6 +387,9 @@ class ReplicaSet:
         r.finished_at = clock
         r.outcome = guard_mod.RequestOutcome(
             "failed", reason, at_step=clock, degraded=tuple(r.degraded))
+        self.telemetry.metrics.count("failed")
+        self.telemetry.tracer.event("outcome", clock, cat="request",
+                                    rid=r.rid, status="failed")
         if r.on_outcome is not None:
             r.on_outcome(r, r.outcome)
         self._failed.append(r)
@@ -392,7 +405,14 @@ class ReplicaSet:
         st["failovers"] += 1
         st["failover_reasons"].setdefault(reason.split(":")[0], 0)
         st["failover_reasons"][reason.split(":")[0]] += 1
+        tel = self.telemetry
+        tel.metrics.count("failovers")
+        tel.tracer.event("failover", clock, cat="window",
+                         replica=rep.slot, reason=reason.split(":")[0])
         for r in rep.harvest_unfinished():
+            tel.metrics.count("migrations")
+            tel.tracer.event("migrate", clock, cat="window", rid=r.rid,
+                             from_replica=rep.slot)
             r.migrations += 1
             if r.migrations > self.migration_budget:
                 self._resolve_failed(
@@ -454,6 +474,11 @@ class ReplicaSet:
         }
         self._all = []
         self._next_slot = 0
+        # fleet telemetry: one reset per run() — the replica schedulers
+        # share this bundle (never resetting it themselves) and tag their
+        # events with their slot; control-plane events live on slot -1
+        self.telemetry.reset()
+        tel = self.telemetry
         self._failed: List[StreamRequest] = []
         self._pendq = sorted(reqs, key=lambda r: (r.arrival, r.rid))
         self._hold: Dict[int, float] = {}       # rid -> earliest dispatch
@@ -525,8 +550,11 @@ class ReplicaSet:
                     up_streak = down_streak = 0
                 if up_streak >= asc.patience_windows \
                         and len(live) < asc.max_replicas:
-                    self._spawn(root, chaos, at_clock=G)
+                    rep = self._spawn(root, chaos, at_clock=G)
                     st["scale_ups"] += 1
+                    tel.metrics.count("scale_ups")
+                    tel.tracer.event("scale_up", G, cat="window",
+                                     replica=rep.slot)
                     up_streak = 0
                     live = self._live()
                 elif down_streak >= asc.patience_windows \
@@ -542,6 +570,9 @@ class ReplicaSet:
                         rep.state = RETIRED
                         self.router.forget_replica(rep.slot)
                         st["scale_downs"] += 1
+                        tel.metrics.count("scale_downs")
+                        tel.tracer.event("scale_down", G, cat="window",
+                                         replica=rep.slot)
                         down_streak = 0
                         live = self._live()
 
@@ -557,6 +588,9 @@ class ReplicaSet:
                     if new_plan != self.plan:
                         self.plan = new_plan    # spawns use it immediately
                         st["replans"] += 1
+                        tel.metrics.count("replans")
+                        tel.tracer.event("replan", G, cat="window",
+                                         measured_mean=round(measured, 3))
                     for rep in live:
                         if rep.last_status and rep.last_status["drained"] \
                                 and rep.queue_depth() == 0 \
@@ -579,6 +613,8 @@ class ReplicaSet:
                     rep.scheduler.inject([r])
                     self._pendq.remove(r)
                     self._hold.pop(r.rid, None)
+                tel.tracer.event("dispatch", G, cat="window",
+                                 placed=len(due))
 
             # ---- 6. tick the fleet at G (lockstep) -----------------------
             for rep in sorted(live, key=lambda rep: rep.slot):
@@ -600,6 +636,9 @@ class ReplicaSet:
                             len(r.prompt) + len(r.out))
                 self._done_seen[rep.slot] = len(slive["done"])
 
+            tel.tracer.span("window", G, G + T, cat="window",
+                            live=len(self._live()),
+                            pending=len(self._pendq))
             st["rounds"] = rounds = rounds + 1
             G += T
             st["clock_steps"] = G
@@ -646,4 +685,11 @@ class ReplicaSet:
             ps = rep.scheduler.phase_stats
             for k in agg_keys:
                 st["fleet"][k] += ps.get(k, 0)
+        # fleet-wide observability: per-tenant goodput/percentiles from the
+        # shared registry, and ONE drift report over the whole run's
+        # measured windows (the replica schedulers skip per-run drift on a
+        # shared bundle — partial-fleet reports would double-count)
+        tel.metrics.gauge("clock", G)
+        st["tenants"] = tel.metrics.tenant_summary()
+        st["drift"] = tel.detect_drift(self.plan).summary()
         return sorted(done, key=lambda r: r.rid)

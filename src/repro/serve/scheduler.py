@@ -54,6 +54,7 @@ from repro.models import decoding
 from repro.runtime.fault_tolerance import backoff_delay
 from repro.serve import chaos as chaos_mod, kvcache, paging
 from repro.serve import guard as guard_mod
+from repro.serve import telemetry as telemetry_mod
 from repro.serve.engine import build_tier_batch, make_decode_step
 
 
@@ -121,7 +122,9 @@ class ContinuousBatchingScheduler:
                  attn_path: Optional[str] = None,
                  share_prefix: Optional[bool] = None,
                  kv_quant: Optional[str] = None,
-                 guard: Optional[guard_mod.GuardConfig] = None):
+                 guard: Optional[guard_mod.GuardConfig] = None,
+                 telemetry: Optional[telemetry_mod.Telemetry] = None,
+                 slot: int = -1):
         legacy_kwargs = (rows is not None or cache_len is not None
                          or page_size or num_pages or attn_path is not None
                          or share_prefix is not None or kv_quant is not None)
@@ -196,6 +199,14 @@ class ContinuousBatchingScheduler:
                                  if r in guard.degrade_rungs)
         else:
             self._ladder = plan.degrade if guard is not None else ()
+        # observability (serve.telemetry, ISSUE 8): events are keyed by
+        # (virtual clock, replica slot, rid). A shared Telemetry comes from
+        # the facade or the multi-replica control plane (which also owns its
+        # reset); a self-owned bundle is reset at each run start.
+        self.telemetry = telemetry if telemetry is not None \
+            else telemetry_mod.Telemetry()
+        self._own_telemetry = telemetry is None
+        self.slot = slot
         self.host_syncs = 0
         self.phase_stats: Dict = {}
         self._live = None             # run-in-progress state (see _run_gen)
@@ -370,6 +381,10 @@ class ContinuousBatchingScheduler:
         self.kv_quant = "int8"
         self.phase_stats["kv_quant"] = "int8"
         self.phase_stats["degraded_to_int8_at"] = clock
+        self.telemetry.metrics.count("requant_events")
+        self.telemetry.tracer.event("degrade_rung", clock, cat="degrade",
+                                    slot=self.slot, rung="int8_kv",
+                                    pages=new_pages)
         return (cache, last, pos, live, budget)
 
     def run(self, requests: List[StreamRequest], rng=None, chaos=None
@@ -461,6 +476,18 @@ class ContinuousBatchingScheduler:
             inj = chaos if isinstance(chaos, chaos_mod.FaultInjector) \
                 else chaos_mod.FaultInjector(chaos)
         self.last_injector = inj
+        tel = self.telemetry
+        if self._own_telemetry:
+            tel.reset()
+        tr, m = tel.tracer, tel.metrics
+        slot = self.slot
+        if inj is not None:
+            # trace every delivered injection at the boundary it fired on
+            # (the closure reads the loop's clock late-bound); the schedule
+            # is seeded, so these events are same-seed deterministic too
+            inj.on_inject = lambda kind, rid=-1: tr.event(
+                "chaos_inject", clock, cat="chaos", slot=slot, rid=rid,
+                kind=kind)
         rids = [r.rid for r in requests]
         if len(set(rids)) != len(rids):
             # block tables are keyed by rid — duplicates would silently share
@@ -516,7 +543,7 @@ class ContinuousBatchingScheduler:
         T = self.sync_every
         clock = 0.0
         stall_streak = 0
-        t0 = time.perf_counter()
+        run_clock = telemetry_mod.RunClock()
         st = self.phase_stats = {
             "prefill_s": 0.0, "decode_s": 0.0, "prefill_batches": 0,
             "prefill_prompts": 0, "prefill_real_tokens": 0,
@@ -561,11 +588,24 @@ class ContinuousBatchingScheduler:
             r.done = True
             if r.finished_at is None:
                 r.finished_at = clock
-            r.finished_wall_s = time.perf_counter() - t0
+            r.finished_wall_s = run_clock.elapsed_s()
             r.outcome = guard_mod.RequestOutcome(
                 status=status, reason=reason, at_step=clock,
                 degraded=tuple(r.degraded))
             done.append(r)
+            m.count(status)
+            m.observe("e2e_latency_steps", r.finished_at - r.arrival)
+            if r.first_token_at is not None:
+                m.observe("ttft_steps", r.first_token_at - r.arrival)
+            if status == "ok":
+                # length/goodput hists cover completions only — shed/expired
+                # partials would skew the capacity-drift comparison
+                m.observe("finished_len_tokens", len(r.prompt) + len(r.out))
+                m.observe("generated_tokens", len(r.out))
+                m.tenant_count(r.tenant, "ok_requests")
+                m.tenant_count(r.tenant, "ok_tokens", len(r.out))
+            tr.event("outcome", r.finished_at, cat="request", slot=slot,
+                     rid=r.rid, status=status)
             if r.on_outcome is not None:
                 r.on_outcome(r, r.outcome)
 
@@ -615,6 +655,8 @@ class ContinuousBatchingScheduler:
             row_pos.pop(row, None)
             r.preemptions += 1
             st["preemptions"] += 1
+            m.count("preemptions")
+            tr.event("preempt", clock, cat="pool", slot=slot, rid=r.rid)
             preempted_rows.append(row)
             if g is not None and r.preemptions > g.retry_budget:
                 resolve(r, "preempted_out",
@@ -636,6 +678,8 @@ class ContinuousBatchingScheduler:
             request — the pool demonstrably cannot serve it."""
             nonlocal stall_streak
             st["stalled_boundaries"] += 1
+            m.count("stalled_boundaries")
+            tr.event("stall", clock, cat="pool", slot=slot, why=why)
             stall_streak += 1
             just_preempted.clear()
             if g is not None and stall_streak > g.stall_budget and \
@@ -679,6 +723,9 @@ class ContinuousBatchingScheduler:
             # ---- arrivals (virtual clock; idle-jump when nothing to do) ----
             while pending and pending[0].arrival <= clock + 1e-9:
                 r = pending.pop(0)
+                tr.event("queued", clock, cat="request", slot=slot,
+                         rid=r.rid)
+                m.count("requests_queued")
                 if g is not None and self.paged and self._ladder:
                     # admission control at the front door: rungs 2-3 judge
                     # each arrival against measured pool pressure
@@ -694,6 +741,10 @@ class ContinuousBatchingScheduler:
                         r.max_new = g.clamp_max_new
                         r.degraded.append("clamp_max_new")
                         st["clamped_admissions"] += 1
+                        m.count("clamped_admissions")
+                        tr.event("degrade_rung", clock, cat="degrade",
+                                 slot=slot, rid=r.rid,
+                                 rung="clamp_max_new")
                 waiting.append(r)
 
             # ---- deadlines: expire whatever outlived arrival + ttl --------
@@ -800,6 +851,14 @@ class ContinuousBatchingScheduler:
                     st["shared_tokens_admitted"] += r.shared_tokens
                 if r.admitted_at is None:
                     r.admitted_at = clock
+                    m.count("requests_admitted")
+                    wait = clock - r.arrival
+                    m.observe("admission_wait_steps", wait)
+                    m.tenant_observe(r.tenant, "admission_wait_steps", wait)
+                    tr.event("admitted", clock, cat="request", slot=slot,
+                             rid=r.rid, shared_tokens=r.shared_tokens)
+                if self.paged and r.shared_tokens:
+                    m.count("shared_tokens_admitted", r.shared_tokens)
             if admits:
                 buckets: Dict[int, List[Tuple[int, StreamRequest]]] = {}
                 for row, r in admits:
@@ -807,28 +866,35 @@ class ContinuousBatchingScheduler:
                                        []).append((row, r))
                 bt = self._block_table(row_rids) if self.paged else \
                     jnp.zeros((self.rows, 1), jnp.int32)
-                tp0 = time.perf_counter()
-                for tier, group in sorted(buckets.items()):
-                    B = len(group)
-                    toks, lengths, row_ids, budgets, starts = \
-                        build_tier_batch(
-                            group, tier, self._resume_prompt,
-                            lambda r: r.max_new - len(r.out),
-                            lambda r: r.shared_tokens)
-                    for row, r in group:
-                        active[row] = r
-                    state = self._refill(self.params, state,
-                                         jnp.asarray(toks),
-                                         jnp.asarray(lengths),
-                                         jnp.asarray(row_ids),
-                                         jnp.asarray(budgets), bt,
-                                         jnp.asarray(starts))
-                    st["prefill_batches"] += 1
-                    st["prefill_prompts"] += B
-                    st["prefill_real_tokens"] += int(lengths.sum())
-                    st["prefill_padded_tokens"] += B * tier
-                jax.block_until_ready(state[1])
-                st["prefill_s"] += time.perf_counter() - tp0
+                with telemetry_mod.phase_timer(
+                        st, "prefill_s", tracer=tr, name="prefill",
+                        start=clock, slot=slot) as ph:
+                    for tier, group in sorted(buckets.items()):
+                        B = len(group)
+                        toks, lengths, row_ids, budgets, starts = \
+                            build_tier_batch(
+                                group, tier, self._resume_prompt,
+                                lambda r: r.max_new - len(r.out),
+                                lambda r: r.shared_tokens)
+                        for row, r in group:
+                            active[row] = r
+                        state = self._refill(self.params, state,
+                                             jnp.asarray(toks),
+                                             jnp.asarray(lengths),
+                                             jnp.asarray(row_ids),
+                                             jnp.asarray(budgets), bt,
+                                             jnp.asarray(starts))
+                        real = int(lengths.sum())
+                        st["prefill_batches"] += 1
+                        st["prefill_prompts"] += B
+                        st["prefill_real_tokens"] += real
+                        st["prefill_padded_tokens"] += B * tier
+                        m.count("prefill_batches")
+                        m.count("prefill_prompts", B)
+                        m.count("prefill_real_tokens", real)
+                        m.count("prefill_padded_tokens", B * tier)
+                    ph.ready(state[1])
+                    ph.note(prompts=len(admits), tiers=len(buckets))
 
             if not active:
                 if g is not None or inj is not None:
@@ -877,6 +943,9 @@ class ContinuousBatchingScheduler:
                     # allocator already repointed those tables, so the device
                     # content copy must land before anything reads the pages
                     st["cow_copies"] += len(pairs)
+                    m.count("cow_copies", len(pairs))
+                    tr.event("cow_copy", clock, cat="pool", slot=slot,
+                             pages=len(pairs))
                     # pad to a power of two (bounded retraces); pads repeat a
                     # real pair so duplicate dsts carry identical content
                     n = 1 << (len(pairs) - 1).bit_length()
@@ -912,6 +981,7 @@ class ContinuousBatchingScheduler:
                     except chaos_mod.InjectedFault as e:
                         attempt += 1
                         st["step_retries"] += 1
+                        m.count("step_retries")
                         limit = g.max_step_retries if g is not None else 3
                         if attempt > limit:
                             reason = (f"decode step failing persistently "
@@ -962,28 +1032,45 @@ class ContinuousBatchingScheduler:
                     continue
 
             # ---------------------- device-resident decode chunk ----------
-            td0 = time.perf_counter()
-            rng, k = jax.random.split(rng)
-            bt = self._block_table(row_rids) if self.paged else \
-                jnp.zeros((self.rows, 1), jnp.int32)
-            state, toks, emits = self._chunk(self.params, state, k, bt)
-            toks_h, emits_h, live_h = jax.device_get((toks, emits, state[3]))
+            with telemetry_mod.phase_timer(
+                    st, "decode_s", tracer=tr, name="decode_chunk",
+                    start=clock, end=clock + T, slot=slot) as ph:
+                rng, k = jax.random.split(rng)
+                bt = self._block_table(row_rids) if self.paged else \
+                    jnp.zeros((self.rows, 1), jnp.int32)
+                state, toks, emits = self._chunk(self.params, state, k, bt)
+                toks_h, emits_h, live_h = jax.device_get(
+                    (toks, emits, state[3]))
+                ph.note(rows=len(active))
             self.host_syncs += 1
             st["decode_chunks"] += 1
             st["decode_steps"] += T
-            st["decode_s"] += time.perf_counter() - td0
+            m.count("decode_chunks")
+            m.count("decode_steps", T)
             stall_streak = 0
             clock += T
+            # window-end gauges, sampled while this chunk's rows are still
+            # resident (pre-eviction) — the per-window occupancy record the
+            # plan-drift detector measures against
+            m.gauge("queue_pending", len(pending))
+            m.gauge("queue_waiting", len(waiting))
+            m.gauge("active_rows", len(active))
+            if self.paged:
+                self.pager.observe(m)
+            m.end_window(clock, slot)
+            emitted = 0
             for t in range(emits_h.shape[0]):
                 for row, r in active.items():
                     if emits_h[t, row]:
                         tok = [int(v) for v in toks_h[t, row]] if K > 1 \
                             else int(toks_h[t, row])
                         r.out.append(tok)
+                        emitted += 1
                         if r.first_token_at is None:
                             r.first_token_at = clock - T + t + 1
                         if r.on_token is not None:
                             r.on_token(r, tok)
+            m.count("tokens_emitted", emitted)
             freed_rows: List[int] = []
             for row in list(active):
                 row_pos[row] += T
@@ -1002,9 +1089,11 @@ class ContinuousBatchingScheduler:
                 # debug/CI mode: the full pool invariant audit after every
                 # sync window — leaks surface at the boundary that caused
                 # them, not as an end-of-run mystery
-                guard_mod.assert_pool_clean(self.pager)
-        st["total_wall_s"] = time.perf_counter() - t0
+                guard_mod.assert_pool_clean(self.pager, tracer=tr,
+                                            clock=clock, slot=slot)
+        st["total_wall_s"] = run_clock.elapsed_s()
         st["clock_steps"] = clock
+        m.gauge("clock", clock)
         if g is not None:
             for r in allreqs:
                 if r.outcome is None:       # unreachable by construction —
@@ -1026,5 +1115,13 @@ class ContinuousBatchingScheduler:
             if g is not None:
                 # every request terminal implies a fully drained pool — the
                 # leak audit is the cheap proof
-                guard_mod.assert_pool_clean(self.pager, drained=True)
+                guard_mod.assert_pool_clean(self.pager, drained=True,
+                                            tracer=tr, clock=clock,
+                                            slot=slot)
+        if self._own_telemetry or self.slot < 0:
+            # Eyexam-at-runtime: diff measured occupancy/length/route
+            # proxies against the plan's Decision.numbers. Fleet members
+            # (slot >= 0 on a shared bundle) skip this — the ReplicaSet
+            # computes drift once at finalize, over the shared registry.
+            st["drift"] = tel.detect_drift(self.plan).summary()
         return done
