@@ -62,6 +62,12 @@ def main():
                          "CoW prefix sharing stores it once across requests")
     ap.add_argument("--kv-quant", choices=["fp", "int8"], default=None,
                     help="page payload format (default: plan rule)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="speculative draft depth per round (0 disables; "
+                         "default: plan rule — on at batch 1 where the "
+                         "weight stream dominates). Needs an all-global-"
+                         "attention arch (e.g. --arch qwen2.5-3b) on fp "
+                         "pages; greedy outputs stay bit-identical")
     ap.add_argument("--ttl", type=float, default=None,
                     help="per-request deadline in decode steps from arrival "
                          "(unfinished requests resolve `expired`)")
@@ -94,7 +100,8 @@ def main():
         page_size=args.page_size,
         num_pages=max(args.rows * dataflow.pages_for(
             args.cache_len, args.page_size) // 2, 1),
-        kv_quant=args.kv_quant)
+        kv_quant=args.kv_quant,
+        spec_k=args.spec_k)
     print(plan.explain())
     print()
 
@@ -159,6 +166,12 @@ def main():
               f"placements hit prefix affinity "
               f"({fleet['shared_tokens_admitted']} prompt tokens adopted "
               f"from shared pages)")
+    if st.get("spec_rounds"):
+        print(f"speculation: k={st['spec_k']}, {st['spec_rounds']} verify "
+              f"rounds retired {st['spec_accepted_tokens']}/"
+              f"{st['spec_drafted_tokens']} drafted tokens "
+              f"({st['spec_accepted_tokens'] / st['spec_rounds']:.2f} "
+              f"tokens/dispatch)")
     print(f"outcomes: " + ", ".join(
         f"{k} {v}" for k, v in st["outcomes"].items() if v))
     pg = st.get("pages_peak")

@@ -47,6 +47,12 @@ Checks:
         json.dump({a: plan.snapshot_plan(a).as_dict() for a in
         plan.SNAPSHOT_CONFIGS}, open('scripts/golden_plans.json','w'),
         indent=2, sort_keys=True)"
+ 12. speculative decode (ISSUE 9): batch-1 draft/verify speculation retires
+     >= 1.5x tokens per decode dispatch (one flattened k-position verify
+     per round vs one step per baseline token — the deterministic-clock
+     speedup; wall seconds are reported but never gated), and the greedy
+     token streams are bit-identical to the sequential baseline at every
+     benchmarked batch size
 
     PYTHONPATH=src python scripts/perf_guard.py [BENCH_sparse_decode.json]
 """
@@ -262,6 +268,27 @@ def main(path: str = "BENCH_sparse_decode.json") -> int:
               if not drifted else f"drifted: {'; '.join(drifted)}")
     else:
         print("  [--] plans section absent; plan-snapshot gate skipped")
+
+    spd = data.get("spec_proxy", {})
+    if spd:
+        s1 = spd.get("batches", {}).get("1", {})
+        # speedup is tokens-per-dispatch on the deterministic clock (one
+        # flattened verify per speculative round vs one step per baseline
+        # token) — wall seconds are reported alongside but never gated
+        check("spec-decode-speedup",
+              s1.get("speedup_tokens_per_dispatch", 0) >= 1.5,
+              f"batch-1 spec x{s1.get('speedup_tokens_per_dispatch', 0):.2f}"
+              f" tokens/dispatch (wall x{s1.get('speedup_wall', 0):.2f}, "
+              f"acceptance "
+              f"{s1.get('spec', {}).get('acceptance_rate', 0):.0%})")
+        check("spec-greedy-bit-exact",
+              all(row.get("greedy_bit_exact") is True
+                  for row in spd["batches"].values()),
+              "greedy outputs vs sequential baseline: " + ", ".join(
+                  f"batch {b}: {row.get('greedy_bit_exact')}"
+                  for b, row in sorted(spd["batches"].items())))
+    else:
+        print("  [--] spec_proxy section absent; spec-decode gates skipped")
 
     dec = data.get("decode", {})
     if dec:

@@ -196,6 +196,10 @@ class ServePlan:
     # int8 rung grows to (same HBM footprint, int8 payload)
     degrade: Tuple[str, ...] = ()
     num_pages_int8: int = 0
+    # speculative decode (ISSUE 9): draft depth k per round (0 = disabled);
+    # >0 only on all-global fp paged plans with one codebook, where the
+    # flattened k-position verifier is bit-exact under greedy sampling
+    spec_k: int = 0
     # rationale records (one per decision; not part of dispatch identity)
     decisions: Tuple[Decision, ...] = ()
 
@@ -385,12 +389,21 @@ def _pow2_tiers(cache_len: int) -> Tuple[int, ...]:
     return tuple(tiers)
 
 
+# speculative decode roofline knobs (ISSUE 9): assumed per-candidate
+# acceptance of the self-drafting bigram head, the draft depths considered,
+# and the modeled gain below which speculation stays off
+SPEC_ALPHA = 0.8
+SPEC_K_CANDIDATES = (2, 3, 4, 6, 8)
+SPEC_MIN_GAIN = 1.5
+
+
 def _resolve(cfg, arch: str, rows: int, cache_len: int, *, mean_len: float,
              page_size: Optional[int], num_pages: Optional[int],
              attn_path: Optional[str], share_prefix: Optional[bool],
              kv_quant: Optional[str], sync_every: int,
              sparsity_stats: Optional[Dict], drain_only: bool,
-             capacity_numbers: Optional[Dict] = None) -> ServePlan:
+             capacity_numbers: Optional[Dict] = None,
+             spec_k: Optional[int] = None) -> ServePlan:
     """Shared decision resolution for plan_serve and the legacy shims.
 
     Every rule consulted here is the SAME ``core.dataflow`` rule the legacy
@@ -544,6 +557,84 @@ def _resolve(cfg, arch: str, rows: int, cache_len: int, *, mean_len: float,
                "bookkeeping would outweigh the payload win"))
     decisions.append(Decision("kv_quant", kv_quant, "HBM", kv_why, kv_n))
 
+    # ---- speculative decode (HBM): draft k, verify once per round ----
+    # one flattened k-position verify streams the weights ONCE but the
+    # resident cache k times; with geometric per-candidate acceptance alpha
+    # a round retires E[n] = (1 - alpha^k)/(1 - alpha) tokens against
+    # E[n] weight streams sequentially — speculation pays exactly when the
+    # weight stream dominates the step (batch-1 decode), the Eyeriss v2
+    # adapt-to-the-actual-work regime applied to autoregressive serving
+    spec_pinned = spec_k is not None
+    spec_eligible = (paged and kv_quant == "fp" and not recurrent
+                     and kinds == {"global"} and cfg.num_codebooks == 1
+                     and not drain_only)
+    spec_cand = {}
+    for kk in SPEC_K_CANDIDATES:
+        exp_tokens = (1 - SPEC_ALPHA ** kk) / (1 - SPEC_ALPHA)
+        spec_cand[kk] = exp_tokens * (w_bytes + c_bytes) \
+            / (w_bytes + kk * c_bytes)
+    rule_spec = max(spec_cand, key=spec_cand.get)
+    rule_gain = spec_cand[rule_spec]
+    rule_on = spec_eligible and rows == 1 and rule_gain >= SPEC_MIN_GAIN
+    if spec_pinned:
+        spec_choice = int(spec_k)
+        if spec_choice and not (2 <= spec_choice <= max(SPEC_K_CANDIDATES)):
+            raise ValueError(
+                f"spec_k must be 0 or in [2, {max(SPEC_K_CANDIDATES)}], "
+                f"got {spec_choice}")
+        if spec_choice and not spec_eligible:
+            raise ValueError(
+                "spec_k > 0 requires an all-global-attention, single-"
+                "codebook, fp paged plan — the flattened verifier is only "
+                "bit-exact there (int8 appends requantize whole pages, so "
+                "rejected drafts would poison committed scales)")
+    else:
+        spec_choice = rule_spec if rule_on else 0
+    spec_n = {
+        "alpha_assumed": SPEC_ALPHA, "rows": rows,
+        "step_bytes_baseline": w_bytes + c_bytes,
+        "verify_bytes_per_round": w_bytes + max(spec_choice, rule_spec)
+        * c_bytes,
+        "est_tokens_per_round": (1 - SPEC_ALPHA ** rule_spec)
+        / (1 - SPEC_ALPHA),
+        "est_speedup": rule_gain,
+        "candidates": {str(kk): v for kk, v in spec_cand.items()},
+        "rule_choice": f"k={rule_spec}" if rule_on else "off",
+    }
+    if spec_pinned and (spec_choice > 0) != rule_on:
+        spec_why = (f"pinned {'k=%d' % spec_choice if spec_choice else 'off'}"
+                    f" by caller — the batch-1 weight-stream rule would pick "
+                    f"'{spec_n['rule_choice']}' (modeled "
+                    f"{rule_gain:.2f}x at alpha={SPEC_ALPHA})")
+    elif spec_choice:
+        spec_why = (
+            f"batch-1 decode is weight-stream bound (cache share "
+            f"{cache_share:.2f}): one k={spec_choice} verify streams the "
+            f"weights once for E[n]="
+            f"{(1 - SPEC_ALPHA ** spec_choice) / (1 - SPEC_ALPHA):.2f} "
+            f"retired tokens at alpha={SPEC_ALPHA} — modeled "
+            f"{spec_cand.get(spec_choice, rule_gain):.2f}x over sequential "
+            "greedy, bit-exact by accept-prefix construction")
+    else:
+        if not spec_eligible:
+            spec_why = ("requires an all-global-attention, single-codebook, "
+                        "fp paged plan (flattened verify appends are only "
+                        "bit-exact there) — "
+                        + ("drain engine" if drain_only else
+                           f"this plan has kinds={sorted(kinds)}, "
+                           f"kv_quant={kv_quant}, paged={paged}"))
+        elif rows != 1:
+            spec_why = (f"rows={rows}: batch rows already amortize the "
+                        "weight stream, and the k x cache-stream verify "
+                        "cost scales with occupancy — speculation is the "
+                        "batch-1 lever")
+        else:
+            spec_why = (f"modeled gain {rule_gain:.2f}x < "
+                        f"{SPEC_MIN_GAIN}x at alpha={SPEC_ALPHA}")
+    decisions.append(Decision(
+        "spec", f"k={spec_choice}" if spec_choice else "off", "HBM",
+        spec_why, spec_n))
+
     # ---- degrade ladder (occupancy): authorized overload behavior ----
     # resolved here (not improvised under pressure) so the guard's ladder is
     # a plan decision with a roofline rationale like every other dispatch
@@ -607,7 +698,7 @@ def _resolve(cfg, arch: str, rows: int, cache_len: int, *, mean_len: float,
         num_pages=np_, share_prefix=share_prefix, kv_quant=kv_quant,
         prefill_exact=recurrent, prefill_tiers=tiers,
         degrade=tuple(ladder), num_pages_int8=np_int8,
-        decisions=tuple(decisions))
+        spec_k=spec_choice, decisions=tuple(decisions))
 
 
 def plan_serve(cfg, *, hbm_budget_bytes: int, expected_batch: int,
@@ -617,7 +708,8 @@ def plan_serve(cfg, *, hbm_budget_bytes: int, expected_batch: int,
                attn_path: Optional[str] = None,
                share_prefix: Optional[bool] = None,
                kv_quant: Optional[str] = None,
-               sync_every: int = 8, arch: Optional[str] = None) -> ServePlan:
+               sync_every: int = 8, arch: Optional[str] = None,
+               spec_k: Optional[int] = None) -> ServePlan:
     """Resolve a full ServePlan from (model cfg, serving budget).
 
     ``expected_len_dist`` is {'mean': …, 'max': …} (total tokens per request,
@@ -656,7 +748,7 @@ def plan_serve(cfg, *, hbm_budget_bytes: int, expected_batch: int,
         cache_len, mean_len=mean_len, page_size=ps, num_pages=num_pages,
         attn_path=attn_path, share_prefix=share_prefix, kv_quant=kv_quant,
         sync_every=sync_every, sparsity_stats=sparsity_stats,
-        drain_only=False,
+        drain_only=False, spec_k=spec_k,
         capacity_numbers={
             "hbm_budget_bytes": int(hbm_budget_bytes),
             "expected_batch": int(expected_batch),
@@ -692,6 +784,7 @@ def replan_from_lengths(cfg, base_plan: ServePlan, lengths,
         share_prefix=base_plan.share_prefix,
         kv_quant=base_plan.kv_quant,
         sync_every=base_plan.sync_every,
+        spec_k=base_plan.spec_k,    # pinned: a hot-swap never flips dispatch
         arch=arch or base_plan.arch)
 
 
@@ -723,7 +816,8 @@ def plan_for_scheduler(cfg, *, rows: int, cache_len: int, page_size: int = 0,
         mean_len=cache_len / 2, page_size=page_size or None,
         num_pages=num_pages or None, attn_path=attn_path,
         share_prefix=share_prefix, kv_quant=kv_quant,
-        sync_every=sync_every, sparsity_stats=None, drain_only=False)
+        sync_every=sync_every, sparsity_stats=None, drain_only=False,
+        spec_k=0)   # legacy shim: speculation is a plan_serve opt-in
 
 
 # -------------------------------------------------------------- snapshotting

@@ -479,6 +479,64 @@ def serve_step(params, cache, tokens, pos, cfg, cond=None, hints=None,
     return logits, new_cache
 
 
+def verify_step(params, cache, tokens, pos, cfg, cond=None, hints=None,
+                block_table=None):
+    """Score k candidate tokens per row in ONE dispatch — the speculative-
+    decoding verifier (ISSUE 9).
+
+    tokens (B, k) int32: row b's candidate continuation; tokens[b, 0] lands
+    at position ``pos[b]``. Returns (logits fp32 (B, k, ...vocab), new_cache)
+    where logits[b, i] conditions on the row's history plus tokens[b, :i+1]
+    — exactly what ``serve_step`` would return after consuming those i+1
+    tokens sequentially, bit-identical for fp page pools (asserted in
+    tests/test_spec_decode.py the way paged==contiguous was).
+
+    Mechanism: the k positions flatten into the batch axis. Page pools are
+    row-count-free (addressed purely through block tables), so replicating
+    each row's block table k times gives k "virtual rows" sharing one page
+    chain: every flattened row appends its token at its own (page, offset)
+    — disjoint targets, one scatter — and reads with per-row length
+    ``pos + i + 1``, which exposes exactly the appends of its own prefix
+    (later candidates sit past the length bound and are masked). That makes
+    the single dispatch causal over the candidate block with no transient
+    (B, k, cache_len) attention mask and no second write pass.
+
+    Only valid for configs whose every layer is global attention on a paged
+    cache (the plan's ``spec`` gate): ring/recurrent entries carry per-row
+    state that the flattening cannot replicate. Quantized (int8) pools take
+    a sequential k-step fallback instead — per-page amax scales make the
+    append order observable (a louder later token requants the whole page),
+    so the flattened scatter would race whole-page rewrites; the fallback
+    keeps pools and logits bit-identical to sequential ``serve_step`` calls
+    at k× dispatch cost, which is why the plan speculates on fp pools only.
+    """
+    assert block_table is not None, "verify_step requires a paged cache"
+    kinds = {kk for kk, _ in tfm.slot_kinds(cfg)}
+    assert kinds == {"global"}, \
+        f"verify_step needs an all-global-attention config, got {kinds}"
+    B, k = tokens.shape
+    posv = jnp.broadcast_to(jnp.asarray(pos), (B,)).astype(jnp.int32)
+
+    quantized = any(is_quantized_entry(e)
+                    for e in jax.tree.leaves(cache, is_leaf=is_paged_entry))
+    if quantized:
+        outs = []
+        for i in range(k):
+            lg, cache = serve_step(params, cache, tokens[:, i:i + 1],
+                                   posv + i, cfg, cond=cond, hints=hints,
+                                   block_table=block_table)
+            outs.append(lg)
+        return jnp.concatenate(outs, axis=1), cache
+
+    posf = (posv[:, None]
+            + jnp.arange(k, dtype=jnp.int32)[None, :]).reshape(-1)
+    tokf = tokens.reshape(-1)[:, None]                       # (B*k, 1)
+    btf = jnp.repeat(block_table, k, axis=0)                 # (B*k, MP)
+    logits, new_cache = serve_step(params, cache, tokf, posf, cfg, cond=cond,
+                                   hints=hints, block_table=btf)
+    return logits.reshape((B, k) + logits.shape[2:]), new_cache
+
+
 # -------------------------------------------------------------------- prefill
 def _gather_ring(full, m: int):
     """full (B,S,...) -> ring (B,m,...) honoring the ring invariant at pos=S-1."""

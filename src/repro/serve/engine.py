@@ -135,6 +135,103 @@ def make_decode_step(cfg, temperature: float, eos_id: int) -> Callable:
     return step
 
 
+def ngram_successor(hist, pos, tok):
+    """Self-drafting bigram lookup (ISSUE 9): for each row, the token that
+    followed the most recent earlier occurrence of ``tok`` in that row's
+    history, falling back to ``tok`` itself (repeat) when it never occurred.
+
+    ``hist`` (B, H) holds the row's token stream by absolute position
+    (positions >= ``pos`` are garbage from rejected drafts — masked here);
+    ``pos`` (B,) is the valid history length. Only the successor position
+    ``j + 1 < pos`` may be read, so the draft is a pure function of the
+    committed stream — acceptance rate is a quality knob, never a
+    correctness one.
+    """
+    H = hist.shape[1]
+    idx = jnp.arange(H, dtype=jnp.int32)
+    match = (hist == tok[:, None]) & (idx[None, :] + 1 < pos[:, None])
+    j = jnp.where(match, idx[None, :], -1).max(axis=1)        # most recent
+    nxt = jnp.take_along_axis(hist, jnp.clip(j + 1, 0, H - 1)[:, None],
+                              axis=1)[:, 0]
+    return jnp.where(j >= 0, nxt, tok)
+
+
+def make_spec_decode_step(cfg, eos_id: int, k: int) -> Callable:
+    """One fused speculative round: draft k candidates → ONE k-position
+    verify dispatch → accept the matched prefix (ISSUE 9). Greedy only —
+    the scheduler gates speculation on temperature <= 0 (and the plan on
+    fp paged pools), which is what makes the accepted stream bit-identical
+    to ``make_decode_step``'s: candidate 0 IS the baseline's argmax over
+    ``last``, and candidate i+1 is emitted only when it equals the
+    verifier's argmax after candidates 0..i — every emitted token is
+    exactly the token sequential greedy decode would have produced.
+
+    Carry adds a ``hist`` (B, H) token-history buffer (absolute-position
+    indexed, seeded from the prompt at refill) that feeds the bigram
+    self-draft; rejected candidates past the accepted prefix leave garbage
+    beyond ``pos``, which both the drafter and the paged attention reads
+    mask by length — no rollback scatter, host-side fork refcounts
+    (paging.fork_chain/commit_fork/abort_fork) are the only cleanup.
+
+    Per round a row emits n ∈ [1, k] tokens (0 when dead): the accepted
+    prefix clamped by EOS and remaining budget; ``pos`` advances by n and
+    ``last`` becomes the verifier logits after the last emitted token —
+    the all-accepted case hands next round its bonus argmax for free.
+    Emits (toks (B, k), emit_mask (B, k)) per scan step.
+    """
+    K = cfg.num_codebooks
+    assert K == 1, "speculative decode is single-codebook only"
+    assert k >= 2, f"spec k must be >= 2, got {k}"
+
+    def step(params, carry, rng_i, block_table=None):
+        del rng_i                              # greedy: sampling is argmax
+        cache, last, pos, live, budget, hist = carry
+        B = last.shape[0]
+        t0 = jnp.argmax(last, axis=-1).astype(jnp.int32)      # (B,)
+        cands = [t0]
+        for _ in range(k - 1):
+            cands.append(ngram_successor(hist, pos, cands[-1]))
+        v = jnp.stack(cands, axis=1)                          # (B, k)
+        logits, cache = decoding.verify_step(params, cache, v, pos, cfg,
+                                             block_table=block_table)
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (B, k)
+        # accept-prefix: candidate 0 is the true argmax by construction;
+        # candidate i (i >= 1) survives iff it equals the verifier's argmax
+        # after candidates 0..i-1 AND everything before it survived
+        ok = jnp.concatenate(
+            [jnp.ones((B, 1), bool), v[:, 1:] == g[:, :-1]], axis=1)
+        acc = jnp.cumprod(ok.astype(jnp.int32), axis=1).astype(bool)
+        # emission clamps, identical semantics to make_decode_step unrolled:
+        # stop at the first emitted EOS, never exceed the remaining budget
+        not_eos = v != eos_id
+        no_prior_eos = jnp.concatenate(
+            [jnp.ones((B, 1), bool),
+             jnp.cumprod(not_eos[:, :-1].astype(jnp.int32),
+                         axis=1).astype(bool)], axis=1)
+        steps_i = jnp.arange(k, dtype=jnp.int32)[None, :]
+        emit = live[:, None] & acc & no_prior_eos & (budget[:, None] > steps_i)
+        n = emit.sum(axis=1).astype(jnp.int32)                # (B,)
+        budget = budget - n
+        hit_eos = jnp.any(emit & ~not_eos, axis=1)
+        new_live = live & ~hit_eos & (budget > 0)
+        # next round's sampling distribution: verifier logits after the last
+        # emitted token (dead rows keep their last unchanged, n == 0 there)
+        sel = jnp.clip(n - 1, 0, k - 1)
+        picked = jnp.take_along_axis(logits, sel[:, None, None],
+                                     axis=1)[:, 0]
+        last = jnp.where(live[:, None], picked, last)
+        # history append: write all k candidates at pos..pos+k-1 — the
+        # rejected tail beyond pos+n is overwritten by the next round and
+        # masked by ngram_successor/verify reads until then
+        H = hist.shape[1]
+        posk = pos[:, None] + steps_i
+        posk = jnp.where((posk < H) & live[:, None], posk, H)
+        hist = hist.at[jnp.arange(B)[:, None], posk].set(v, mode="drop")
+        return (cache, last, pos + n, new_live, budget, hist), (v, emit)
+
+    return step
+
+
 def build_tier_batch(group, tier: int, prompt_of: Callable,
                      budget_of: Callable, start_of: Callable = None):
     """Host-side arrays for one admission tier: (toks, lengths, slots,

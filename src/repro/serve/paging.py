@@ -245,6 +245,71 @@ class PageAllocator:
         self._page_keys.setdefault(page, []).append(key)
         return 1
 
+    # -------------------------------------------------- generation forks
+    def fork_chain(self, parent: int, child: int,
+                   cow_tail: bool = False) -> Optional[Tuple[int, int]]:
+        """Fork ``parent``'s page chain under ``child``: every physical page
+        gains one reference and the child gets its own block-table copy — a
+        speculative branch costs zero page copies. Appends into the branch
+        then allocate fresh tail pages via ``ensure(child, ...)``, so the
+        parent's committed history is immutable under the fork.
+
+        ``cow_tail=True`` additionally materializes a private copy of the
+        partial tail page (parent length not page-aligned), giving this
+        writer its own append tail — the mode for *sibling* forks (beam /
+        n-best) whose appends would otherwise collide in the shared tail. A
+        single speculative fork per request skips it: its tail writes live
+        beyond the parent's committed length, which length-masked reads
+        never see, so abort needs no rollback scatter.
+
+        Returns the (src, dst) physical pair to device-copy when a private
+        tail was materialized, ``()`` when none was needed/requested, or
+        ``None`` under page pressure (nothing changed — the same probe
+        contract as ``ensure``/``cow_page``).
+        """
+        assert not self._tables.get(child), \
+            f"fork_chain onto a non-empty table for rid {child}"
+        table = self._tables[parent]
+        n_tok = self._lengths.get(parent, 0)
+        tail = n_tok % self.page_size
+        if cow_tail and table and tail and not self._free:
+            return None
+        for p in table:
+            self._refs[p] += 1
+        self._tables[child] = list(table)
+        if parent in self._lengths:
+            self._lengths[child] = n_tok
+        if cow_tail and table and tail:
+            return self.cow_page(child, len(table) - 1)
+        return ()
+
+    def commit_fork(self, parent: int, child: int,
+                    n_tokens: Optional[int] = None) -> int:
+        """Accept a fork: ``parent`` adopts ``child``'s block table (shared
+        prefix pages keep one reference through the child's copy — pure
+        refcount bookkeeping, no page copies) and drops its own references
+        on the pre-fork chain. ``n_tokens`` records the committed length.
+        Returns the number of pages returned to the pool (pages the fork
+        had CoW'd away from, now unreferenced)."""
+        child_table = self._tables.pop(child)
+        child_len = self._lengths.pop(child, None)
+        old = self._tables[parent]
+        self._tables[parent] = child_table
+        returned = sum(self._release(p) for p in old)
+        self._free.sort(reverse=True)
+        if n_tokens is not None:
+            self._lengths[parent] = int(n_tokens)
+        elif child_len is not None:
+            self._lengths[parent] = child_len
+        return returned
+
+    def abort_fork(self, child: int) -> int:
+        """Reject a fork: drop one reference on every page the branch holds
+        (fresh tail pages return to the pool, shared history survives with
+        the parent). The parent's table/length were never touched — rollback
+        is exactly this refcount drop. Returns pages returned."""
+        return self.free(child)
+
     def shared_pages_in(self, rid: int, lo_token: int,
                         hi_token: int) -> List[int]:
         """Logical page indices of rid's table in [lo_token, hi_token) whose

@@ -55,7 +55,8 @@ from repro.runtime.fault_tolerance import backoff_delay
 from repro.serve import chaos as chaos_mod, kvcache, paging
 from repro.serve import guard as guard_mod
 from repro.serve import telemetry as telemetry_mod
-from repro.serve.engine import build_tier_batch, make_decode_step
+from repro.serve.engine import (build_tier_batch, make_decode_step,
+                                make_spec_decode_step)
 
 
 @dataclasses.dataclass
@@ -189,6 +190,23 @@ class ContinuousBatchingScheduler:
             self.pager = None
         self.share_prefix = plan.share_prefix
         self.kv_quant = plan.kv_quant
+        # speculative decode (ISSUE 9): the plan's roofline `spec` Decision
+        # picks k (0 disables); the runtime additionally requires greedy
+        # sampling and the fp paged pool the flattened k-position verifier
+        # is bit-exact on. A mid-run int8 degrade rung turns it back off.
+        self.spec_k = int(getattr(plan, "spec_k", 0))
+        self.spec_on = (self.spec_k >= 2 and self.paged
+                        and temperature <= 0 and cfg.num_codebooks == 1
+                        and self.kv_quant == "fp")
+        # recompute-resume fast path (ISSUE 9 satellite): a re-admitted
+        # preempted request whose leading pages are still resident refills
+        # only the non-adopted suffix through the flattened verifier —
+        # same gates as speculation minus the plan's k choice
+        self._fast_resume = (self.paged and self.share_prefix
+                             and cfg.num_codebooks == 1
+                             and self.kv_quant == "fp"
+                             and {kk for kk, _ in decoding.tfm.slot_kinds(cfg)}
+                             == {"global"})
         # robustness policy (serve.guard): guard=None preserves the legacy
         # raise-on-exhaustion semantics exactly; with a GuardConfig every
         # request resolves to a structured RequestOutcome and overload walks
@@ -213,6 +231,14 @@ class ContinuousBatchingScheduler:
         self._chunk = jax.jit(self._make_chunk_fn(), donate_argnums=(1,))
         self._refill = jax.jit(self._make_refill_fn(), donate_argnums=(1,))
         self._cow = jax.jit(self._make_cow_fn(), donate_argnums=(0,))
+        self._resume = jax.jit(self._make_resume_fn(), donate_argnums=(1,))
+
+    def _chunk_span(self) -> int:
+        """Worst-case tokens one decode chunk appends per row: T baseline
+        steps, T rounds of k candidate writes under speculation (rejected
+        candidates occupy page slots until the next round overwrites them,
+        so headroom and the CoW window must cover them)."""
+        return self.sync_every * (self.spec_k if self.spec_on else 1)
 
     # ------------------------------------------------------ device programs
     def _init_state(self):
@@ -229,7 +255,12 @@ class ContinuousBatchingScheduler:
         pos = jnp.zeros((self.rows,), jnp.int32)
         live = jnp.zeros((self.rows,), jnp.bool_)
         budget = jnp.zeros((self.rows,), jnp.int32)
-        return (cache, last, pos, live, budget)
+        # per-row committed token stream by absolute position (-1 empty):
+        # feeds the bigram self-draft (engine.ngram_successor); threaded
+        # unchanged through the baseline step so both chunk flavors share
+        # one state pytree
+        hist = jnp.full((self.rows, self.cache_len), -1, jnp.int32)
+        return (cache, last, pos, live, budget, hist)
 
     def _make_refill_fn(self) -> Callable:
         """Batched prefill of one length tier into freed rows.
@@ -247,7 +278,7 @@ class ContinuousBatchingScheduler:
 
         def refill(params, state, toks, lengths, slots, max_new, block_table,
                    write_start):
-            cache, last, pos, live, budget = state
+            cache, last, pos, live, budget, hist = state
             if paged:
                 pp = decoding.PagedPrefill(
                     cache=cache, block_table_rows=block_table[slots],
@@ -271,7 +302,16 @@ class ContinuousBatchingScheduler:
             pos = pos.at[slots].set(lengths)
             live = live.at[slots].set(True)
             budget = budget.at[slots].set(max_new)
-            return (new_cache, last, pos, live, budget)
+            if cfg.num_codebooks == 1:
+                # seed the self-draft history with the (resume-extended)
+                # prompt; pad positions stay -1 (never matched)
+                S = toks.shape[1]
+                row_hist = jnp.where(
+                    jnp.arange(S, dtype=jnp.int32)[None, :]
+                    < lengths[:, None], toks.astype(jnp.int32), -1)
+                hist = hist.at[slots].set(-1)
+                hist = hist.at[slots, :S].set(row_hist)
+            return (new_cache, last, pos, live, budget, hist)
 
         return refill
 
@@ -282,7 +322,7 @@ class ContinuousBatchingScheduler:
         repeat a real pair, so duplicate destinations carry identical
         values (order-independent scatter)."""
         def cow(state, src, dst):
-            cache, last, pos, live, budget = state
+            cache, last, pos, live, budget, hist = state
             new_cache = {}
             for part in ("blocks", "rem"):
                 if part not in cache:
@@ -300,16 +340,30 @@ class ContinuousBatchingScheduler:
                     else:
                         out[name] = e
                 new_cache[part] = out
-            return (new_cache, last, pos, live, budget)
+            return (new_cache, last, pos, live, budget, hist)
 
         return cow
 
     def _make_chunk_fn(self) -> Callable:
         """sync_every fused decode steps — the engine's shared step
         (engine.make_decode_step), with serve_step routing paged entries
-        through the block table."""
+        through the block table. Under speculation each scan step is one
+        draft-k/verify-once round (engine.make_spec_decode_step), so the
+        chunk's outputs widen to (T, B, k) and a chunk retires up to
+        ``T * k`` tokens per row at the same T dispatches."""
         T, paged = self.sync_every, self.paged
-        step = make_decode_step(self.cfg, self.temperature, self.eos_id)
+        if self.spec_on:
+            step = make_spec_decode_step(self.cfg, self.eos_id, self.spec_k)
+        else:
+            base = make_decode_step(self.cfg, self.temperature, self.eos_id)
+
+            def step(params, carry, rng_i, block_table=None):
+                # thread the spec history through untouched — one state
+                # pytree for both chunk flavors (degrade rungs retrace the
+                # same donated buffers)
+                core, out = base(params, carry[:5], rng_i,
+                                 block_table=block_table)
+                return core + (carry[5],), out
 
         def chunk(params, state, rng, block_table):
             bt = block_table if paged else None
@@ -320,6 +374,32 @@ class ContinuousBatchingScheduler:
             return state, toks, emits
 
         return chunk
+
+    def _make_resume_fn(self) -> Callable:
+        """Suffix-only refill for a recompute resume (ISSUE 9 satellite):
+        the adopted prefix pages already hold K/V for tokens [0, start), so
+        only the ``toks`` suffix flows through the flattened k-position
+        verifier — one dispatch over len(suffix) flattened rows instead of
+        a full-prompt prefill tier. ``toks`` (1, Lp) is the pow2-padded
+        suffix, ``n_real`` its unpadded length; pad positions write beyond
+        the committed length (overwritten by decode before any masked read)
+        and their logits are never selected."""
+        cfg = self.cfg
+
+        def resume(params, state, toks, start, n_real, row, n_tok, max_new,
+                   block_table, hist_row):
+            cache, last, pos, live, budget, hist = state
+            logits, cache = decoding.verify_step(
+                params, cache, toks, start[None], cfg,
+                block_table=block_table[row][None])
+            last = last.at[row].set(logits[0, n_real - 1].astype(last.dtype))
+            pos = pos.at[row].set(n_tok)
+            live = live.at[row].set(True)
+            budget = budget.at[row].set(max_new)
+            hist = hist.at[row].set(hist_row)
+            return (cache, last, pos, live, budget, hist)
+
+        return resume
 
     # -------------------------------------------------------------- host loop
     def _plen(self, r: StreamRequest) -> int:
@@ -370,7 +450,7 @@ class ContinuousBatchingScheduler:
                 out_cache[part] = out
             return out_cache
 
-        cache, last, pos, live, budget = state
+        cache, last, pos, live, budget, hist = state
         with warnings.catch_warnings():
             # fp buffers can't be reused for the int8 pool (dtype + shape
             # change) — the donation-unused warning is expected here, once
@@ -379,13 +459,20 @@ class ContinuousBatchingScheduler:
         self.pager.grow(new_pages)
         self.num_pages = new_pages
         self.kv_quant = "int8"
+        if self.spec_on:
+            # int8 appends rewrite whole pages (per-page scale requant), so
+            # rejected-draft garbage would poison committed tokens' scales:
+            # speculation and the suffix-resume verifier end at this rung
+            self.spec_on = False
+            self._chunk = jax.jit(self._make_chunk_fn(), donate_argnums=(1,))
+        self._fast_resume = False
         self.phase_stats["kv_quant"] = "int8"
         self.phase_stats["degraded_to_int8_at"] = clock
         self.telemetry.metrics.count("requant_events")
         self.telemetry.tracer.event("degrade_rung", clock, cat="degrade",
                                     slot=self.slot, rung="int8_kv",
                                     pages=new_pages)
-        return (cache, last, pos, live, budget)
+        return (cache, last, pos, live, budget, hist)
 
     def run(self, requests: List[StreamRequest], rng=None, chaos=None
             ) -> List[StreamRequest]:
@@ -561,6 +648,13 @@ class ContinuousBatchingScheduler:
             "stalled_boundaries": 0,       # boundaries skipped: pool stalled
             "step_retries": 0,             # transient step faults retried
             "clamped_admissions": 0,       # max_new clamps (degrade rung 2)
+            # speculative decode (ISSUE 9)
+            "spec_k": self.spec_k if self.spec_on else 0,
+            "spec_rounds": 0,              # draft/verify rounds dispatched
+            "spec_drafted_tokens": 0,      # candidates scored by the verifier
+            "spec_accepted_tokens": 0,     # candidates emitted (greedy-exact)
+            "resume_fast_prompts": 0,      # suffix-only recompute resumes
+            "resume_fast_tokens": 0,       # prompt tokens NOT re-prefilled
         }
 
         preempted_rows: List[int] = []
@@ -576,9 +670,9 @@ class ContinuousBatchingScheduler:
             nonlocal state
             if not preempted_rows:
                 return
-            cache, last, pos, live, budget = state
+            cache, last, pos, live, budget, hist = state
             live = live.at[jnp.asarray(preempted_rows)].set(False)
-            state = (cache, last, pos, live, budget)
+            state = (cache, last, pos, live, budget, hist)
             preempted_rows.clear()
 
         def resolve(r: StreamRequest, status: str, reason: str = ""):
@@ -781,12 +875,13 @@ class ContinuousBatchingScheduler:
             # only to be preempted at the same boundary — that would throw
             # the prefill away and thrash under sustained pressure
             stalled = False
+            span = self._chunk_span()     # T, or T*k under speculation
             if self.paged:
                 for row in list(admit_order):         # oldest first
                     if row not in active:
                         continue
                     r = active[row]
-                    need = min(row_pos[row] + T, self._final_len(r))
+                    need = min(row_pos[row] + span, self._final_len(r))
                     while row in active and not ensure_pages(r.rid, need):
                         if not preempt_latest():
                             if g is None:
@@ -826,7 +921,7 @@ class ContinuousBatchingScheduler:
                         r.rid, self._resume_prompt(r)) \
                         if self.share_prefix else 0
                     if not ensure_pages(
-                            r.rid, min(plen + T, self._final_len(r))):
+                            r.rid, min(plen + span, self._final_len(r))):
                         if self.pager.pages_of(r.rid):
                             self.pager.free(r.rid)   # roll back adoption
                         r.shared_tokens = 0
@@ -860,6 +955,22 @@ class ContinuousBatchingScheduler:
                 if self.paged and r.shared_tokens:
                     m.count("shared_tokens_admitted", r.shared_tokens)
             if admits:
+                # recompute-resume fast path (ISSUE 9 satellite): a preempted
+                # request re-admitted while its leading pages are still
+                # resident (adopt_prefix above re-pointed the table at them)
+                # refills only the non-adopted suffix through the flattened
+                # verifier — one dispatch over len(suffix) rows instead of a
+                # full-prompt prefill tier. Partial coverage is page-aligned
+                # by construction (a partial-tail index key matches only the
+                # entire remainder), so the suffix starts on a fresh
+                # (unshared) page and its writes need no CoW.
+                fast: List[Tuple[int, StreamRequest]] = []
+                if self._fast_resume:
+                    fast = [(row, r) for row, r in admits
+                            if r.out and 0 < r.shared_tokens < self._plen(r)
+                            and r.shared_tokens % self.page_size == 0]
+                    fast_rows = {row for row, _ in fast}
+                    admits = [a for a in admits if a[0] not in fast_rows]
                 buckets: Dict[int, List[Tuple[int, StreamRequest]]] = {}
                 for row, r in admits:
                     buckets.setdefault(self.plan.tier(self._plen(r)),
@@ -869,6 +980,30 @@ class ContinuousBatchingScheduler:
                 with telemetry_mod.phase_timer(
                         st, "prefill_s", tracer=tr, name="prefill",
                         start=clock, slot=slot) as ph:
+                    for row, r in fast:
+                        active[row] = r
+                        prompt = self._resume_prompt(r)
+                        cov = r.shared_tokens
+                        suffix = prompt[cov:]
+                        Lp = 1 << (len(suffix) - 1).bit_length()
+                        hrow = np.full((self.cache_len,), -1, np.int32)
+                        hrow[:len(prompt)] = prompt
+                        state = self._resume(
+                            self.params, state,
+                            jnp.asarray([suffix + [0] * (Lp - len(suffix))],
+                                        jnp.int32),
+                            jnp.asarray(cov, jnp.int32),
+                            jnp.asarray(len(suffix), jnp.int32),
+                            jnp.asarray(row, jnp.int32),
+                            jnp.asarray(len(prompt), jnp.int32),
+                            jnp.asarray(r.max_new - len(r.out), jnp.int32),
+                            bt, jnp.asarray(hrow))
+                        st["resume_fast_prompts"] += 1
+                        st["resume_fast_tokens"] += cov
+                        st["prefill_real_tokens"] += len(suffix)
+                        tr.event("resume_fast", clock, cat="request",
+                                 slot=slot, rid=r.rid, adopted=cov,
+                                 suffix=len(suffix))
                     for tier, group in sorted(buckets.items()):
                         B = len(group)
                         toks, lengths, row_ids, budgets, starts = \
@@ -894,7 +1029,8 @@ class ContinuousBatchingScheduler:
                         m.count("prefill_real_tokens", real)
                         m.count("prefill_padded_tokens", B * tier)
                     ph.ready(state[1])
-                    ph.note(prompts=len(admits), tiers=len(buckets))
+                    ph.note(prompts=len(admits) + len(fast),
+                            tiers=len(buckets))
 
             if not active:
                 if g is not None or inj is not None:
@@ -916,7 +1052,7 @@ class ContinuousBatchingScheduler:
                         continue
                     r = active[row]
                     lo = row_pos[row]
-                    hi = min(lo + T, self._final_len(r))
+                    hi = min(lo + span, self._final_len(r))
                     # re-probe after every mutation: a preemption can drop a
                     # refcount to 1 mid-loop (page no longer needs a copy)
                     while row in active:
@@ -1013,9 +1149,9 @@ class ContinuousBatchingScheduler:
                 prids = set(inj.nan_rids_for(st["decode_chunks"]))
                 prows = [row for row, r in active.items() if r.rid in prids]
                 if prows:
-                    cache_c, last_c, pos_c, live_c, budget_c = state
+                    cache_c, last_c = state[0], state[1]
                     last_c = last_c.at[jnp.asarray(prows)].set(jnp.nan)
-                    state = (cache_c, last_c, pos_c, live_c, budget_c)
+                    state = (cache_c, last_c) + state[2:]
             if g is not None and (g.nan_check or inj is not None):
                 bad = jax.device_get(jnp.isnan(
                     state[1]).reshape(self.rows, -1).any(axis=1))
@@ -1032,6 +1168,22 @@ class ContinuousBatchingScheduler:
                     continue
 
             # ---------------------- device-resident decode chunk ----------
+            # under speculation the chunk runs against CoW forks of each
+            # row's page chain (refcount++, zero copies): draft writes land
+            # in the fork's tail headroom, commit adopts the fork table
+            # after the device round-trip, and any abort between simply
+            # drops the refcounts — no rollback scatter (ISSUE 9)
+            # fork child ids live at -2 - rid: real rids are >= 0 and -1 is
+            # the empty-device-row sentinel in row_rids, so ~0 == -1 would
+            # hand a dead row the fork's page table and let its flattened
+            # verify writes clobber the parent's KV
+            fork_rids: List[int] = []
+            if self.spec_on:
+                for row in list(admit_order):
+                    if row in active:
+                        rid = active[row].rid
+                        self.pager.fork_chain(rid, -2 - rid)
+                        fork_rids.append(rid)
             with telemetry_mod.phase_timer(
                     st, "decode_s", tracer=tr, name="decode_chunk",
                     start=clock, end=clock + T, slot=slot) as ph:
@@ -1042,6 +1194,8 @@ class ContinuousBatchingScheduler:
                 toks_h, emits_h, live_h = jax.device_get(
                     (toks, emits, state[3]))
                 ph.note(rows=len(active))
+            for rid in fork_rids:
+                self.pager.commit_fork(rid, -2 - rid)
             self.host_syncs += 1
             st["decode_chunks"] += 1
             st["decode_steps"] += T
@@ -1059,21 +1213,46 @@ class ContinuousBatchingScheduler:
                 self.pager.observe(m)
             m.end_window(clock, slot)
             emitted = 0
-            for t in range(emits_h.shape[0]):
-                for row, r in active.items():
-                    if emits_h[t, row]:
-                        tok = [int(v) for v in toks_h[t, row]] if K > 1 \
-                            else int(toks_h[t, row])
-                        r.out.append(tok)
-                        emitted += 1
-                        if r.first_token_at is None:
-                            r.first_token_at = clock - T + t + 1
-                        if r.on_token is not None:
-                            r.on_token(r, tok)
+            spec = emits_h.ndim == 3          # (T, B, k) speculative chunk
+            if spec:
+                for t in range(emits_h.shape[0]):
+                    for row, r in active.items():
+                        for i in range(emits_h.shape[2]):
+                            if emits_h[t, row, i]:
+                                tok = int(toks_h[t, row, i])
+                                r.out.append(tok)
+                                emitted += 1
+                                if r.first_token_at is None:
+                                    r.first_token_at = clock - T + t + 1
+                                if r.on_token is not None:
+                                    r.on_token(r, tok)
+                drafted = emits_h.shape[0] * emits_h.shape[2] * len(active)
+                st["spec_rounds"] += emits_h.shape[0]
+                st["spec_drafted_tokens"] += drafted
+                st["spec_accepted_tokens"] += emitted
+                m.count("spec_rounds", emits_h.shape[0])
+                m.count("spec_drafted_tokens", drafted)
+                m.count("spec_accepted_tokens", emitted)
+                tr.event("spec_chunk", clock, cat="spec", slot=slot,
+                         drafted=drafted, accepted=emitted)
+            else:
+                for t in range(emits_h.shape[0]):
+                    for row, r in active.items():
+                        if emits_h[t, row]:
+                            tok = [int(v) for v in toks_h[t, row]] if K > 1 \
+                                else int(toks_h[t, row])
+                            r.out.append(tok)
+                            emitted += 1
+                            if r.first_token_at is None:
+                                r.first_token_at = clock - T + t + 1
+                            if r.on_token is not None:
+                                r.on_token(r, tok)
             m.count("tokens_emitted", emitted)
             freed_rows: List[int] = []
             for row in list(active):
-                row_pos[row] += T
+                # mirror the device pos: baseline rows advance one per scan
+                # step; speculative rows advance by their accepted count
+                row_pos[row] += int(emits_h[:, row, :].sum()) if spec else T
                 if not live_h[row]:
                     r = active.pop(row)
                     freed_rows.append(row)

@@ -58,8 +58,10 @@ SCHEMA = "repro.telemetry/v1"
 #   chaos   — step_retry and other injected-fault absorptions
 #   window  — fleet window stages: dispatch / tick / failover / migrate /
 #             scale_up / scale_down / replan
+#   spec    — speculative decode rounds: spec_chunk (drafted/accepted per
+#             dispatch window)
 CATEGORIES = ("request", "phase", "pool", "degrade", "chaos", "window",
-              "event")
+              "event", "spec")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,6 +258,9 @@ COUNTER_KEYS: Tuple[str, ...] = (
     "step_retries",
     # fleet control plane
     "migrations", "failovers", "scale_ups", "scale_downs", "replans",
+    # speculative decode (ISSUE 9): acceptance rate =
+    # spec_accepted_tokens / spec_drafted_tokens
+    "spec_rounds", "spec_drafted_tokens", "spec_accepted_tokens",
 )
 GAUGE_KEYS: Tuple[str, ...] = (
     "clock", "queue_pending", "queue_waiting", "active_rows",

@@ -22,9 +22,11 @@ PAGE_SIZE = 4
 def _random_ops(pager, rng, steps=120, vocab=6, first_rid=0):
     """Drive one seeded op sequence; audit after EVERY mutation."""
     live = {}                     # rid -> prompt tokens (for registration)
+    forks = {}                    # rid -> fork child rid (at most one each)
     next_rid = first_rid
     for _ in range(steps):
-        op = rng.choice(["admit", "extend", "free", "cow", "grow_check"])
+        op = rng.choice(["admit", "extend", "free", "cow", "grow_check",
+                         "fork", "commit", "abort"])
         if op == "admit":
             rid = next_rid
             next_rid += 1
@@ -54,6 +56,8 @@ def _random_ops(pager, rng, steps=120, vocab=6, first_rid=0):
                                          rng.integers(0, vocab, n)]
         elif op == "free" and live:
             rid = int(rng.choice(list(live)))
+            if rid in forks:                 # eviction aborts the branch
+                pager.abort_fork(forks.pop(rid))
             pager.free(rid)
             del live[rid]
         elif op == "cow" and live:
@@ -64,8 +68,34 @@ def _random_ops(pager, rng, steps=120, vocab=6, first_rid=0):
         elif op == "grow_check":
             # audit-only step: exercised below via audit; keep op mix stable
             pass
+        elif op == "fork" and live:
+            # speculative branch: fork ids live at -2 - rid (the scheduler's
+            # spelling — rids are >= 0 and -1 is its empty-row sentinel)
+            cands = [r for r in live if r not in forks]
+            if cands:
+                rid = int(rng.choice(cands))
+                child = -2 - rid
+                got = pager.fork_chain(rid, child,
+                                       cow_tail=bool(rng.integers(0, 2)))
+                if got is None:              # pool pressure: nothing changed
+                    assert not pager.pages_of(child)
+                else:
+                    forks[rid] = child
+                    # draft appends land in the fork's tail headroom
+                    want = len(live[rid]) + int(rng.integers(1, PAGE_SIZE))
+                    if pager.ensure(child, want):
+                        pager.set_length(child, want)
+        elif op == "commit" and forks:
+            rid = int(rng.choice(list(forks)))
+            pager.commit_fork(rid, forks.pop(rid))
+        elif op == "abort" and forks:
+            rid = int(rng.choice(list(forks)))
+            pager.abort_fork(forks.pop(rid))
         violations = audit_pool(pager)
         assert not violations, (violations, op)
+    for rid in list(forks):
+        pager.abort_fork(forks.pop(rid))
+        assert not audit_pool(pager)
     for rid in list(live):
         pager.free(rid)
         assert not audit_pool(pager)

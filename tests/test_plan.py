@@ -187,7 +187,7 @@ def test_explain_names_every_bound():
         plan = plan_lib.snapshot_plan(arch)
         names = [d.name for d in plan.decisions]
         assert names == ["capacity", "matmul", "mlp", "attention",
-                         "kv_quant", "degrade", "prefill"], names
+                         "kv_quant", "spec", "degrade", "prefill"], names
         report = plan.explain()
         for d in plan.decisions:
             assert d.bound in plan_lib.BOUNDS

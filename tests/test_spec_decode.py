@@ -1,0 +1,343 @@
+"""Speculative decoding on CoW pages (ISSUE 9): the flattened k-position
+verifier vs sequential ``serve_step`` (bit-exact, across page-boundary
+offsets, GQA throughout, int8 fallback), the page-chain fork primitives
+(fork/commit/abort refcount ceremony), the plan's ``spec`` roofline
+Decision, and end-to-end scheduler equivalence — greedy token streams
+bit-identical to the non-speculative path under staggered arrivals, EOS,
+page-pressure preemption, and the recompute-resume fast path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import plan as plan_lib
+from repro.models import decoding, transformer as tfm
+from repro.serve.guard import assert_pool_clean, audit_pool
+from repro.serve.paging import PageAllocator
+from repro.serve.scheduler import ContinuousBatchingScheduler, StreamRequest
+
+ARCH = "qwen2.5-3b-reduced"          # GQA: 4 query heads over 2 KV heads
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_config(ARCH)
+    return cfg, tfm.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _prefilled_row(cfg, params, prompt, cache_len=64, ps=8, kv_quant="fp"):
+    """One paged row holding ``prompt``: (cache, block_table (1, MP))."""
+    MP = cache_len // ps
+    pager = PageAllocator(MP, ps)
+    assert pager.ensure(0, cache_len)        # whole chain: headroom for k
+    bt = jnp.asarray(pager.block_table_rows([0], MP))
+    cache = decoding.init_paged_cache(cfg, 1, cache_len, MP, ps, kv_quant)
+    pp = decoding.PagedPrefill(cache=cache, block_table_rows=bt,
+                               slots=jnp.asarray([0]),
+                               write_start=jnp.asarray([0]))
+    S = 1 << (len(prompt) - 1).bit_length()
+    toks = jnp.asarray([prompt + [0] * (S - len(prompt))], jnp.int32)
+    logits, cache = decoding.prefill_batched(
+        params, toks, jnp.asarray([len(prompt)]), cfg, cache_len, paged=pp)
+    return cache, bt, logits[0, len(prompt) - 1]
+
+
+# ---------------------------------------------- flattened verify vs serial
+@pytest.mark.parametrize("plen", [3, 6, 8, 13])
+def test_verify_matches_sequential_fp(cfg_params, plen):
+    """verify_step's one-dispatch k-position logits equal k sequential
+    serve_step calls bit-exactly (fp pools), with the candidate window
+    landing inside a page, straddling a boundary, and starting page-aligned
+    (ps=8: windows [3,7), [6,10), [8,12), [13,17))."""
+    cfg, params = cfg_params
+    k = 4
+    rng = np.random.default_rng(plen)
+    prompt = [int(t) for t in rng.integers(0, 500, plen)]
+    cand = [int(t) for t in rng.integers(0, 500, k)]
+    cache, bt, _ = _prefilled_row(cfg, params, prompt)
+
+    seq = []
+    c = cache
+    for i, t in enumerate(cand):
+        lg, c = decoding.serve_step(params, c, jnp.asarray([[t]], jnp.int32),
+                                    jnp.asarray([plen + i], jnp.int32), cfg,
+                                    block_table=bt)
+        seq.append(np.asarray(lg[0, 0]))
+
+    flat, _ = decoding.verify_step(params, cache,
+                                   jnp.asarray([cand], jnp.int32),
+                                   jnp.asarray([plen], jnp.int32), cfg,
+                                   block_table=bt)
+    for i in range(k):
+        np.testing.assert_array_equal(np.asarray(flat[0, i]), seq[i])
+
+
+def test_verify_dead_row_writes_drop(cfg_params):
+    """A flattened batch may carry dead rows (all -1 block table, the
+    scheduler's empty-slot sentinel): their appends must drop and never
+    perturb a live row's pages — the regression behind the fork-id
+    collision fix (fork children live at -2 - rid, never -1)."""
+    cfg, params = cfg_params
+    prompt, cand = [5, 6, 7], [11, 12, 13, 14]
+    cache, bt, _ = _prefilled_row(cfg, params, prompt, cache_len=32)
+    # rebuild as a 2-row pool: row 1 dead
+    MP = 32 // 8
+    pager = PageAllocator(2 * MP, 8)
+    assert pager.ensure(0, 32)
+    bt2 = jnp.asarray(pager.block_table_rows([0, -1], MP))
+    cache2 = decoding.init_paged_cache(cfg, 2, 32, 2 * MP, 8)
+    pp = decoding.PagedPrefill(cache=cache2, block_table_rows=bt2[:1],
+                               slots=jnp.asarray([0]),
+                               write_start=jnp.asarray([0]))
+    lg, cache2 = decoding.prefill_batched(
+        params, jnp.asarray([prompt + [0]], jnp.int32), jnp.asarray([3]),
+        cfg, 32, paged=pp)
+
+    ref, _ = decoding.verify_step(params, cache, jnp.asarray([cand]),
+                                  jnp.asarray([3]), cfg, block_table=bt)
+    got, _ = decoding.verify_step(params, cache2,
+                                  jnp.asarray([cand, cand]),
+                                  jnp.asarray([3, 0]), cfg, block_table=bt2)
+    np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(got[0]))
+
+
+def test_verify_int8_fallback_matches_sequential(cfg_params):
+    """Quantized pools take the sequential k-loop fallback (per-page amax
+    scales make append order observable): logits and pools must equal k
+    explicit serve_step calls exactly."""
+    cfg, params = cfg_params
+    prompt, cand = [9, 8, 7, 6, 5], [3, 4, 5, 6]
+    cache, bt, _ = _prefilled_row(cfg, params, prompt, kv_quant="int8")
+
+    seq, c = [], cache
+    for i, t in enumerate(cand):
+        lg, c = decoding.serve_step(params, c, jnp.asarray([[t]], jnp.int32),
+                                    jnp.asarray([5 + i], jnp.int32), cfg,
+                                    block_table=bt)
+        seq.append(np.asarray(lg[0, 0]))
+    flat, cf = decoding.verify_step(params, cache, jnp.asarray([cand]),
+                                    jnp.asarray([5], jnp.int32), cfg,
+                                    block_table=bt)
+    for i in range(4):
+        np.testing.assert_array_equal(np.asarray(flat[0, i]), seq[i])
+    for a, b in zip(jax.tree.leaves(c), jax.tree.leaves(cf)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_verify_rejects_non_global_configs():
+    cfg = get_config("gemma2-2b-reduced")     # local+global interleave
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    cache = decoding.init_paged_cache(cfg, 1, 32, 4, 8)
+    with pytest.raises(AssertionError, match="all-global"):
+        decoding.verify_step(params, cache, jnp.asarray([[1, 2]]),
+                             jnp.asarray([0]), cfg,
+                             block_table=jnp.zeros((1, 4), jnp.int32))
+
+
+# ------------------------------------------------------- fork primitives
+def test_fork_commit_abort_refcounts():
+    """fork_chain is pure refcount ceremony (zero copies), commit adopts the
+    child table and releases the pre-fork chain, abort is exactly one
+    refcount drop — audit-clean at every step."""
+    pager = PageAllocator(8, 4)
+    assert pager.ensure(0, 10)                # 3 pages
+    pager.set_length(0, 10)
+    pages = list(pager.snapshot()["tables"][0])
+
+    assert pager.fork_chain(0, -2) == ()      # no cow_tail requested
+    assert all(pager.refcount(p) == 2 for p in pages)
+    assert not audit_pool(pager)
+
+    assert pager.abort_fork(-2) == 0          # shared pages survive
+    assert all(pager.refcount(p) == 1 for p in pages)
+    assert not audit_pool(pager)
+
+    pager.fork_chain(0, -2)
+    assert pager.ensure(-2, 14)               # branch grows a fresh tail page
+    pager.set_length(-2, 14)
+    assert pager.pages_of(-2) == 4
+    pager.commit_fork(0, -2)                  # parent adopts the longer chain
+    assert pager.pages_of(0) == 4
+    assert pager.snapshot()["lengths"][0] == 14
+    assert all(pager.refcount(p) == 1 for p in pages)
+    assert not audit_pool(pager)
+
+    pager.free(0)
+    assert_pool_clean(pager, drained=True)
+
+
+def test_fork_cow_tail_materializes_private_page():
+    """cow_tail=True (sibling forks): a partial tail page gets a private
+    copy so branch appends can't collide in the shared tail."""
+    pager = PageAllocator(8, 4)
+    assert pager.ensure(0, 6)                 # page 2 half full
+    pager.set_length(0, 6)
+    got = pager.fork_chain(0, -2, cow_tail=True)
+    assert got and len(got) == 2              # (src, dst) device copy pair
+    t0 = pager.snapshot()["tables"][0]
+    t1 = pager.snapshot()["tables"][-2]
+    assert t0[0] == t1[0] and t0[1] != t1[1]
+    assert not audit_pool(pager)
+    pager.abort_fork(-2)
+    pager.free(0)
+    assert_pool_clean(pager, drained=True)
+
+
+def test_fork_chain_pressure_returns_none():
+    pager = PageAllocator(2, 4)
+    assert pager.ensure(0, 6)                 # both pages held, tail partial
+    pager.set_length(0, 6)
+    assert pager.fork_chain(0, -2, cow_tail=True) is None
+    assert pager.pages_of(-2) == 0            # nothing changed
+    assert not audit_pool(pager)
+
+
+# ------------------------------------------------------ plan spec decision
+def test_plan_spec_rule_batch1_enables():
+    cfg = get_config("qwen2.5-3b")            # full-size: weight-stream bound
+    p = plan_lib.plan_serve(cfg, hbm_budget_bytes=8 << 30, expected_batch=1,
+                            expected_len_dist={"mean": 512, "max": 2048},
+                            attn_path="paged")
+    assert p.spec_k >= 2
+    d = [d for d in p.decisions if d.name == "spec"][0]
+    assert d.bound == "HBM"
+    assert d.numbers["est_speedup"] >= plan_lib.SPEC_MIN_GAIN
+    assert "weight" in d.why
+    assert f"k={p.spec_k}" in p.explain()
+
+    batched = plan_lib.plan_serve(cfg, hbm_budget_bytes=8 << 30,
+                                  expected_batch=4,
+                                  expected_len_dist={"mean": 512,
+                                                     "max": 2048},
+                                  attn_path="paged")
+    assert batched.spec_k == 0                # rows amortize the weights
+
+
+def test_plan_spec_pin_validation():
+    cfg = get_config(ARCH)
+    kw = dict(hbm_budget_bytes=1 << 30, expected_batch=2,
+              expected_len_dist={"mean": 24, "max": 64}, page_size=8,
+              attn_path="paged")
+    assert plan_lib.plan_serve(cfg, **kw, spec_k=4).spec_k == 4
+    with pytest.raises(ValueError, match="spec_k must be 0 or in"):
+        plan_lib.plan_serve(cfg, **kw, spec_k=1)
+    with pytest.raises(ValueError, match="all-global"):
+        plan_lib.plan_serve(get_config("gemma2-2b-reduced"), **kw, spec_k=4)
+    # legacy scheduler shim never speculates
+    assert plan_lib.plan_for_scheduler(cfg, rows=2, cache_len=64,
+                                       page_size=8).spec_k == 0
+
+
+def test_replan_keeps_spec_pinned():
+    """A feedback-driven hot-swap can never flip the spec dispatch."""
+    cfg = get_config(ARCH)
+    base = plan_lib.plan_serve(cfg, hbm_budget_bytes=1 << 30,
+                               expected_batch=2,
+                               expected_len_dist={"mean": 24, "max": 64},
+                               page_size=8, attn_path="paged", spec_k=4)
+    swapped = plan_lib.replan_from_lengths(cfg, base, [20, 30, 40])
+    assert swapped.spec_k == base.spec_k == 4
+
+
+# --------------------------------------------- end-to-end scheduler exact
+def _mkplan(cfg, k, batch=2, **kw):
+    return plan_lib.plan_serve(
+        cfg, hbm_budget_bytes=1 << 30, expected_batch=batch,
+        expected_len_dist={"mean": 24, "max": 64}, page_size=kw.pop("ps", 8),
+        attn_path="paged", spec_k=k, **kw)
+
+
+def _run_plan(cfg, params, plan, reqs, sync_every=4, eos_id=-1, seed=7):
+    s = ContinuousBatchingScheduler(cfg, params, plan,
+                                    sync_every=sync_every, eos_id=eos_id)
+    done = s.run([StreamRequest(i, list(p), m, arrival=t)
+                  for i, (p, m, t) in enumerate(reqs)],
+                 rng=jax.random.PRNGKey(seed))
+    return {r.rid: r.out for r in done}, s
+
+
+@pytest.mark.parametrize("sync_every", [1, 4])
+def test_spec_scheduler_bit_exact_staggered(cfg_params, sync_every):
+    """Greedy token streams bit-identical to the non-speculative scheduler
+    under staggered arrivals (dead rows in early chunks — the fork-id
+    regression scenario) at chunk lengths 1 and 4."""
+    cfg, params = cfg_params
+    reqs = [([5, 6, 7], 9, 0.0), ([3, 4], 3, 2.0), ([9, 9, 9, 2], 7, 5.0)]
+    base, _ = _run_plan(cfg, params, _mkplan(cfg, 0), reqs, sync_every)
+    spec, s = _run_plan(cfg, params, _mkplan(cfg, 4), reqs, sync_every)
+    assert base == spec
+    st = s.phase_stats
+    assert st["spec_rounds"] > 0
+    assert 0 < st["spec_accepted_tokens"] <= st["spec_drafted_tokens"]
+    assert st["pages"]["pages_free"] == st["pages"]["pages_total"]
+
+
+def test_spec_scheduler_bit_exact_with_eos(cfg_params):
+    """An EOS inside an accepted draft run must terminate the stream at the
+    same token the sequential path does (trailing accepts are discarded)."""
+    cfg, params = cfg_params
+    reqs = [([5, 6, 7], 12, 0.0), ([3, 4], 12, 0.0)]
+    # pick the baseline's own first output token as EOS: guaranteed to fire
+    base0, _ = _run_plan(cfg, params, _mkplan(cfg, 0), reqs)
+    eos = base0[0][1]
+    base, _ = _run_plan(cfg, params, _mkplan(cfg, 0), reqs, eos_id=eos)
+    spec, _ = _run_plan(cfg, params, _mkplan(cfg, 4), reqs, eos_id=eos)
+    assert base == spec
+    assert base[0][-1] == eos                 # EOS token itself is emitted
+
+
+def test_spec_with_preemption_and_fast_resume(cfg_params):
+    """Page pressure under speculation: preemption/recompute and the
+    adopted-suffix resume fast path both preserve the exact streams."""
+    cfg, params = cfg_params
+    pre = [7, 3, 9, 4, 2, 8, 6, 1]            # shared prefix, 2 pages at ps=4
+    reqs = [(pre + [11, 12], 24, 0.0), (pre + [13, 14], 10, 1.0),
+            (pre + [15, 16], 10, 2.0)]
+    ref, _ = _run_plan(cfg, params,
+                       _mkplan(cfg, 0, batch=3, ps=4), reqs, sync_every=2)
+    for k in (0, 2):
+        plan = dataclasses.replace(_mkplan(cfg, k, batch=3, ps=4),
+                                   num_pages=9)
+        got, s = _run_plan(cfg, params, plan, reqs, sync_every=2)
+        assert got == ref, f"spec_k={k} diverged under page pressure"
+        assert s.phase_stats["preemptions"] > 0
+    assert s.spec_on                          # the k=2 run really speculated
+    assert s.phase_stats["spec_rounds"] > 0
+    assert s.phase_stats["resume_fast_prompts"] > 0
+    assert s.phase_stats["resume_fast_tokens"] > 0
+
+
+def test_spec_randomized_equivalence(cfg_params):
+    """Seeded sweep over request shapes, EOS ids, chunk lengths and draft
+    depths: every speculative stream equals its sequential twin."""
+    cfg, params = cfg_params
+    rng = np.random.default_rng(0)
+    for trial in range(3):
+        n = int(rng.integers(2, 5))
+        reqs = [([int(t) for t in rng.integers(0, 500, rng.integers(1, 9))],
+                 int(rng.integers(1, 12)), float(rng.integers(0, 8)))
+                for _ in range(n)]
+        eos = int(rng.integers(-1, 600))
+        T = int(rng.choice([1, 2, 4]))
+        k = int(rng.choice([2, 3, 8]))
+        base, _ = _run_plan(cfg, params, _mkplan(cfg, 0), reqs, T, eos,
+                            seed=trial)
+        spec, _ = _run_plan(cfg, params, _mkplan(cfg, k), reqs, T, eos,
+                            seed=trial)
+        assert base == spec, (trial, n, eos, T, k)
+
+
+def test_spec_disabled_on_temperature(cfg_params):
+    """Sampling (temperature > 0) gates speculation off at runtime: the
+    draft/verify identity only holds for greedy argmax."""
+    cfg, params = cfg_params
+    plan = _mkplan(cfg, 4)
+    s = ContinuousBatchingScheduler(cfg, params, plan, sync_every=4,
+                                    eos_id=-1, temperature=0.8)
+    assert not s.spec_on
+    s2 = ContinuousBatchingScheduler(cfg, params, plan, sync_every=4,
+                                     eos_id=-1)
+    assert s2.spec_on

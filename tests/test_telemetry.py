@@ -162,7 +162,7 @@ def test_metric_key_set_is_frozen():
     m = telemetry.MetricsRegistry()
     snap = m.snapshot()
     assert snap.key_set() == telemetry.METRIC_KEYS
-    assert len(telemetry.COUNTER_KEYS) == 26
+    assert len(telemetry.COUNTER_KEYS) == 29
     assert len(telemetry.GAUGE_KEYS) == 9
     assert len(telemetry.HISTOGRAM_KEYS) == 5
     assert telemetry.TENANT_COUNTER_KEYS == ("ok_requests", "ok_tokens")
