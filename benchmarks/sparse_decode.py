@@ -1059,6 +1059,70 @@ def spec_decode_benchmark(arch: str = "qwen2.5-3b-reduced", spec_k: int = 4,
     return out
 
 
+def shard_proxy_benchmark(cases=(("gemma2-2b-reduced", "tp=2"),
+                                 ("mixtral-8x7b-reduced", "ep=4")),
+                          max_new: int = 10, seed: int = 7) -> Dict:
+    """Mesh-sharded stream() vs single-device (ISSUE 10): per-token
+    bit-identity (gated: sharded-outputs-identical), per-device KV pool
+    bytes vs the 1/tp ideal (gated: sharded-pool-bytes-per-device), and the
+    analytic collective traffic the scheduler counted. Logical mesh — the
+    shard-explicit program is the same math on any host, which is exactly
+    the property the gate pins."""
+    import jax
+    from repro.models import transformer as tfm
+    from repro.serve.facade import LLM
+
+    out: Dict = {"max_new": max_new, "cases": {}}
+    kw = dict(hbm_budget_bytes=1 << 30, expected_batch=3,
+              expected_len_dist={"mean": 10, "max": 64}, page_size=4,
+              sync_every=4)
+    for arch, mesh in cases:
+        cfg = get_config(arch)
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        reqs = [([5, 7, 11], max_new), ([3, 2, 9, 4], max_new - 2)]
+        single = plan_lib.plan_serve(cfg, **kw)
+        sharded = plan_lib.plan_serve(cfg, mesh=mesh, **kw)
+        o1 = [r.out for r in LLM(cfg, params, single)
+              .stream(reqs, rng=jax.random.PRNGKey(seed))]
+        llm = LLM(cfg, params, sharded)
+        o2 = [r.out for r in llm.stream(reqs, rng=jax.random.PRNGKey(seed))]
+        rep = llm.sharding_report()
+        snap = llm.telemetry().metrics.snapshot()
+        out["cases"][f"{arch}@{mesh}"] = {
+            "arch": arch, "mesh": mesh, "tp": sharded.tp, "ep": sharded.ep,
+            "devices": sharded.mesh_devices, "paged": sharded.paged,
+            "outputs_identical": o1 == o2,
+            "tokens": sum(len(t) for t in o2),
+            "kv_bytes_single_device": rep["kv_bytes_single_device"],
+            "kv_bytes_per_device": rep["kv_bytes_per_device"],
+            # page-rounding slack for the pool gate: one page frame's
+            # local bytes (the per-device pool is whole frames)
+            "page_frame_bytes_per_device": (
+                rep["kv_bytes_per_device"] // max(sharded.num_pages, 1)
+                if sharded.paged else 0),
+            "lockstep_divergence": rep.get("lockstep_divergence", 0),
+            "collective_ops": snap.counters["collective_ops"],
+            "collective_allgather_bytes":
+                snap.counters["collective_allgather_bytes"],
+        }
+    return out
+
+
+def _print_shard(sp: Dict) -> None:
+    print("=== Mesh-sharded serving vs single-device ===")
+    for name, c in sp["cases"].items():
+        print(f"  {name}: tp={c['tp']} ep={c['ep']} "
+              f"bit-identical: {c['outputs_identical']} "
+              f"({c['tokens']} tokens), lockstep divergence "
+              f"{c['lockstep_divergence']}")
+        if c["paged"]:
+            print(f"           pool/device {c['kv_bytes_per_device']:,} B "
+                  f"vs single-device {c['kv_bytes_single_device']:,} B "
+                  f"(1/{c['tp']} heads)")
+        print(f"           collectives: {c['collective_ops']} all-gathers, "
+              f"{c['collective_allgather_bytes']:,} B")
+
+
 def _print_spec(spd: Dict) -> None:
     print(f"=== Speculative decode on CoW pages ({spd['arch']}, "
           f"k={spd['spec_k']}, {spd['max_new']} new tokens) ===")
@@ -1197,12 +1261,22 @@ def main(smoke: bool = False, engine: bool = True, repeats: int = None,
         # against scripts/golden_plans.json (silent dispatch drift fails CI)
         "plans": {arch: plan_lib.snapshot_plan(arch).as_dict()
                   for arch in plan_lib.SNAPSHOT_CONFIGS},
+        # mesh-sharded plans (ISSUE 10) at the canonical 2 mesh shapes —
+        # perf_guard's `sharded-plan-snapshot-stable` gate compares these
+        # against golden_plans.json["__sharded__"]
+        "sharded_plans": {
+            arch: {mesh: plan_lib.snapshot_sharded_plan(arch, mesh)
+                   .as_dict()
+                   for mesh in plan_lib.SHARDED_SNAPSHOT_MESHES}
+            for arch in plan_lib.SHARDED_SNAPSHOT_CONFIGS},
     }
     if engine:
         # seeded + dispatch-clock metrics: the spec-decode gates are
         # wall-clock-free like every other scheduler sweep
         res["spec_proxy"] = spec_decode_benchmark(
             repeats=2 if smoke else 3)
+        # seeded, wall-clock-free: the sharded bit-identity and pool gates
+        res["shard_proxy"] = shard_proxy_benchmark()
         res["decode"] = decode_benchmark(
             batches=(1,) if smoke else (1, 4, 8),
             max_new=8,
@@ -1296,6 +1370,9 @@ def main(smoke: bool = False, engine: bool = True, repeats: int = None,
 
     if "spec_proxy" in res:
         _print_spec(res["spec_proxy"])
+
+    if "shard_proxy" in res:
+        _print_shard(res["shard_proxy"])
 
     if "shared_prefix" in res:
         _print_shared_prefix(res["shared_prefix"])

@@ -27,11 +27,20 @@ virtual decode step as 1 ms. The trace structure is deterministic (wall
 time rides along as annotations), and the end-of-run drift report diffs
 measured occupancy/length/route proxies against the plan's decisions.
 
+``--mesh tp=2,ep=4`` serves mesh-sharded (ISSUE 10): attention KV heads
+shard over ``tp`` per-device page pools and MoE experts over ``ep``, the
+plan's explain() gains the mesh/NoC-mode decisions, and the report prints
+per-device pool bytes and collective traffic. Token streams stay
+bit-identical to the single-device run.
+
     PYTHONPATH=src python examples/serve_lm.py --requests 12 --rows 4
     PYTHONPATH=src python examples/serve_lm.py --mean-gap 1 --ttl 40
     PYTHONPATH=src python examples/serve_lm.py --replicas 3 \\
         --kill-replica-at 8
     PYTHONPATH=src python examples/serve_lm.py --trace trace.json
+    PYTHONPATH=src python examples/serve_lm.py --mesh tp=2
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b \\
+        --mesh tp=2,ep=4
 """
 import argparse
 import json
@@ -78,6 +87,12 @@ def main():
                     help="chaos-kill replica 0 at this virtual step "
                          "(requires --replicas > 1); stranded requests "
                          "migrate by recompute")
+    ap.add_argument("--mesh", default=None, metavar="tp=2,ep=4",
+                    help="serve mesh-sharded (ISSUE 10): tp shards "
+                         "attention KV heads over per-device page pools, "
+                         "ep shards the MoE expert axis (needs an MoE arch "
+                         "e.g. --arch mixtral-8x7b). Token streams stay "
+                         "bit-identical to single-device")
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="write the step-clock trace as Chrome trace_event "
                          "JSON (load at https://ui.perfetto.dev)")
@@ -101,7 +116,8 @@ def main():
         num_pages=max(args.rows * dataflow.pages_for(
             args.cache_len, args.page_size) // 2, 1),
         kv_quant=args.kv_quant,
-        spec_k=args.spec_k)
+        spec_k=args.spec_k,
+        mesh=args.mesh)
     print(plan.explain())
     print()
 
@@ -184,6 +200,20 @@ def main():
         print(f"sharing: {st['shared_tokens_admitted']} prompt tokens "
               f"admitted from adopted pages, {st['cow_copies']} CoW copies, "
               f"peak concurrency {st['peak_live_rows']} rows")
+
+    if plan.sharded:
+        rep = llm.sharding_report()
+        snap = llm.telemetry().metrics.snapshot()
+        print(f"mesh: {llm.mesh.describe()}")
+        if rep.get("kv_bytes_per_device"):
+            print(f"  pool/device {rep['kv_bytes_per_device']:,} B "
+                  f"(single-device {rep['kv_bytes_single_device']:,} B, "
+                  f"1/{plan.tp} KV heads each), lockstep divergence "
+                  f"{rep.get('lockstep_divergence', 0)}")
+        print(f"  collectives: {snap.counters['collective_ops']:.0f} "
+              f"all-gathers, "
+              f"{snap.counters['collective_allgather_bytes']:,.0f} B "
+              f"({snap.counters['collective_allgather_bytes'] / max(new_toks, 1):,.0f} B/token)")
 
     tel = llm.telemetry()
     if tel.last_drift is not None:

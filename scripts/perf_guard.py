@@ -53,6 +53,21 @@ Checks:
      speedup; wall seconds are reported but never gated), and the greedy
      token streams are bit-identical to the sequential baseline at every
      benchmarked batch size
+ 13. mesh-sharded serving (ISSUE 10): sharded stream() (tp attention
+     shards, ep expert shards) emits token streams bit-identical to
+     single-device, the per-device KV pool holds <= 1/tp of the
+     single-device pool plus one page frame of rounding slack, and the
+     sharded ServePlans for mixtral-8x7b / llama4-maverick-400b-a17b at
+     both canonical mesh shapes match golden_plans.json["__sharded__"]
+     exactly. Regenerate the golden (deliberately) with:
+        PYTHONPATH=src python -c "import json; from repro.core import plan;
+        g = {a: plan.snapshot_plan(a).as_dict() for a in
+             plan.SNAPSHOT_CONFIGS};
+        g['__sharded__'] = {a: {m: plan.snapshot_sharded_plan(a, m)
+            .as_dict() for m in plan.SHARDED_SNAPSHOT_MESHES}
+            for a in plan.SHARDED_SNAPSHOT_CONFIGS};
+        json.dump(g, open('scripts/golden_plans.json','w'), indent=2,
+        sort_keys=True)"
 
     PYTHONPATH=src python scripts/perf_guard.py [BENCH_sparse_decode.json]
 """
@@ -251,8 +266,10 @@ def main(path: str = "BENCH_sparse_decode.json") -> int:
         plans = json.loads(json.dumps(plans))
         drifted = []
         # both directions: a bench plan without a golden counterpart (new
-        # snapshot config, golden not regenerated) is drift too
-        for arch in sorted(set(golden) | set(plans)):
+        # snapshot config, golden not regenerated) is drift too. "__"-keys
+        # hold auxiliary snapshot families (e.g. __sharded__) gated below.
+        for arch in sorted(k for k in set(golden) | set(plans)
+                           if not k.startswith("__")):
             want, got = golden.get(arch), plans.get(arch)
             if got != want:
                 if want is None or got is None:
@@ -268,6 +285,54 @@ def main(path: str = "BENCH_sparse_decode.json") -> int:
               if not drifted else f"drifted: {'; '.join(drifted)}")
     else:
         print("  [--] plans section absent; plan-snapshot gate skipped")
+
+    splans = data.get("sharded_plans", {})
+    if splans:
+        golden_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                   "golden_plans.json")
+        golden_sharded = json.load(open(golden_path)).get("__sharded__", {})
+        splans = json.loads(json.dumps(splans))
+        drifted = []
+        for arch in sorted(set(golden_sharded) | set(splans)):
+            want = golden_sharded.get(arch, {})
+            got = splans.get(arch, {})
+            for mesh in sorted(set(want) | set(got)):
+                if got.get(mesh) != want.get(mesh):
+                    drifted.append(f"{arch}@{mesh}")
+        check("sharded-plan-snapshot-stable", not drifted,
+              f"{sum(len(v) for v in golden_sharded.values())} sharded "
+              "plans match golden __sharded__"
+              if not drifted else f"drifted: {'; '.join(drifted)}")
+    else:
+        print("  [--] sharded_plans section absent; sharded-snapshot "
+              "gate skipped")
+
+    shp = data.get("shard_proxy", {})
+    if shp:
+        cases = shp.get("cases", {})
+        check("sharded-outputs-identical",
+              bool(cases) and all(c.get("outputs_identical") is True
+                                  for c in cases.values()),
+              "sharded stream() vs single-device: " + ", ".join(
+                  f"{name}: {c.get('outputs_identical')}"
+                  for name, c in sorted(cases.items())))
+        # per-device KV pool holds <= 1/tp of the single-device pool plus
+        # one page frame of rounding slack (whole local frames only)
+        pool_ok, detail = True, []
+        for name, c in sorted(cases.items()):
+            if not c.get("paged") or c.get("tp", 1) <= 1:
+                continue
+            bound = (c["kv_bytes_single_device"] / c["tp"]
+                     + c["page_frame_bytes_per_device"])
+            ok = c["kv_bytes_per_device"] <= bound
+            pool_ok &= ok
+            detail.append(f"{name}: {c['kv_bytes_per_device']:,} B <= "
+                          f"{bound:,.0f} B ({'ok' if ok else 'OVER'})")
+        check("sharded-pool-bytes-per-device", pool_ok,
+              "; ".join(detail) if detail
+              else "no paged tp case benchmarked")
+    else:
+        print("  [--] shard_proxy section absent; sharded gates skipped")
 
     spd = data.get("spec_proxy", {})
     if spd:

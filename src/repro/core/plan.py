@@ -46,11 +46,13 @@ import dataclasses
 import json
 from typing import Dict, Optional, Tuple
 
-from repro.core import dataflow, eyexam
+from repro.core import dataflow, eyexam, hmmesh
 
 # Bounds a decision may cite — the three-term serving roofline (Eyexam's
-# compute / memory split plus the occupancy axis paging trades on).
-BOUNDS = ("compute", "HBM", "occupancy")
+# compute / memory split plus the occupancy axis paging trades on), plus
+# the collective axis the mesh resolution stage (ISSUE 10) trades against
+# HBM: bytes crossing the device mesh per emitted token.
+BOUNDS = ("compute", "HBM", "occupancy", "collective")
 
 # Analytic-model constants shared with benchmarks/sparse_decode.py (moved
 # here so the plan's MLP rationale and mlp_bound_analysis are the same
@@ -65,6 +67,13 @@ SNAPSHOT_BUDGET_BYTES = 2 << 30          # 2 GiB
 SNAPSHOT_BATCH = 8
 SNAPSHOT_LEN_DIST = {"mean": 1024, "max": 2048}
 SNAPSHOT_SPARSITY = {"sparsity": 0.75, "packing_efficiency": 0.93}
+
+# Canonical sharded-snapshot inputs (ISSUE 10): the MoE seed configs at two
+# mesh shapes each, recorded under the "__sharded__" key of
+# scripts/golden_plans.json and gated by perf_guard
+# `sharded-plan-snapshot-stable`.
+SHARDED_SNAPSHOT_CONFIGS = ("mixtral-8x7b", "llama4-maverick-400b-a17b")
+SHARDED_SNAPSHOT_MESHES = ("tp=2,ep=4", "tp=4,ep=2")
 
 
 # ---------------------------------------------------------------- decisions
@@ -200,6 +209,13 @@ class ServePlan:
     # >0 only on all-global fp paged plans with one codebook, where the
     # flattened k-position verifier is bit-exact under greedy sampling
     spec_k: int = 0
+    # mesh resolution (ISSUE 10): tensor-parallel degree (KV heads sliced
+    # over tp, weights broadcast, head contexts all-gathered) and
+    # expert-parallel degree (MoE expert axis sliced over ep). 1/1 = the
+    # single-device plan; the sharded page pool holds num_pages pages per
+    # device, each carrying only the local 1/tp KV-head slice.
+    tp: int = 1
+    ep: int = 1
     # rationale records (one per decision; not part of dispatch identity)
     decisions: Tuple[Decision, ...] = ()
 
@@ -241,6 +257,16 @@ class ServePlan:
     def paged(self) -> bool:
         return self.attn_path == "paged"
 
+    @property
+    def sharded(self) -> bool:
+        """True when the mesh resolution stage chose a non-trivial mesh."""
+        return self.tp > 1 or self.ep > 1
+
+    @property
+    def mesh_devices(self) -> int:
+        """Devices the resolved mesh spans (1 for single-device plans)."""
+        return self.tp * self.ep
+
     # ------------------------------------------------------- serialization
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -268,10 +294,11 @@ class ServePlan:
         decision's measured-vs-predicted verdicts — CONFIRMED lines mark the
         decisions whose runtime evidence diverged past the threshold.
         """
+        mesh = f", mesh=tp{self.tp}xep{self.ep}" if self.sharded else ""
         lines = [
             f"ServePlan — {self.arch}  "
             f"(rows={self.rows}, cache_len={self.cache_len}, "
-            f"sync_every={self.sync_every})",
+            f"sync_every={self.sync_every}{mesh})",
         ]
         for d in self.decisions:
             lines.append(f"  {d.name:<9s}: {d.choice:<28s} [bound: {d.bound}]")
@@ -397,13 +424,45 @@ SPEC_K_CANDIDATES = (2, 3, 4, 6, 8)
 SPEC_MIN_GAIN = 1.5
 
 
+def parse_mesh(mesh) -> Tuple[int, int]:
+    """Parse a mesh request into ``(tp, ep)``.
+
+    Accepts ``None``/``""`` (no mesh → ``(1, 1)``), a ``(tp, ep)`` pair, a
+    mapping ``{"tp": 2, "ep": 4}``, or the CLI string form ``"tp=2,ep=4"``
+    (axes optional and order-free, so ``"ep=4"`` means ``tp=1, ep=4``).
+    """
+    if mesh is None or mesh == "" or mesh == {}:
+        return 1, 1
+    if isinstance(mesh, str):
+        axes = {"tp": 1, "ep": 1}
+        for part in mesh.split(","):
+            name, sep, val = part.strip().partition("=")
+            if name not in axes or not sep or not val.strip().isdigit():
+                raise ValueError(
+                    f"bad mesh spec {mesh!r}: expected 'tp=N,ep=M' "
+                    f"(got segment {part.strip()!r})")
+            axes[name.strip()] = int(val)
+        tp, ep = axes["tp"], axes["ep"]
+    elif isinstance(mesh, dict):
+        unknown = sorted(set(mesh) - {"tp", "ep"})
+        if unknown:
+            raise ValueError(f"unknown mesh axes {unknown}; the serving "
+                             "mesh has axes 'tp' and 'ep'")
+        tp, ep = int(mesh.get("tp", 1)), int(mesh.get("ep", 1))
+    else:
+        tp, ep = (int(mesh[0]), int(mesh[1]))
+    if tp < 1 or ep < 1:
+        raise ValueError(f"mesh axes must be >= 1, got tp={tp} ep={ep}")
+    return tp, ep
+
+
 def _resolve(cfg, arch: str, rows: int, cache_len: int, *, mean_len: float,
              page_size: Optional[int], num_pages: Optional[int],
              attn_path: Optional[str], share_prefix: Optional[bool],
              kv_quant: Optional[str], sync_every: int,
              sparsity_stats: Optional[Dict], drain_only: bool,
              capacity_numbers: Optional[Dict] = None,
-             spec_k: Optional[int] = None) -> ServePlan:
+             spec_k: Optional[int] = None, mesh=None) -> ServePlan:
     """Shared decision resolution for plan_serve and the legacy shims.
 
     Every rule consulted here is the SAME ``core.dataflow`` rule the legacy
@@ -688,6 +747,126 @@ def _resolve(cfg, arch: str, rows: int, cache_len: int, *, mean_len: float,
          "length spread while batched prefill amortizes over the cohort"),
         {"n_tiers": len(tiers), "sync_every": sync_every}))
 
+    # ---- mesh resolution (collective): the hierarchical-mesh stage ----
+    # ISSUE 10: one frozen artifact owns the sharding choice the launch
+    # path's planner/autoshard used to make separately. Decisions appear
+    # only when a mesh is requested, so single-device plans (and their
+    # golden snapshots) are untouched. The NoC vocabulary is
+    # ``core.hmmesh.Mode``: per data type, pick the multicast pattern that
+    # matches its reuse — exactly the paper's per-data-type NoC
+    # reconfiguration, applied at cluster scale.
+    tp, ep = parse_mesh(mesh)
+    if tp > 1 or ep > 1:
+        if drain_only:
+            raise ValueError("mesh sharding serves through the streaming "
+                             "scheduler — the drain engine is single-device")
+        if recurrent and tp > 1:
+            raise ValueError(
+                f"tp={tp} shards attention KV heads; {arch} carries "
+                "recurrent (ssm/rglru) state that has no head axis — "
+                "serve it single-device or dp-replicated")
+        if tp > 1 and cfg.num_kv_heads % tp != 0:
+            raise ValueError(
+                f"tp={tp} must divide num_kv_heads={cfg.num_kv_heads} — "
+                "the paged-attention kernel reads whole local KV-head "
+                "shards (hmmesh.divisible)")
+        if ep > 1 and not getattr(cfg, "moe", False):
+            raise ValueError(
+                f"ep={ep} shards the MoE expert axis but {arch} has no "
+                "experts — use tp (or dp replicas) instead")
+        if ep > 1 and cfg.num_experts % ep != 0:
+            raise ValueError(
+                f"ep={ep} must divide num_experts={cfg.num_experts} — "
+                "expert shards are contiguous slices of the expert axis")
+        devices = tp * ep
+        n_attn = sum(1 for i in range(cfg.num_layers)
+                     if cfg.layer_kind(i) in ("global", "local", "chunked"))
+        n_moe = sum(1 for i in range(cfg.num_layers) if cfg.is_moe_layer(i))
+        # per-token collective traffic: each device produces a 1/tp slice
+        # of every layer's head context and receives the other (tp-1)/tp
+        ctx_bytes = cfg.num_heads * cfg.head_dim * 2
+        ag_bytes_tok = int(n_attn * ctx_bytes * (tp - 1) / max(tp, 1))
+        per_dev_hbm = w_bytes + c_bytes // max(tp, 1)
+        decisions.append(Decision(
+            "mesh", f"tp={tp} ep={ep} ({devices} devices)", "collective",
+            f"{cfg.num_kv_heads} KV heads partition over tp={tp} "
+            f"({cfg.num_kv_heads // tp} local heads/device)"
+            + (f"; {cfg.num_experts} experts over ep={ep} "
+               f"({cfg.num_experts // ep} local experts/device)"
+               if ep > 1 else "")
+            + f" — {ag_bytes_tok} collective B/token vs "
+            f"{per_dev_hbm} HBM B/step per device: the all-gather is "
+            "negligible next to the weight stream, so sharding converts "
+            "mesh width into cache capacity at full occupancy",
+            {"tp": tp, "ep": ep, "devices": devices,
+             "allgather_bytes_per_token": ag_bytes_tok,
+             "hbm_bytes_per_step_per_device": per_dev_hbm}))
+        decisions.append(Decision(
+            "noc_weights", hmmesh.Mode.BROADCAST.name, "HBM",
+            f"dense weights replicate to all {devices} devices "
+            f"({w_bytes} B each): decode is weight-stream bound, and a "
+            f"sharded store would re-gather {(tp - 1) * w_bytes // max(tp, 1)}"
+            " B per step onto the critical path — replication trades idle "
+            "HBM capacity for zero collective bytes per step",
+            {"mode": hmmesh.Mode.BROADCAST.value,
+             "weight_bytes_per_device": w_bytes,
+             "allgather_bytes_avoided_per_step":
+                 (tp - 1) * w_bytes // max(tp, 1)}))
+        decisions.append(Decision(
+            "noc_kv", f"{hmmesh.Mode.GROUPED_MC.name} (local shards)",
+            "HBM",
+            f"KV pages shard by head over tp={tp}: every device streams "
+            f"only its {c_bytes // max(tp, 1)} B local slice per step "
+            f"(1/{tp} of {c_bytes} B) and the paged-attention kernel never "
+            "reads a remote page — attention is per-KV-head local, so the "
+            "cache stream divides with zero collective bytes",
+            {"mode": hmmesh.Mode.GROUPED_MC.value, "tp": tp,
+             "cache_stream_bytes_per_device": c_bytes // max(tp, 1),
+             "cache_stream_bytes_single": c_bytes}))
+        decisions.append(Decision(
+            "noc_acts", "all-gather -> " + hmmesh.Mode.BROADCAST.name,
+            "collective",
+            f"head contexts are produced {hmmesh.Mode.UNICAST.name} (a "
+            f"unique 1/{tp} slice per device) and all-gathered to full "
+            f"width before the output projection: {ag_bytes_tok} B/token "
+            f"received per device across {n_attn} attention layer(s) — "
+            "the only per-step mesh traffic, and it is token-sized, not "
+            "cache-sized",
+            {"allgather_bytes_per_token": ag_bytes_tok,
+             "attn_layers": n_attn, "ctx_bytes_per_layer": ctx_bytes}))
+        if ep > 1:
+            nmats = 3 if cfg.mlp_gated else 2
+            e_bytes = cfg.num_experts * nmats * cfg.d_model * cfg.d_ff * 2 \
+                * max(n_moe, 1)
+            decisions.append(Decision(
+                "noc_experts",
+                f"{hmmesh.Mode.INTERLEAVED_MC.name} "
+                f"({cfg.num_experts // ep}/{cfg.num_experts} per device)",
+                "HBM",
+                f"expert weights shard over ep={ep}: {e_bytes // ep} B "
+                f"resident per device instead of {e_bytes} B — the expert "
+                "axis is a batch axis in the decode einsums, so each shard "
+                "computes its slice and the gate-weighted combine runs on "
+                "the gathered full-E tensor (router stays replicated)",
+                {"mode": hmmesh.Mode.INTERLEAVED_MC.value, "ep": ep,
+                 "expert_bytes_per_device": e_bytes // ep,
+                 "expert_bytes_total": e_bytes, "moe_layers": n_moe}))
+        if paged:
+            pool_b = kvcache.paged_cache_bytes(
+                cfg, rows, cache_len, np_, ps, kv_quant)
+            decisions.append(Decision(
+                "pool_shard",
+                f"{np_} pages x 1/{tp} heads per device", "occupancy",
+                f"every device runs its own PageAllocator over {np_} pages "
+                f"holding the local KV-head slice: {pool_b // max(tp, 1)} B "
+                f"pool per device (1/{tp} of the {pool_b} B single-device "
+                "pool), same block tables on every shard — the block table "
+                "IS the distributed address space, so CoW sharing and the "
+                "degrade ladder operate per device pool in lockstep",
+                {"num_pages_per_device": np_,
+                 "pool_bytes_per_device": pool_b // max(tp, 1),
+                 "pool_bytes_single": pool_b, "tp": tp}))
+
     return ServePlan(
         arch=arch, rows=rows, cache_len=cache_len, sync_every=sync_every,
         gemv_m_max=dataflow.GEMV_M_MAX, gemv_bm=dataflow.GEMV_BM,
@@ -698,7 +877,7 @@ def _resolve(cfg, arch: str, rows: int, cache_len: int, *, mean_len: float,
         num_pages=np_, share_prefix=share_prefix, kv_quant=kv_quant,
         prefill_exact=recurrent, prefill_tiers=tiers,
         degrade=tuple(ladder), num_pages_int8=np_int8,
-        spec_k=spec_choice, decisions=tuple(decisions))
+        spec_k=spec_choice, tp=tp, ep=ep, decisions=tuple(decisions))
 
 
 def plan_serve(cfg, *, hbm_budget_bytes: int, expected_batch: int,
@@ -709,7 +888,7 @@ def plan_serve(cfg, *, hbm_budget_bytes: int, expected_batch: int,
                share_prefix: Optional[bool] = None,
                kv_quant: Optional[str] = None,
                sync_every: int = 8, arch: Optional[str] = None,
-               spec_k: Optional[int] = None) -> ServePlan:
+               spec_k: Optional[int] = None, mesh=None) -> ServePlan:
     """Resolve a full ServePlan from (model cfg, serving budget).
 
     ``expected_len_dist`` is {'mean': …, 'max': …} (total tokens per request,
@@ -721,7 +900,10 @@ def plan_serve(cfg, *, hbm_budget_bytes: int, expected_batch: int,
     e.g. from ``serve.sparse.sparsify_mlp_params``) feeds the MLP roofline.
     The keyword overrides pin individual decisions (recorded as such); by
     default every decision comes from the ``core.dataflow`` rule it
-    centralizes.
+    centralizes. ``mesh`` (``"tp=2,ep=4"``, a dict, or a ``(tp, ep)``
+    pair) runs the mesh resolution stage: tensor-/expert-parallel degrees
+    with one ``hmmesh.Mode`` Decision per data type and a per-device pool
+    Decision (ISSUE 10).
     """
     from repro.serve import kvcache
 
@@ -748,7 +930,7 @@ def plan_serve(cfg, *, hbm_budget_bytes: int, expected_batch: int,
         cache_len, mean_len=mean_len, page_size=ps, num_pages=num_pages,
         attn_path=attn_path, share_prefix=share_prefix, kv_quant=kv_quant,
         sync_every=sync_every, sparsity_stats=sparsity_stats,
-        drain_only=False, spec_k=spec_k,
+        drain_only=False, spec_k=spec_k, mesh=mesh,
         capacity_numbers={
             "hbm_budget_bytes": int(hbm_budget_bytes),
             "expected_batch": int(expected_batch),
@@ -785,7 +967,82 @@ def replan_from_lengths(cfg, base_plan: ServePlan, lengths,
         kv_quant=base_plan.kv_quant,
         sync_every=base_plan.sync_every,
         spec_k=base_plan.spec_k,    # pinned: a hot-swap never flips dispatch
+        mesh={"tp": base_plan.tp, "ep": base_plan.ep}
+        if base_plan.sharded else None,   # pinned: replicas never re-mesh
         arch=arch or base_plan.arch)
+
+
+def _alpha_from_acceptance(rate: float, k: int) -> float:
+    """Invert the geometric accept-prefix model for the per-candidate
+    acceptance ``alpha``: the measured rate is emitted/drafted per round,
+    ``E[n]/k = (1 - alpha^k) / ((1 - alpha) * k)``, strictly increasing in
+    alpha on (0, 1) — bisection is exact enough for the k ladder."""
+    k = max(int(k), 1)
+    rate = min(max(float(rate), 0.0), 1.0)
+    lo, hi = 0.0, 0.999
+    for _ in range(60):
+        mid = (lo + hi) / 2
+        if (1 - mid ** k) / ((1 - mid) * k) < rate:
+            lo = mid
+        else:
+            hi = mid
+    return (lo + hi) / 2
+
+
+def replan_spec_k(cfg, base_plan: ServePlan, *, drafted_tokens: int,
+                  accepted_tokens: int, min_samples: int = 64) -> ServePlan:
+    """Acceptance-adaptive speculative depth (ISSUE 10 satellite).
+
+    Re-run the plan's own geometric-gain model with the *measured* draft
+    acceptance (``spec_accepted_tokens / spec_drafted_tokens`` from
+    telemetry) substituted for the assumed :data:`SPEC_ALPHA`, and pick the
+    gain-maximizing k — stepping k down (or off, below
+    :data:`SPEC_MIN_GAIN`) when the bigram draft hits less often than
+    modeled. Everything else in the plan is pinned, so the swap is safe at
+    any drain boundary; returns ``base_plan`` unchanged when speculation is
+    off, the sample is too small, or the measured rate confirms the
+    current k.
+    """
+    from repro.serve import kvcache
+
+    if base_plan.spec_k < 2 or drafted_tokens < min_samples:
+        return base_plan
+    rate = accepted_tokens / max(drafted_tokens, 1)
+    alpha = _alpha_from_acceptance(rate, base_plan.spec_k)
+    w_bytes = cfg.param_count(active_only=True) * 2
+    c_bytes = kvcache.cache_bytes(cfg, max(base_plan.rows, 1),
+                                  base_plan.cache_len)
+    cand = {}
+    for kk in SPEC_K_CANDIDATES:
+        exp_tokens = (1 - alpha ** kk) / max(1 - alpha, 1e-9)
+        cand[kk] = exp_tokens * (w_bytes + c_bytes) \
+            / (w_bytes + kk * c_bytes)
+    best = max(cand, key=cand.get)
+    new_k = best if cand[best] >= SPEC_MIN_GAIN else 0
+    if new_k == base_plan.spec_k:
+        return base_plan
+    spec_n = {
+        "alpha_assumed": SPEC_ALPHA, "alpha_measured": round(alpha, 4),
+        "acceptance_rate_measured": round(rate, 4),
+        "drafted_tokens": int(drafted_tokens),
+        "accepted_tokens": int(accepted_tokens),
+        "previous_k": base_plan.spec_k,
+        "est_speedup": cand[best],
+        "candidates": {str(kk): v for kk, v in cand.items()},
+    }
+    why = (f"measured acceptance {rate:.2f} over {drafted_tokens} drafted "
+           f"tokens inverts to alpha={alpha:.2f} (planned {SPEC_ALPHA}): "
+           + (f"the gain model now peaks at k={new_k} "
+              f"({cand[best]:.2f}x)" if new_k else
+              f"best modeled gain {cand[best]:.2f}x < {SPEC_MIN_GAIN}x — "
+              "drafts miss too often to pay for the k-wide verify; "
+              "speculation turns off")
+           + f" — re-planned from k={base_plan.spec_k} at a drain boundary")
+    decisions = tuple(
+        d if d.name != "spec" else Decision(
+            "spec", f"k={new_k}" if new_k else "off", "HBM", why, spec_n)
+        for d in base_plan.decisions)
+    return dataclasses.replace(base_plan, spec_k=new_k, decisions=decisions)
 
 
 # ------------------------------------------------------------- legacy shims
@@ -832,6 +1089,23 @@ def snapshot_plan(arch: str) -> ServePlan:
                       expected_batch=SNAPSHOT_BATCH,
                       expected_len_dist=dict(SNAPSHOT_LEN_DIST),
                       sparsity_stats=dict(SNAPSHOT_SPARSITY), arch=arch)
+
+
+def snapshot_sharded_plan(arch: str, mesh: str) -> ServePlan:
+    """The canonical *sharded* plan for a seed config at one mesh shape —
+    same fixed snapshot inputs as :func:`snapshot_plan` plus the mesh
+    resolution stage. scripts/golden_plans.json records these under
+    ``"__sharded__"`` as ``{arch: {mesh: plan}}``; perf_guard's
+    ``sharded-plan-snapshot-stable`` gates drift. Environment-independent
+    by construction: the mesh stage never reads ``jax.device_count()``
+    (backing is a serve-time property, ``serve.shard.ServeMesh``)."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    return plan_serve(cfg, hbm_budget_bytes=SNAPSHOT_BUDGET_BYTES,
+                      expected_batch=SNAPSHOT_BATCH,
+                      expected_len_dist=dict(SNAPSHOT_LEN_DIST),
+                      sparsity_stats=dict(SNAPSHOT_SPARSITY), arch=arch,
+                      mesh=mesh)
 
 
 # ----------------------------------------------------------------------- CLI
@@ -882,6 +1156,10 @@ def main(argv=None) -> int:
                     help="max total tokens per request (the cache length)")
     ap.add_argument("--sparsity", type=float,
                     default=SNAPSHOT_SPARSITY["sparsity"])
+    ap.add_argument("--mesh", default=None,
+                    help="mesh shape, e.g. 'tp=2,ep=4' — adds the mesh "
+                         "resolution stage (NoC mode per data type, "
+                         "per-device pool)")
     ap.add_argument("--json", action="store_true",
                     help="print plan.to_json() instead of the report")
     args = ap.parse_args(argv)
@@ -895,7 +1173,7 @@ def main(argv=None) -> int:
         sparsity_stats={"sparsity": args.sparsity,
                         "packing_efficiency":
                             SNAPSHOT_SPARSITY["packing_efficiency"]},
-        arch=arch)
+        arch=arch, mesh=args.mesh)
     print(plan.to_json() if args.json else plan.explain())
     return 0
 

@@ -107,6 +107,21 @@ def _named(mesh, tree):
     return sh.tree_named(mesh, tree)
 
 
+def serve_partition_specs(serve_plan) -> Dict[str, Dict]:
+    """Placement for the *serving* path, read off a frozen ServePlan.
+
+    ISSUE 10 subsumes this module's per-cell planner consultation for
+    serving: ``core.plan.plan_serve``'s mesh resolution stage freezes one
+    ``hmmesh.Mode`` per data type (weights / KV pages / activations /
+    experts) into the plan itself, and ``serve.shard.partition_specs``
+    reads them back in the same (mode, PartitionSpec) vocabulary the
+    autoshard hints use here. Launch tooling that reports the serving
+    placement (dryrun cost sheets) asks the plan — it never re-runs
+    ``planner.plan_model`` and risks disagreeing with what serving does."""
+    from repro.serve import shard
+    return shard.partition_specs(serve_plan)
+
+
 def _build_train(cfg, shape, mesh, plan, mesh_axes, remat_policy,
                  microbatches) -> CellBuild:
     opt_cfg = opt_lib.OptimizerConfig()

@@ -372,8 +372,13 @@ def _attn_decode(p, x, kind, cache_entry, pos, cfg, block_table=None):
         positions = _positions_2d(pos, B)
         q = layers.rope(q, positions, theta)
         k = layers.rope(k, positions, theta)
+    # mesh resolution (ISSUE 10): tp > 1 runs attention per local KV-head
+    # shard (the shard-explicit single-jit program; bit-identical to tp=1
+    # by per-head independence — see sharding.tensor_parallel)
+    from repro.core import plan as _plan
+    tp = getattr(_plan.active_plan(), "tp", 1) or 1
     if is_paged_entry(cache_entry):
-        from repro.kernels import ops as _ops   # deferred: keep import light
+        from repro.sharding import tensor_parallel as _tpar
         assert block_table is not None, "paged cache entry needs a block table"
         pos = jnp.asarray(pos)
         posv = jnp.broadcast_to(pos, (B,)).astype(jnp.int32)
@@ -383,9 +388,9 @@ def _attn_decode(p, x, kind, cache_entry, pos, cfg, block_table=None):
         if is_quantized_entry(new_entry):
             scales = dict(k_scale=new_entry["pk_scale"],
                           v_scale=new_entry["pv_scale"])
-        ctx = _ops.paged_attention(q, new_entry["pk"], new_entry["pv"],
-                                   block_table, posv + 1,
-                                   softcap=cfg.attn_logit_softcap, **scales)
+        ctx = _tpar.sharded_paged_attention(
+            q, new_entry["pk"], new_entry["pv"], block_table, posv + 1,
+            tp, softcap=cfg.attn_logit_softcap, **scales)
         return (layers.attn_out(p, ctx.astype(layers.COMPUTE_DTYPE)),
                 new_entry)
     cap = cache_entry["k"].shape[1]
@@ -404,8 +409,13 @@ def _attn_decode(p, x, kind, cache_entry, pos, cfg, block_table=None):
         k_cache = jnp.where(sel, k, cache_entry["k"])
         v_cache = jnp.where(sel, v, cache_entry["v"])
     mask = _valid_mask(cfg, kind, cap, pos)
-    ctx = layers.decode_attention(q, k_cache, v_cache,
-                                  jnp.broadcast_to(mask, (B, cap)), cfg)
+    if tp > 1:
+        from repro.sharding import tensor_parallel as _tpar
+        ctx = _tpar.sharded_decode_attention(
+            q, k_cache, v_cache, jnp.broadcast_to(mask, (B, cap)), cfg, tp)
+    else:
+        ctx = layers.decode_attention(q, k_cache, v_cache,
+                                      jnp.broadcast_to(mask, (B, cap)), cfg)
     return layers.attn_out(p, ctx), {"k": k_cache, "v": v_cache}
 
 

@@ -98,13 +98,26 @@ def moe_layer_decode(params, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
         axis=2)                                        # (B,S,E)
     act = jax.nn.silu if cfg.mlp_act == "silu" else \
         (lambda t: jax.nn.gelu(t, approximate=True))
-    g = jnp.einsum("bsd,edf->ebsf", x, cast_compute(params["wg"]),
-                   preferred_element_type=ACCUM_DTYPE)
-    u = jnp.einsum("bsd,edf->ebsf", x, cast_compute(params["wu"]),
-                   preferred_element_type=ACCUM_DTYPE)
-    h = (act(g) * u).astype(COMPUTE_DTYPE)
-    out = jnp.einsum("ebsf,efd->ebsd", h, cast_compute(params["wd"]),
-                     preferred_element_type=ACCUM_DTYPE)
+    # mesh resolution (ISSUE 10): ep > 1 computes the expert einsums per
+    # local E/ep slice — the weights a real EP device holds — and gathers
+    # along the (batch) expert axis; the gate-weighted combine below runs
+    # on the full-E tensor unchanged, so the result is bit-identical
+    from repro.core import plan as _plan
+    ep = getattr(_plan.active_plan(), "ep", 1) or 1
+    if ep > 1 and E % ep == 0:
+        from repro.sharding import tensor_parallel as _tpar
+        out = _tpar.sharded_expert_mlp(
+            x, params["wg"], params["wu"], params["wd"], act=act,
+            cast=cast_compute, ep=ep, accum_dtype=ACCUM_DTYPE,
+            compute_dtype=COMPUTE_DTYPE)
+    else:
+        g = jnp.einsum("bsd,edf->ebsf", x, cast_compute(params["wg"]),
+                       preferred_element_type=ACCUM_DTYPE)
+        u = jnp.einsum("bsd,edf->ebsf", x, cast_compute(params["wu"]),
+                       preferred_element_type=ACCUM_DTYPE)
+        h = (act(g) * u).astype(COMPUTE_DTYPE)
+        out = jnp.einsum("ebsf,efd->ebsd", h, cast_compute(params["wd"]),
+                         preferred_element_type=ACCUM_DTYPE)
     y = jnp.einsum("ebsd,bse->bsd", out,
                    gates_full).astype(COMPUTE_DTYPE)
     if cfg.shared_expert:

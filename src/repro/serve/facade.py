@@ -29,6 +29,7 @@ from __future__ import annotations
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 from repro.core import eyexam, plan as plan_lib
+from repro.serve import shard as shard_lib
 from repro.serve.engine import DecodeEngine, Request
 from repro.serve.guard import GuardConfig
 from repro.serve.replica import ReplicaSet
@@ -113,6 +114,23 @@ class LLM:
     def explain(self) -> str:
         """The plan's per-decision Eyexam rationale."""
         return self.plan.explain()
+
+    @property
+    def mesh(self) -> shard_lib.ServeMesh:
+        """The plan's resolved serving mesh (ISSUE 10) — ``tp=1 ep=1`` for
+        unsharded plans. Sharded plans serve through the same two entry
+        points: the models read ``tp``/``ep`` off the active plan, so both
+        ``generate`` and ``stream`` execute the shard-explicit program."""
+        return shard_lib.ServeMesh.from_plan(self.plan)
+
+    def sharding_report(self) -> Dict:
+        """Mesh + per-device pool stats for the most recent call: resolved
+        tp/ep, whether host devices back the mesh, single- vs per-device KV
+        pool bytes, and (after a sharded paged ``stream``) live per-shard
+        occupancy and the lockstep-divergence count."""
+        pool = getattr(self._scheduler, "pager", None) \
+            if self._scheduler is not None else None
+        return shard_lib.sharding_stats(self.cfg, self.plan, pool=pool)
 
     def _normalize(self, requests: Sequence[RequestLike], cls,
                    on_token: Optional[Callable] = None) -> List:

@@ -101,6 +101,19 @@ class PageAllocator:
             "page_keys": {p: list(k) for p, k in self._page_keys.items()},
         }
 
+    def fingerprint(self) -> Tuple:
+        """A compact hashable digest of the allocation state — free-list
+        head, per-page refcounts, and each live block table. Two allocators
+        with equal fingerprints resolve every (rid, page index) to the same
+        physical frame, which is exactly the lockstep invariant the
+        mesh-sharded pool (serve.shard.ShardedPagePool) audits per window:
+        comparing fingerprints is O(pages), comparing ``snapshot()`` dicts
+        (which include the prefix index) is the deep/forensic variant."""
+        return (tuple(self._free), tuple(self._refs),
+                tuple(sorted((rid, tuple(t))
+                             for rid, t in self._tables.items())),
+                tuple(sorted(self._lengths.items())))
+
     # ----------------------------------------------------------- mutation
     def _pop_free(self) -> int:
         page = self._free.pop()

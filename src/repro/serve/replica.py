@@ -470,7 +470,7 @@ class ReplicaSet:
             "failovers": 0, "failover_reasons": {},
             "migrated_requests": 0, "failed_migrations": 0,
             "scale_ups": 0, "scale_downs": 0, "replans": 0,
-            "rounds": 0, "clock_steps": 0.0,
+            "spec_replans": 0, "rounds": 0, "clock_steps": 0.0,
         }
         self._all = []
         self._next_slot = 0
@@ -597,6 +597,41 @@ class ReplicaSet:
                                 and rep.scheduler.plan != new_plan:
                             rep.swap_plan(
                                 new_plan,
+                                self._rng_for(root, rep.slot,
+                                              rep.generation + 1),
+                                chaos=chaos.request_chaos.get(rep.slot),
+                                at_clock=G)
+                            self._done_seen[rep.slot] = 0
+
+            # ---- 4b. acceptance-adaptive speculative k (ISSUE 10) --------
+            # the plan's spec Decision assumed a geometric acceptance rate;
+            # the verifier measures the real one (spec_drafted/accepted
+            # counters). At drain boundaries, invert the measured rate back
+            # to per-token acceptance and re-run the same gain model — a
+            # draft that misses steps k down (or off), one that hits grows
+            # it. Same hot-swap discipline as the length replan above.
+            if self.replan is not None and self.plan.spec_k >= 2:
+                drafted = int(tel.metrics.counters.get(
+                    "spec_drafted_tokens", 0))
+                accepted = int(tel.metrics.counters.get(
+                    "spec_accepted_tokens", 0))
+                spec_plan = plan_lib.replan_spec_k(
+                    self.cfg, self.plan, drafted_tokens=drafted,
+                    accepted_tokens=accepted)
+                if spec_plan != self.plan:
+                    self.plan = spec_plan   # spawns use it immediately
+                    st["spec_replans"] += 1
+                    tel.metrics.count("replans")
+                    tel.tracer.event(
+                        "spec_replan", G, cat="spec",
+                        spec_k=spec_plan.spec_k,
+                        measured_rate=round(accepted / max(drafted, 1), 3))
+                    for rep in live:
+                        if rep.last_status and rep.last_status["drained"] \
+                                and rep.queue_depth() == 0 \
+                                and rep.scheduler.plan != spec_plan:
+                            rep.swap_plan(
+                                spec_plan,
                                 self._rng_for(root, rep.slot,
                                               rep.generation + 1),
                                 chaos=chaos.request_chaos.get(rep.slot),

@@ -53,6 +53,7 @@ from repro.core import dataflow, plan as plan_lib
 from repro.models import decoding
 from repro.runtime.fault_tolerance import backoff_delay
 from repro.serve import chaos as chaos_mod, kvcache, paging
+from repro.serve import shard as shard_mod
 from repro.serve import guard as guard_mod
 from repro.serve import telemetry as telemetry_mod
 from repro.serve.engine import (build_tier_batch, make_decode_step,
@@ -184,7 +185,9 @@ class ContinuousBatchingScheduler:
         self.max_pages = plan.max_pages
         if self.paged:
             self.num_pages = plan.num_pages
-            self.pager = paging.PageAllocator(self.num_pages, self.page_size)
+            # mesh-sharded plans (ISSUE 10) get one allocator per tp device
+            # in lockstep over the same distributed address space
+            self.pager = shard_mod.make_pool(plan)
         else:
             self.num_pages = 0
             self.pager = None
@@ -604,7 +607,7 @@ class ContinuousBatchingScheduler:
             # fresh pool per run (like the SlotAllocator below): an aborted
             # previous run must not leak its block tables into this one;
             # self.pager stays inspectable after the run (kvcache.report)
-            self.pager = paging.PageAllocator(self.num_pages, self.page_size)
+            self.pager = shard_mod.make_pool(self.plan)
         for r in [r for r in pending if r.max_new <= 0]:
             pending.remove(r)
             r.done = True
@@ -1248,6 +1251,18 @@ class ContinuousBatchingScheduler:
                             if r.on_token is not None:
                                 r.on_token(r, tok)
             m.count("tokens_emitted", emitted)
+            if getattr(self.plan, "sharded", False):
+                # analytic collective traffic for this chunk (ISSUE 10):
+                # counted under the frozen collective_* keys so drift
+                # detection can compare measured all-gather bytes per token
+                # against the mesh decision's model
+                cc = shard_mod.chunk_collectives(self.plan, steps=T,
+                                                 tokens=emitted)
+                for key, val in cc.items():
+                    m.count(key, val)
+                if cc:
+                    tr.event("collective_chunk", clock, cat="collective",
+                             slot=slot, **cc)
             freed_rows: List[int] = []
             for row in list(active):
                 # mirror the device pos: baseline rows advance one per scan

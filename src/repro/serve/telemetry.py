@@ -60,8 +60,10 @@ SCHEMA = "repro.telemetry/v1"
 #             scale_up / scale_down / replan
 #   spec    — speculative decode rounds: spec_chunk (drafted/accepted per
 #             dispatch window)
+#   collective — mesh traffic (ISSUE 10): per-chunk all-gather accounting
+#             on sharded plans (serve.shard.chunk_collectives)
 CATEGORIES = ("request", "phase", "pool", "degrade", "chaos", "window",
-              "event", "spec")
+              "event", "spec", "collective")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -261,11 +263,18 @@ COUNTER_KEYS: Tuple[str, ...] = (
     # speculative decode (ISSUE 9): acceptance rate =
     # spec_accepted_tokens / spec_drafted_tokens
     "spec_rounds", "spec_drafted_tokens", "spec_accepted_tokens",
+    # mesh collectives (ISSUE 10): analytic all-gather accounting on
+    # sharded plans (serve.shard.chunk_collectives); zero on tp=ep=1
+    "collective_ops", "collective_allgather_bytes",
 )
 GAUGE_KEYS: Tuple[str, ...] = (
     "clock", "queue_pending", "queue_waiting", "active_rows",
     "pool_pressure", "pages_used", "pages_free", "shared_page_ratio",
     "resident_tokens",
+    # shard-tagged pool gauges (ISSUE 10): per-device occupancy spread and
+    # the lockstep-divergence count of the sharded page pool
+    "shard_pages_used_max", "shard_pages_used_min",
+    "shard_lockstep_divergence",
 )
 HISTOGRAM_KEYS: Tuple[str, ...] = (
     "admission_wait_steps", "ttft_steps", "e2e_latency_steps",
@@ -525,6 +534,9 @@ def detect_drift(plan, metrics: MetricsRegistry,
       measured width lands on the other side of the crossover.
     * ``prefill.pad_ratio`` — measured padded/real prefill tokens vs the
       tier ladder's worst-case bound (2.0 for pow2 tiers, 1.0 exact).
+    * ``mesh.allgather_bytes_per_token`` — measured collective bytes per
+      emitted token (``collective_allgather_bytes`` / ``tokens_emitted``)
+      vs the mesh decision's per-token model (sharded plans only).
     """
     decisions = {d.name: d for d in getattr(plan, "decisions", ())}
     findings: List[DriftFinding] = []
@@ -621,6 +633,18 @@ def detect_drift(plan, metrics: MetricsRegistry,
             "measured padded/real prefill tokens vs the tier ladder's "
             "worst-case pad bound",
             verdict=CONFIRMED if ratio > bound + 1e-9 else WITHIN)
+
+    # ---- mesh: measured collective bytes/token vs the per-token model ---
+    mesh = decisions.get("mesh")
+    if mesh is not None and c.get("tokens_emitted", 0) > 0 \
+            and mesh.numbers.get("allgather_bytes_per_token", 0) > 0:
+        add("mesh", "allgather_bytes_per_token",
+            mesh.numbers["allgather_bytes_per_token"],
+            c.get("collective_allgather_bytes", 0)
+            / max(c["tokens_emitted"], 1),
+            "measured collective all-gather bytes per emitted token vs the "
+            "mesh decision's model — divergence means the mesh moves more "
+            "than token-sized traffic per step")
 
     return DriftReport(clock=float(clock), windows=len(windows),
                        threshold=threshold, findings=tuple(findings))

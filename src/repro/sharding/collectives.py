@@ -20,6 +20,15 @@ except Exception:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
 
 
+def axis_size(axis_name: str) -> int:
+    """Version-tolerant ``jax.lax.axis_size`` (absent before jax 0.6): the
+    psum-of-one idiom is statically folded to the mesh axis size."""
+    try:
+        return jax.lax.axis_size(axis_name)
+    except AttributeError:
+        return jax.lax.psum(1, axis_name)
+
+
 def shard_map(f, **kw):
     """Version-tolerant shard_map (check_vma/check_rep kwarg renamed)."""
     kw.pop("check_vma", None)
@@ -37,7 +46,7 @@ def hierarchical_psum(x, pod_axis: str = "pod", inner_axis: str = "data"):
 
     Equivalent to ``jax.lax.psum(x, (pod_axis, inner_axis))`` but inter-pod
     traffic carries only 1/inner of the payload. Call inside shard_map."""
-    n_inner = jax.lax.axis_size(inner_axis)
+    n_inner = axis_size(inner_axis)
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % n_inner
     if pad:
@@ -74,7 +83,7 @@ def ring_allgather(x, axis_name: str):
     """All-gather via (n-1) collective-permutes — an explicit ring schedule
     whose hops XLA can overlap with compute. Call inside shard_map; gathers
     along a new leading dim ordered by source index."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
     chunks = [x]

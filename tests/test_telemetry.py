@@ -162,9 +162,18 @@ def test_metric_key_set_is_frozen():
     m = telemetry.MetricsRegistry()
     snap = m.snapshot()
     assert snap.key_set() == telemetry.METRIC_KEYS
-    assert len(telemetry.COUNTER_KEYS) == 29
-    assert len(telemetry.GAUGE_KEYS) == 9
+    assert len(telemetry.COUNTER_KEYS) == 31
+    assert len(telemetry.GAUGE_KEYS) == 12
     assert len(telemetry.HISTOGRAM_KEYS) == 5
+    # mesh-sharded serving (ISSUE 10): the shard/collective keys are part
+    # of the frozen schema — an undeclared shard metric must fail loudly
+    # (test_registry_rejects_undeclared_names), not silently appear
+    assert "collective_ops" in telemetry.COUNTER_KEYS
+    assert "collective_allgather_bytes" in telemetry.COUNTER_KEYS
+    assert "shard_pages_used_max" in telemetry.GAUGE_KEYS
+    assert "shard_pages_used_min" in telemetry.GAUGE_KEYS
+    assert "shard_lockstep_divergence" in telemetry.GAUGE_KEYS
+    assert "collective" in telemetry.CATEGORIES
     assert telemetry.TENANT_COUNTER_KEYS == ("ok_requests", "ok_tokens")
     assert telemetry.TENANT_HISTOGRAM_KEYS == ("admission_wait_steps",)
 
@@ -181,6 +190,11 @@ def test_registry_rejects_undeclared_names():
         m.tenant_count("t0", "made_up")
     with pytest.raises(KeyError, match="undeclared tenant histogram"):
         m.tenant_observe("t0", "made_up", 1.0)
+    # shard metrics are declared-or-die like everything else (ISSUE 10)
+    with pytest.raises(KeyError, match="undeclared counter"):
+        m.count("collective_psum_bytes")
+    with pytest.raises(KeyError, match="undeclared gauge"):
+        m.gauge("shard_pages_used_mean", 1.0)
 
 
 def test_registry_windows_and_snapshot():
